@@ -1,0 +1,29 @@
+"""Shared helpers: CSV emission in the required ``name,us_per_call,derived``
+format plus wall-clock micro-timing for jitted callables."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable
+
+import jax
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def header(title: str) -> None:
+    print(f"# --- {title} ---")
+
+
+def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time (µs) of a jitted callable on this host."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6

@@ -1,0 +1,47 @@
+"""Fig. 4: DRAM-PIM vs SRAM-PIM-stacking-DRAM across batch sizes.
+
+(B) Q/K/V projection: SRAM lane wins with batch (weight reuse);
+(C) SV (input-dependent matrix): SRAM lane loses (reload per step).
+Also prints the TPU lane-planner's decision for the same operators —
+the roofline-ridge rule reproducing the paper's crossover.
+"""
+from benchmarks.common import emit, header
+from repro.configs.paper_models import LLAMA2_7B
+from repro.core import planner
+from repro.pimsim import ops as O
+from repro.pimsim.params import DEFAULT
+
+
+def run():
+    header("fig04 substrate comparison (Llama2-7B QKV / SV)")
+    hw = DEFAULT
+    cfg = LLAMA2_7B
+    d, hd = cfg.d_model, cfg.hd
+    n_qkv = (cfg.n_heads + 2 * cfg.n_kv_heads) * hd // 8  # TP=8 slice
+    banks = hw.dram.banks
+    for batch in (1, 2, 4, 8, 16, 32, 64):
+        t_dram = O.dram_fc(hw, batch, d, n_qkv, banks).t
+        t_sram = O.sram_fc(hw, batch, d, n_qkv, banks).t
+        emit(f"fig04b_qkv_dram_b{batch}", t_dram * 1e6,
+             f"speedup_sram={t_dram / t_sram:.2f}")
+    # SV: the 'weight' is the V cache (reloaded every step, no reuse)
+    s_ctx = 4096
+    for batch in (1, 32):
+        # per step the matrix changes: SRAM must reload s_ctx x hd per head
+        t_sram_sv = O.sram_fc(hw, batch, s_ctx, hd * cfg.n_heads // 8, banks).t \
+            + batch * O.sram_fc(hw, 1, s_ctx, hd, banks).t  # reload penalty
+        t_dram_sv = O.dram_attention(hw, batch, cfg.n_heads // 8, s_ctx, hd,
+                                     banks).t
+        emit(f"fig04c_sv_dram_b{batch}", t_dram_sv * 1e6,
+             f"sram_ratio={t_sram_sv / t_dram_sv:.2f}_gt1_means_dram_wins")
+    # TPU lane planner on the same ops (DESIGN.md mapping)
+    from repro.configs.base import ShapeSpec
+    for b in (1, 64):
+        sh = ShapeSpec(f"decode_b{b}", 4096, b, "decode")
+        plans = planner.plan_model(cfg, sh)
+        qkv = next(p for p in plans if p.op.name == "attn_qkv")
+        sv = next(p for p in plans if p.op.name == "attn_sv")
+        emit(f"fig04_tpu_lane_qkv_b{b}", qkv.op.intensity,
+             f"lane={qkv.lane.value}")
+        emit(f"fig04_tpu_lane_sv_b{b}", sv.op.intensity,
+             f"lane={sv.lane.value}")

@@ -1,0 +1,15 @@
+"""Fig. 5C/D: non-linear share of transformer-block time vs context length
+(CENT-style centralized NLU), and the extra data movement it causes."""
+from benchmarks.common import emit, header
+from repro.configs.paper_models import LLAMA2_7B, GPT3_175B
+from repro.pimsim.system import simulate
+
+
+def run():
+    header("fig05 non-linear fraction vs sequence length (centralized NLU)")
+    for cfg in (LLAMA2_7B, GPT3_175B):
+        for s in (2048, 4096, 16384, 65536, 131072):
+            bd = simulate(cfg, batch=32, s_ctx=s, phase="decode", system="cent")
+            frac = bd.nonlinear.t / bd.total.t
+            emit(f"fig05_{cfg.name}_s{s}", bd.total.t * 1e6,
+                 f"nonlinear_frac={frac:.3f}")

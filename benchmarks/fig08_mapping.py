@@ -1,0 +1,33 @@
+"""Fig. 8: mapping strategies — (512,8) vs (256,16) SRAM organization and
+pure output-split vs input-split(+NoC reduction), Llama2-13B Q/K/V.
+
+Also prints the TPU translation: per-FC bytes moved for pure output-split
+vs the mixed Megatron mapping from core/mapping.py's cost model.
+"""
+from benchmarks.common import emit, header
+from repro.configs.paper_models import LLAMA2_13B
+from repro.core import mapping
+from repro.pimsim import ops as O
+from repro.pimsim.params import DEFAULT
+
+
+def run():
+    header("fig08 SRAM mapping: (512,8) vs (256,16); output- vs input-split")
+    hw = DEFAULT
+    cfg = LLAMA2_13B
+    d = cfg.d_model
+    banks = hw.dram.banks
+    n_bank = 10          # paper: 5120x10 per bank (TP over 16x32 banks)
+    for batch in (1, 8, 32, 64):
+        t_out = O.sram_fc(hw, batch, d, n_bank * banks, banks,
+                          in_dim=512, out_dim=8).t
+        t_bal = O.sram_fc(hw, batch, d // 2, n_bank * banks * 2, banks,
+                          in_dim=256, out_dim=16, input_split_groups=2).t
+        emit(f"fig08_qkv_512x8_b{batch}", t_out * 1e6,
+             f"speedup_256x16={t_out / t_bal:.2f}")
+    # TPU: bytes moved per device for a SwiGLU block under each mapping
+    for tokens in (256, 4096, 65536):
+        r = mapping.megatron_block_bytes(tokens, cfg.d_model, cfg.d_ff, tp=16)
+        emit(f"fig08_tpu_ffn_bytes_m{tokens}", r["mixed_input_split"] / 1e3,
+             f"pure_output_bytes={r['pure_output_split']:.0f}"
+             f"_speedup={r['speedup']:.2f}")

@@ -1,0 +1,17 @@
+"""Fig. 9: decoupled column decoder — DRAM read-out bandwidth x4 for the
+SRAM feed; paper reports 1.15-1.5x end-to-end on Llama2-13B."""
+from benchmarks.common import emit, header
+from repro.configs.paper_models import LLAMA2_13B
+from repro.pimsim.system import simulate
+
+
+def run():
+    header("fig09 decoupled column decoder (Llama2-13B)")
+    for phase, s in (("prefill", 512), ("decode", 4096)):
+        for batch in (8, 32, 64):
+            base = simulate(LLAMA2_13B, batch=batch, s_ctx=s, phase=phase,
+                            system="compair_base").total.t
+            opt = simulate(LLAMA2_13B, batch=batch, s_ctx=s, phase=phase,
+                           system="compair_opt").total.t
+            emit(f"fig09_{phase}_b{batch}", opt * 1e6,
+                 f"speedup_vs_base={base / opt:.3f}_paper_1.15-1.5")

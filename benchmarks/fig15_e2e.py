@@ -1,0 +1,27 @@
+"""Fig. 15: end-to-end GPT3-175B (batch=64, decode, 128K ctx): CENT vs
+CompAir vs AttAcc — latency/token, fleet throughput, energy/token.
+Paper: comparable throughput to AttAcc at 20.2% latency / 28.5% energy
+(4K ctx), 3.52x energy reduction."""
+from benchmarks.common import emit, header
+from repro.configs.paper_models import GPT3_175B
+from repro.pimsim.system import decode_throughput, simulate
+
+
+def run():
+    header("fig15 e2e GPT3-175B decode")
+    for s_ctx in (4096, 131072):
+        rows = {}
+        for system, dev in (("cent", 96), ("compair_opt", 96), ("attacc", 4)):
+            bd = simulate(GPT3_175B, batch=64, s_ctx=s_ctx, phase="decode",
+                          system=system, tp=8 if system != "attacc" else 4)
+            thr = decode_throughput(GPT3_175B, batch=64, s_ctx=s_ctx,
+                                    system=system, tp=8, devices=dev) \
+                if system != "attacc" else 64 / bd.total.t
+            rows[system] = (bd.total.t, thr, bd.total.e / 64)
+            emit(f"fig15_{system}_s{s_ctx}", bd.total.t * 1e6,
+                 f"tok_per_s={thr:.1f}_energy_per_tok_mj={bd.total.e / 64 * 1e3:.2f}")
+        lat_frac = rows["compair_opt"][0] / rows["attacc"][0]
+        en_frac = rows["compair_opt"][2] / rows["attacc"][2]
+        emit(f"fig15_vs_attacc_s{s_ctx}", rows["compair_opt"][0] * 1e6,
+             f"latency_frac={lat_frac:.3f}_energy_frac={en_frac:.3f}"
+             f"_paper_0.202/0.285_at4K")

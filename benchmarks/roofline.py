@@ -1,0 +1,76 @@
+"""§Roofline table from the dry-run artifacts (artifacts/dryrun/*.json).
+
+Per (arch x shape x mesh): the three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS / HLO_FLOPS utilization, bytes/device.  Also
+emits the markdown table EXPERIMENTS.md embeds.
+"""
+import glob
+import json
+import os
+
+from benchmarks.common import emit, header
+
+ART_DIR = os.environ.get(
+    "DRYRUN_DIR",
+    "artifacts/final" if os.path.isdir("artifacts/final") else "artifacts/dryrun")
+TAG = os.environ.get("DRYRUN_TAG",
+                     "opt" if "final" in ART_DIR else "")
+
+
+def load(tag: str = None):
+    tag = TAG if tag is None else tag
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("tag", "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def dominant(t):
+    return max(("compute_s", "memory_s", "collective_s"), key=lambda k: t[k])
+
+
+def run():
+    header("roofline terms per (arch x shape x mesh) from dry-run")
+    recs = load()
+    if not recs:
+        emit("roofline_missing", 0.0, f"no artifacts under {ART_DIR}")
+        return
+    for r in recs:
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        if not r.get("runnable", False):
+            emit(name, 0.0, "skipped_" + r.get("skip_reason", "")[:40].replace(",", ";"))
+            continue
+        t = r["roofline"]
+        dom = dominant(t)
+        util = r["model_flops"] / max(t["hlo_flops_global"], 1.0)
+        emit(name, t[dom] * 1e6,
+             f"dom={dom}_C={t['compute_s']:.2e}_M={t['memory_s']:.2e}"
+             f"_X={t['collective_s']:.2e}_modelflops_ratio={util:.2f}")
+
+
+def markdown_table(tag: str = None) -> str:
+    rows = ["| arch | shape | mesh | compute s | memory s | collective s | "
+            "dominant | MODEL/HLO flops | temp GiB/dev |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in load(tag):
+        if not r.get("runnable", False):
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — "
+                        f"| *skipped* | — | — |")
+            continue
+        t = r["roofline"]
+        util = r["model_flops"] / max(t["hlo_flops_global"], 1.0)
+        temp = r["bytes_per_device"]["temp"] / 2 ** 30
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {t['compute_s']:.2e} | {t['memory_s']:.2e} "
+            f"| {t['collective_s']:.2e} | {dominant(t).split('_')[0]} "
+            f"| {util:.2f} | {temp:.1f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,45 @@
+"""Benchmark suite: one module per paper figure/table + the roofline
+harness.  Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig16,roofline]
+"""
+import argparse
+import sys
+import traceback
+
+from benchmarks import (fig04_substrate, fig05_nonlinear, fig08_mapping,
+                        fig09_coldecoder, fig15_e2e, fig16_decode,
+                        fig17_prefill, fig18_tp, fig19_longctx, fig21_area,
+                        fig22_curry, fig23_pathgen, fig24_gqa, roofline)
+
+MODULES = {
+    "fig04": fig04_substrate, "fig05": fig05_nonlinear,
+    "fig08": fig08_mapping, "fig09": fig09_coldecoder,
+    "fig15": fig15_e2e, "fig16": fig16_decode, "fig17": fig17_prefill,
+    "fig18": fig18_tp, "fig19": fig19_longctx, "fig21": fig21_area,
+    "fig22": fig22_curry, "fig23": fig23_pathgen, "fig24": fig24_gqa,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module keys (default: all)")
+    args = ap.parse_args()
+    keys = args.only.split(",") if args.only else list(MODULES)
+    print("name,us_per_call,derived")
+    failed = []
+    for k in keys:
+        try:
+            MODULES[k].run()
+        except Exception:  # noqa: BLE001
+            failed.append(k)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED modules: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Mapping/lane explorer: the paper's §2.2 + §3.3 analysis applied to any
+assigned architecture — per-operator lane assignment (roofline ridge),
+output- vs input-split decisions, and the pimsim substrate comparison.
+
+  PYTHONPATH=src python examples/mapping_explorer.py --arch qwen2-72b \
+      --shape decode_32k
+"""
+import argparse
+
+from repro.configs import ARCHS, SHAPES_BY_NAME, get_config
+from repro.core import mapping, planner
+from repro.pimsim import ops as O
+from repro.pimsim.params import DEFAULT
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-72b", choices=list(ARCHS))
+    ap.add_argument("--shape", default="train_4k",
+                    choices=list(SHAPES_BY_NAME))
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    shape = SHAPES_BY_NAME[args.shape]
+
+    print(f"=== {cfg.name} x {shape.name} ===")
+    print(f"params: {cfg.param_count():,} "
+          f"(active: {cfg.param_count(active_only=True):,})\n")
+
+    print("-- TPU lane plan (SRAM-PIM lane = mxu / DRAM-PIM lane = vpu) --")
+    print(planner.lane_table(cfg, shape))
+
+    print("\n-- FC split decisions (paper §3.3 cost model, TP=16) --")
+    tokens = shape.global_batch * (1 if shape.is_decode else shape.seq_len)
+    for op in planner.model_op_profiles(cfg, shape):
+        if not op.weight_static or op.count > cfg.n_layers:
+            continue
+        c = mapping.choose_fc_split(op.m, op.k, op.n, tp=16,
+                                    input_sharded=True)
+        print(f"{op.name:16s} [{op.m}x{op.k}x{op.n}] -> {c.split}-split "
+              f"({c.collective}, {c.comm_bytes / 2**20:.1f} MiB vs "
+              f"{c.alt_bytes / 2**20:.1f} MiB)")
+
+    print("\n-- PIM substrate comparison for one FC (pimsim) --")
+    hw = DEFAULT
+    d = cfg.d_model
+    n = 2 * cfg.d_ff // 8
+    for m in (1, 16, 256, 4096):
+        td = O.dram_fc(hw, m, d, n, hw.dram.banks).t
+        ts = O.sram_fc(hw, m, d, n, hw.dram.banks).t
+        to = O.sram_fc(hw, m, d, n, hw.dram.banks, decoupled=True).t
+        lane = "SRAM" if ts < td else "DRAM"
+        print(f"m={m:5d}: dram={td * 1e6:9.2f}us sram={ts * 1e6:9.2f}us "
+              f"sram_decoupled={to * 1e6:9.2f}us -> {lane}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: train a tiny CompAir-framework LM for a few dozen steps on
+CPU, checkpoint it, and resume — the 60-second tour of the public API.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, reduced
+from repro.data import SyntheticLM
+from repro.train import init_state, make_train_step
+
+
+def main():
+    cfg = reduced(get_config("granite-3-2b"))
+    print(f"arch={cfg.name} family={cfg.family} params≈{cfg.param_count():,}")
+
+    state = init_state(cfg, jax.random.key(0))
+    train_step = jax.jit(make_train_step(cfg, base_lr=5e-3, warmup=5,
+                                         total_steps=200))
+    ds = SyntheticLM(cfg.vocab_size, seq_len=32, global_batch=8, seed=0)
+
+    ckpt_dir = tempfile.mkdtemp(prefix="compair_quickstart_")
+    mgr = CheckpointManager(ckpt_dir, keep=2)
+
+    for step in range(40):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch(step).items()}
+        state, metrics = train_step(state, batch)
+        if step % 10 == 0:
+            print(f"step {step:3d}  loss={float(metrics['loss']):.4f}  "
+                  f"lr={float(metrics['lr']):.2e}  "
+                  f"gnorm={float(metrics['grad_norm']):.2f}")
+    mgr.save(39, state)
+    mgr.wait()
+
+    # resume from checkpoint and keep training
+    step_no, state = mgr.restore(jax.eval_shape(
+        lambda: init_state(cfg, jax.random.key(0))))
+    print(f"resumed from step {step_no}")
+    for step in range(step_no + 1, step_no + 6):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch(step).items()}
+        state, metrics = train_step(state, batch)
+    print(f"final loss={float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+# The paper's primary contribution mapped to TPU/JAX:
+#   planner — hybrid substrate (lane) selection via the roofline ridge
+#   mapping — §3.3 output-/input-split sharding cost model -> PartitionSpecs
+#   noc     — in-transit collective computation (tree reduce/bcast, fused
+#             tree softmax) on ICI via shard_map + ppermute
+#   curry   — Curry-ALU iterated non-linears (Taylor exp, Newton rsqrt)
+#   isa     — hierarchical ISA: RowProgram -> PacketPlan with path-generation
+#             fusion, plus the bank-major interpreter
+from repro.core import curry, isa, mapping, noc, planner  # noqa: F401

@@ -1,0 +1,99 @@
+"""Curry ALU: single-operand iterated arithmetic (paper §4.2, Fig. 11/13).
+
+The hardware unit applies a unary op with a register-held right operand
+(ArgReg), optionally updating ArgReg each iteration (IterOp/IterArg).
+Non-linear functions are built as *chains* of these ops — exp by the
+iterated Taylor/Horner scheme of Fig. 13, rsqrt by Newton iteration.
+
+Here the same chains exist as jnp expressions (elementwise, fusable), in
+two roles: (i) fidelity mode — numerics that match what the hardware
+computes, benchmarked against native ops; (ii) the execution payload of
+``core.isa`` packets (each chain step is one NoC_Scalar row instruction).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Scalar = Union[float, jax.Array, str]
+
+# the four Curry-ALU binary ops of Table 1 (NoC_Scalar OP field)
+OPS = {
+    "+=": lambda x, c: x + c,
+    "-=": lambda x, c: x - c,
+    "*=": lambda x, c: x * c,
+    "/=": lambda x, c: x / c,
+    "max=": lambda x, c: jnp.maximum(x, c),
+}
+
+
+@dataclass(frozen=True)
+class ChainStep:
+    op: str            # one of OPS
+    arg: Scalar        # ArgReg value (float const or buffer name)
+
+
+@dataclass
+class Chain:
+    """A fused sequence of Curry-ALU ops — one NoC packet path after
+    path generation (paper §5.2, Fig. 23)."""
+    steps: List[ChainStep] = field(default_factory=list)
+
+    def apply(self, x, env=None):
+        env = env or {}
+        for s in self.steps:
+            arg = env[s.arg] if isinstance(s.arg, str) else s.arg
+            x = OPS[s.op](x, arg)
+        return x
+
+    def __len__(self):
+        return len(self.steps)
+
+
+def curry_exp(x, rounds: int = 6):
+    """exp(x) via the Fig. 13 iteration (range-reduced Taylor + squaring)."""
+    xr = x.astype(jnp.float32) * (1.0 / 16.0)
+    p = jnp.ones_like(xr)
+    for i in range(rounds, 0, -1):
+        p = p * (xr / i) + 1.0
+    for _ in range(4):
+        p = p * p
+    return p
+
+
+def curry_rsqrt(x, rounds: int = 3):
+    """1/sqrt(x) by Newton iteration, seeded from a low-precision estimate
+    (the Curry-ALU refinement loop of §4.3.2)."""
+    xf = x.astype(jnp.float32)
+    y = jax.lax.rsqrt(xf.astype(jnp.bfloat16).astype(jnp.float32))
+    for _ in range(rounds):
+        y = y * (1.5 - 0.5 * xf * y * y)
+    return y
+
+
+def curry_sqrt(x, rounds: int = 3):
+    return x * curry_rsqrt(x, rounds)
+
+
+def curry_softmax(x, axis: int = -1, rounds: int = 8):
+    """Softmax whose exp is the Curry iteration — fidelity comparison
+    object for benchmarks/fig22."""
+    m = jax.lax.stop_gradient(x.max(axis=axis, keepdims=True))
+    e = curry_exp(x - m, rounds)
+    return e / e.sum(axis=axis, keepdims=True)
+
+
+def curry_silu(x, rounds: int = 8):
+    e = curry_exp(-jnp.abs(x.astype(jnp.float32)), rounds)
+    sig = jnp.where(x >= 0, 1.0 / (1.0 + e), e / (1.0 + e))
+    return x * sig
+
+
+def curry_rmsnorm(x, w, eps: float = 1e-5, rounds: int = 3):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * curry_rsqrt(var + eps, rounds) * w.astype(jnp.float32)
+            ).astype(x.dtype)

@@ -1,0 +1,346 @@
+"""Hierarchical ISA (paper §5): Row-Level programs -> Packet-Level plans.
+
+Row-Level (user-facing, SIMD across banks — Table 1):
+    NoC_Scalar   op in {+=,-=,*=,/=,max=}; one Curry-ALU application
+    NoC_Access   Rd/Wr of Curry-ALU ArgRegs
+    NoC_BCast    bank-granular broadcast from SrcBank
+    NoC_Reduce   bank-granular reduction to DstBank
+    NoC_Exchange T±/R± data exchange (the RoPE neighbour swap, Fig. 12)
+    SRAM_Write / SRAM_Compute   weight load / matrix multiply
+plus the DRAM-PIM-native ops the paper inherits from AiM [40]:
+    DRAM_EWMUL   element-wise multiply inside the bank
+    DRAM_MAC     row reduction through the bank's 16-input MAC
+
+Packet-Level (what routers execute — Table 2): packets carry a fused op
+*path* (<= 4 ops per loop, IterNum loops) plus tree hop schedules for
+Reduce/BCast.  ``lower()`` performs the paper's **path generation**
+(§5.2): consecutive NoC_Scalar ops in a producer->consumer chain
+(prev.DST == next.SRC) are fused into one packet, eliminating the
+per-op DRAM round trip ("Base" in Fig. 23).
+
+The interpreter executes plans on a bank-major memory model
+(buffers: name -> [banks, width]) and, under ``shard_map``, maps bank
+trees onto real mesh collectives via core.noc.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.curry import OPS, Chain, ChainStep
+
+Num = Union[int, float, str, None]
+
+ROW_KINDS = ("NoC_Scalar", "NoC_Access", "NoC_BCast", "NoC_Reduce",
+             "NoC_Exchange", "SRAM_Write", "SRAM_Compute",
+             "DRAM_EWMUL", "DRAM_MAC")
+
+
+@dataclass(frozen=True)
+class RowInstr:
+    """One Table-1 row-level instruction (SIMD across all masked banks)."""
+    kind: str
+    op: Num         # OP field
+    src: str        # SRC buffer
+    dst: str        # DST buffer
+    num1: Num = None  # Mask / Length / Offset
+    num2: Num = None  # Config / Const / Src-/DstBank / Group
+
+    def __post_init__(self):
+        assert self.kind in ROW_KINDS, self.kind
+
+
+# ----------------------------- packet level --------------------------------
+
+MAX_PATH = 4  # Table 2: Path[0..3]
+
+
+@dataclass
+class ScalarPacket:
+    """Fused Curry-ALU path: ops applied in sequence, one DRAM read at
+    entry + one write at exit (vs. a round trip *per op* unfused)."""
+    src: str
+    dst: str
+    steps: List[ChainStep]
+
+    @property
+    def iter_num(self) -> int:  # Table 2 IterNum
+        return max(1, math.ceil(len(self.steps) / MAX_PATH))
+
+
+@dataclass
+class TreePacket:
+    kind: str       # 'reduce' | 'bcast'
+    op: Num
+    src: str
+    dst: str
+    root: int
+
+    def hops(self, n_banks: int) -> int:
+        return int(math.log2(max(n_banks, 2)))
+
+
+@dataclass
+class ExchangePacket:
+    mode: str       # 'T+'|'T-'|'R+'|'R-'
+    src: str
+    dst: str
+    offset: int
+    group: int
+
+
+@dataclass
+class SramPacket:
+    kind: str       # 'write' | 'compute'
+    src: str
+    dst: Optional[str]
+
+
+@dataclass
+class DramPacket:
+    kind: str       # 'ewmul' | 'mac'
+    op: Num
+    src: str
+    src2: Optional[str]
+    dst: str
+
+
+Packet = Union[ScalarPacket, TreePacket, ExchangePacket, SramPacket, DramPacket]
+
+
+@dataclass
+class PacketPlan:
+    packets: List[Packet] = field(default_factory=list)
+
+    # --- cost surface for benchmarks/fig23 + pimsim -----------------------
+    def n_packets(self) -> int:
+        return len(self.packets)
+
+    def dram_roundtrips(self) -> int:
+        """DRAM read+write round trips (the quantity path generation cuts)."""
+        n = 0
+        for p in self.packets:
+            if isinstance(p, (ScalarPacket, ExchangePacket, DramPacket)):
+                n += 1
+            elif isinstance(p, TreePacket):
+                n += 1
+            elif isinstance(p, SramPacket):
+                n += 1
+        return n
+
+    def alu_ops(self) -> int:
+        return sum(len(p.steps) for p in self.packets
+                   if isinstance(p, ScalarPacket))
+
+
+# ----------------------------- lowering ------------------------------------
+
+def lower(program: Sequence[RowInstr], *, fuse: bool = True) -> PacketPlan:
+    """Row-level -> packet-level translation with path generation.
+
+    With ``fuse=False`` every NoC_Scalar becomes its own packet (the
+    conservative write-back-to-DRAM semantics of the row-level ISA);
+    with ``fuse=True`` producer->consumer chains merge (Fig. 23).
+
+    Buffers referenced *by name* as a later instruction's ArgReg must be
+    materialized, so fusion breaks after any instruction whose DST is
+    consumed as an argument downstream (address-dependency analysis —
+    the paper's "analyzing address dependencies across row-level
+    instructions")."""
+    consumed_as_arg = {ins.num2 for ins in program
+                       if ins.kind == "NoC_Scalar" and isinstance(ins.num2, str)
+                       and ins.num2 != "self"}
+    plan = PacketPlan()
+    pending: Optional[ScalarPacket] = None
+
+    def flush():
+        nonlocal pending
+        if pending is not None:
+            plan.packets.append(pending)
+            pending = None
+
+    for ins in program:
+        if ins.kind == "NoC_Scalar":
+            step = ChainStep(ins.op, ins.num2)
+            if fuse and pending is not None and pending.dst == ins.src:
+                pending.steps.append(step)
+                pending.dst = ins.dst
+            else:
+                flush()
+                pending = ScalarPacket(src=ins.src, dst=ins.dst, steps=[step])
+            if not fuse or ins.dst in consumed_as_arg:
+                flush()
+            continue
+        flush()
+        if ins.kind == "NoC_Reduce":
+            plan.packets.append(TreePacket("reduce", ins.op, ins.src, ins.dst,
+                                           int(ins.num2 or 0)))
+        elif ins.kind == "NoC_BCast":
+            plan.packets.append(TreePacket("bcast", None, ins.src, ins.dst,
+                                           int(ins.num2 or 0)))
+        elif ins.kind == "NoC_Exchange":
+            plan.packets.append(ExchangePacket(str(ins.op), ins.src, ins.dst,
+                                               int(ins.num1), int(ins.num2)))
+        elif ins.kind == "SRAM_Write":
+            plan.packets.append(SramPacket("write", ins.src, None))
+        elif ins.kind == "SRAM_Compute":
+            plan.packets.append(SramPacket("compute", ins.src, ins.dst))
+        elif ins.kind == "DRAM_EWMUL":
+            plan.packets.append(DramPacket("ewmul", None, ins.src,
+                                           str(ins.num2), ins.dst))
+        elif ins.kind == "DRAM_MAC":
+            plan.packets.append(DramPacket("mac", ins.op, ins.src, None, ins.dst))
+        elif ins.kind == "NoC_Access":
+            plan.packets.append(DramPacket("ewmul", None, ins.src, None, ins.dst))
+        else:
+            raise ValueError(ins.kind)
+    flush()
+    return plan
+
+
+# ----------------------------- execution -----------------------------------
+
+class Machine:
+    """Bank-major interpreter: buffers are [banks, width] arrays.
+
+    ``sram_weights`` holds the per-bank SRAM-PIM weight [banks, in, out]
+    after SRAM_Write."""
+
+    def __init__(self, buffers: Dict[str, jax.Array]):
+        self.buf = dict(buffers)
+        self.sram_weight: Optional[jax.Array] = None
+
+    def run(self, plan: PacketPlan) -> Dict[str, jax.Array]:
+        for p in plan.packets:
+            self._exec(p)
+        return self.buf
+
+    # -- packet semantics ---------------------------------------------------
+    def _env(self):
+        # scalar-per-bank args referenced by name resolve to buffers
+        return {k: v for k, v in self.buf.items()}
+
+    def _exec(self, p: Packet):
+        if isinstance(p, ScalarPacket):
+            env = self._env()
+            cur = self.buf[p.src]
+            for s in p.steps:
+                if s.arg == "self":
+                    cur = OPS[s.op](cur, cur)
+                    continue
+                arg = env[s.arg] if isinstance(s.arg, str) else s.arg
+                cur = OPS[s.op](cur, arg)
+            self.buf[p.dst] = cur
+        elif isinstance(p, TreePacket):
+            x = self.buf[p.src]
+            if p.kind == "reduce":
+                comb = OPS[p.op]
+                red = x
+                total = red.sum(axis=0, keepdims=True) if p.op == "+=" else None
+                if total is None:  # generic fold over banks
+                    acc = red[0]
+                    for i in range(1, red.shape[0]):
+                        acc = comb(acc, red[i])
+                    total = acc[None]
+                out = jnp.zeros_like(x)
+                self.buf[p.dst] = out.at[p.root].set(total[0])
+            else:  # bcast
+                row = self.buf[p.src][p.root]
+                self.buf[p.dst] = jnp.broadcast_to(row, self.buf[p.src].shape)
+        elif isinstance(p, ExchangePacket):
+            x = self.buf[p.src]
+            neg = p.mode.endswith("-")
+            if p.mode.startswith("R"):
+                banks, width = x.shape
+                g, off = p.group, p.offset
+                xg = x.reshape(banks, width // g, g)
+                idx = (jnp.arange(g) + off) % g
+                sw = xg[:, :, idx]
+                if neg:  # negate elements arriving at even (first) slots
+                    sign = jnp.where(jnp.arange(g) % 2 == 0, -1.0, 1.0)
+                    sw = sw * sign
+                self.buf[p.dst] = sw.reshape(banks, width)
+            else:  # T: across banks
+                banks = x.shape[0]
+                idx = (jnp.arange(banks) + p.offset) % p.group \
+                    + (jnp.arange(banks) // p.group) * p.group
+                sw = x[idx]
+                if neg:
+                    sign = jnp.where(jnp.arange(banks) % 2 == 0, -1.0, 1.0)
+                    sw = sw * sign[:, None]
+                self.buf[p.dst] = sw
+        elif isinstance(p, SramPacket):
+            if p.kind == "write":
+                self.sram_weight = self.buf[p.src]
+            else:
+                assert self.sram_weight is not None, "SRAM_Compute before Write"
+                x = self.buf[p.src]
+                self.buf[p.dst] = jnp.einsum("bi,bio->bo", x, self.sram_weight)
+        elif isinstance(p, DramPacket):
+            if p.kind == "ewmul":
+                a = self.buf[p.src]
+                b = self.buf[p.src2] if p.src2 else a
+                self.buf[p.dst] = a * b
+            else:  # mac: row reduction inside the bank
+                self.buf[p.dst] = self.buf[p.src].sum(axis=-1, keepdims=True)
+        else:
+            raise TypeError(p)
+
+
+# ----------------------------- canonical programs --------------------------
+
+def softmax_program(rounds: int = 6) -> List[RowInstr]:
+    """Paper Fig. 10: per-bank Curry exp + local MAC sum + NoC reduce tree
+    + broadcast + divide.  Operates on buffer 'x' [banks, width]."""
+    prog: List[RowInstr] = []
+    # exp via the Fig. 13 iteration, expressed as NoC_Scalar ops.  The
+    # range-reduced input 'xr' is materialized once (it is a downstream
+    # ArgReg), then the Horner chain runs in-place on 'e'.
+    prog.append(RowInstr("NoC_Scalar", "*=", "x", "xr", None, 1.0 / 16.0))
+    prog.append(RowInstr("NoC_Scalar", "/=", "xr", "e", None, float(rounds)))
+    prog.append(RowInstr("NoC_Scalar", "+=", "e", "e", None, 1.0))
+    for i in range(rounds - 1, 0, -1):
+        prog.append(RowInstr("NoC_Scalar", "*=", "e", "e", None, "xr"))
+        prog.append(RowInstr("NoC_Scalar", "/=", "e", "e", None, float(i)))
+        prog.append(RowInstr("NoC_Scalar", "+=", "e", "e", None, 1.0))
+    for _ in range(4):
+        prog.append(RowInstr("NoC_Scalar", "*=", "e", "e", None, "self"))
+    prog += [
+        RowInstr("DRAM_MAC", "+=", "e", "partial"),
+        RowInstr("NoC_Reduce", "+=", "partial", "total", None, 0),
+        RowInstr("NoC_BCast", None, "total", "total_b", None, 0),
+        RowInstr("NoC_Scalar", "/=", "e", "y", None, "total_b"),
+    ]
+    return prog
+
+
+def softmax_execute(x_banks: jax.Array, rounds: int = 6, fuse: bool = True
+                    ) -> Tuple[jax.Array, PacketPlan]:
+    """Run the softmax program on [banks, width] data; returns (y, plan)."""
+    plan = lower(softmax_program(rounds), fuse=fuse)
+    m = Machine({"x": x_banks})
+    buf = m.run(plan)
+    return buf["y"], plan
+
+
+def rope_program() -> List[RowInstr]:
+    """Paper Fig. 12: neighbour exchange in routers + EWMUL in DRAM-PIM.
+    Buffers: 'x' [banks, width], 'cos'/'sin' interleave-expanded tables."""
+    return [
+        RowInstr("NoC_Exchange", "R-", "x", "xr", 1, 2),
+        RowInstr("DRAM_EWMUL", None, "x", "xc", None, "cos"),
+        RowInstr("DRAM_EWMUL", None, "xr", "xs", None, "sin"),
+        RowInstr("NoC_Scalar", "+=", "xc", "y", None, "xs"),
+    ]
+
+
+def rope_execute(x: jax.Array, cos: jax.Array, sin: jax.Array
+                 ) -> Tuple[jax.Array, PacketPlan]:
+    plan = lower(rope_program())
+    m = Machine({"x": x, "cos": cos, "sin": sin})
+    buf = m.run(plan)
+    return buf["y"], plan

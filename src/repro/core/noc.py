@@ -1,0 +1,177 @@
+"""CompAir-NoC on ICI: in-transit collective computation.
+
+The paper embeds a Curry ALU in every NoC router so that reductions /
+broadcasts *compute while data moves* (Fig. 10: the Softmax sum rides the
+reduce tree; Fig. 14A: NoC_Reduce lowers to a binary tree over banks).
+
+TPU adaptation: the mesh axis plays the bank-grid role and
+``lax.ppermute`` hops play router-to-router flits.  Each hop is followed
+by the pending combine op on the receiving shard — compute-during-
+movement with log2(n) depth and every node busy, the same schedule as the
+paper's 2^N-1-node reduction tree.
+
+Everything here must run inside ``shard_map`` (it uses collectives with
+an ``axis_name``).  ``centralized_*`` are the paper's *baselines* (the
+CXL-controller NLU round trip) used for HLO/latency comparisons.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels import ref
+
+Combiner = Callable  # (tree, tree) -> tree
+
+
+def _add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def _max(a, b):
+    return jax.tree.map(jnp.maximum, a, b)
+
+
+COMBINERS = {"add": _add, "max": _max}
+
+
+def _axis_size(axis_name: str) -> int:
+    return lax.axis_size(axis_name)
+
+
+def _is_pow2(n: int) -> bool:
+    return n & (n - 1) == 0
+
+
+def butterfly_all_reduce(tree, axis_name: str, combiner="add"):
+    """Hypercube (butterfly) all-reduce: log2(n) ppermute hops, the combine
+    op applied at every hop — the NoC reduce+broadcast tree collapsed into
+    one recursive-doubling schedule.  Falls back to psum for non-pow2 axes
+    when the combiner is 'add'."""
+    comb = COMBINERS.get(combiner, combiner)
+    n = _axis_size(axis_name)
+    if not _is_pow2(n):
+        if combiner == "add":
+            return jax.tree.map(lambda a: lax.psum(a, axis_name), tree)
+        if combiner == "max":
+            return jax.tree.map(lambda a: lax.pmax(a, axis_name), tree)
+        raise ValueError("non-pow2 axis needs builtin combiner")
+    k = 1
+    while k < n:
+        perm = [(i, i ^ k) for i in range(n)]
+        other = jax.tree.map(lambda a: lax.ppermute(a, axis_name, perm), tree)
+        tree = comb(tree, other)
+        k *= 2
+    return tree
+
+
+def tree_reduce(tree, axis_name: str, combiner="add", root: int = 0):
+    """Binary-tree reduction to ``root`` (paper Fig. 14A).  log2(n) hops;
+    at step k, nodes at odd multiples of 2^k forward their partial to the
+    node 2^k below.  Only the root's value is meaningful afterwards."""
+    comb = COMBINERS.get(combiner, combiner)
+    n = _axis_size(axis_name)
+    assert _is_pow2(n), n
+    assert root == 0, "rotate indices for non-zero roots"
+    k = 1
+    while k < n:
+        # senders: idx % 2k == k -> receiver idx - k (non-participants get 0)
+        perm = [(i, i - k) for i in range(n) if i % (2 * k) == k]
+        moved = jax.tree.map(lambda a: lax.ppermute(a, axis_name, perm), tree)
+        idx = lax.axis_index(axis_name)
+        is_recv = (idx % (2 * k)) == 0
+        combined = comb(tree, moved)
+        tree = jax.tree.map(
+            lambda old, newv: jnp.where(is_recv, newv, old), tree, combined)
+        k *= 2
+    return tree
+
+
+def tree_broadcast(tree, axis_name: str, root: int = 0):
+    """Binary-tree broadcast from ``root`` — the reduce tree run backwards."""
+    n = _axis_size(axis_name)
+    assert _is_pow2(n) and root == 0
+    k = n // 2
+    while k >= 1:
+        perm = [(i, i + k) for i in range(n) if i % (2 * k) == 0]
+        moved = jax.tree.map(lambda a: lax.ppermute(a, axis_name, perm), tree)
+        idx = lax.axis_index(axis_name)
+        is_recv = (idx % (2 * k)) == k
+        tree = jax.tree.map(
+            lambda old, newv: jnp.where(is_recv, newv, old), tree, moved)
+        k //= 2
+    return tree
+
+
+def tree_all_reduce(tree, axis_name: str, combiner="add"):
+    """Reduce-to-root + broadcast — the literal paper schedule (two trees).
+    Prefer ``butterfly_all_reduce`` (same depth, no idle nodes)."""
+    return tree_broadcast(tree_reduce(tree, axis_name, combiner), axis_name)
+
+
+# ---------------------------------------------------------------------------
+# fused non-linear collectives (the Curry-ALU payloads)
+# ---------------------------------------------------------------------------
+
+def tree_softmax_combine(acc, m, l, axis_name: str):
+    """Combine per-shard attention/softmax partials (acc, m, l) across a
+    sequence-sharded axis — paper Fig. 10's in-transit Softmax: the exp
+    renormalization happens at every tree hop, never at a central NLU.
+
+    acc [..., D] fp32, m [...], l [...] -> normalized output [..., D]."""
+    def comb(a, b):
+        return ref.combine_partials(a, b)
+
+    acc, m, l = butterfly_all_reduce((acc, m, l), axis_name, comb)
+    return acc / jnp.maximum(l, 1e-30)[..., None]
+
+
+def distributed_softmax(x, axis_name: str):
+    """Softmax over a feature axis sharded across ``axis_name`` (e.g. the
+    vocab-sharded LM head).  max and sum statistics ride the butterfly."""
+    m_loc = x.max(axis=-1)
+    m = butterfly_all_reduce(m_loc, axis_name, "max")
+    e = jnp.exp(x - m[..., None])
+    s = butterfly_all_reduce(e.sum(axis=-1), axis_name, "add")
+    return e / s[..., None]
+
+
+def distributed_logsumexp(x, axis_name: str):
+    m = butterfly_all_reduce(x.max(axis=-1), axis_name, "max")
+    s = butterfly_all_reduce(
+        jnp.exp(x - m[..., None]).sum(axis=-1), axis_name, "add")
+    return m + jnp.log(s)
+
+
+# ---------------------------------------------------------------------------
+# centralized-NLU baselines (what CompAir-NoC replaces)
+# ---------------------------------------------------------------------------
+
+def centralized_softmax(x, axis_name: str):
+    """Baseline: gather the full vector to every shard (the NLU round
+    trip), compute softmax locally, keep the local slice.  This is the
+    all-gather + broadcast traffic pattern of Fig. 5A."""
+    n = _axis_size(axis_name)
+    full = lax.all_gather(x, axis_name, axis=-1, tiled=True)
+    y = jax.nn.softmax(full.astype(jnp.float32), axis=-1).astype(x.dtype)
+    idx = lax.axis_index(axis_name)
+    size = x.shape[-1]
+    return lax.dynamic_slice_in_dim(y, idx * size, size, axis=-1)
+
+
+def centralized_softmax_combine(acc, m, l, axis_name: str):
+    """Baseline for the decode-attention combine: all-gather all partials,
+    reduce locally."""
+    accs = lax.all_gather(acc, axis_name)            # [n, ..., D]
+    ms = lax.all_gather(m, axis_name)
+    ls = lax.all_gather(l, axis_name)
+    n = accs.shape[0]
+    part = (accs[0], ms[0], ls[0])
+    for i in range(1, n):
+        part = ref.combine_partials(part, (accs[i], ms[i], ls[i]))
+    acc, m, l = part
+    return acc / jnp.maximum(l, 1e-30)[..., None]

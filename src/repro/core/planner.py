@@ -1,0 +1,221 @@
+"""Hybrid execution planner — the paper's substrate-selection logic on TPU.
+
+CompAir routes each operator to the substrate whose constraint it does not
+violate: weight-reusing batched GeMM -> SRAM-PIM (§2.2, Fig. 4B), GeMV /
+input-dependent-matrix ops -> DRAM-PIM (Fig. 4C).  On TPU the two
+substrates become two *execution lanes*:
+
+    MXU lane  — weight-stationary tiled GEMM, 128-aligned blocks, weight
+                panel resident in VMEM across input tiles
+    VPU lane  — bandwidth-optimal streaming (decode attention, scans,
+                embedding lookups), latency = bytes / HBM bandwidth
+
+The classification rule is the roofline ridge: arithmetic intensity
+(FLOPs per HBM byte) above the ridge point -> MXU lane, below -> VPU
+lane.  For an [m,k]@[k,n] GEMM with m << k,n the intensity is ~m, so the
+ridge reproduces exactly the paper's batch-size crossover in Fig. 4B.
+
+The planner emits, per operator: lane, expected roofline term, and MXU
+block shapes (the TPU translation of the paper's §3.3 SRAM macro-shape
+DSE, Fig. 20).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from enum import Enum
+from typing import List, Optional
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+@dataclass(frozen=True)
+class HWParams:
+    """TPU v5e-class chip (assignment constants)."""
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12          # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9               # B/s
+    ici_bw: float = 50e9                # B/s per link
+    ici_links: int = 4
+    ici_hop_latency: float = 1e-6       # s, small-message per-hop
+    vmem_bytes: int = 16 * 2 ** 20
+    dtype_bytes: int = 2
+    mxu_align: int = 128
+
+    @property
+    def ridge(self) -> float:
+        """FLOPs per HBM byte at the compute/memory roofline knee."""
+        return self.peak_flops / self.hbm_bw
+
+
+TPU_V5E = HWParams()
+
+
+class Lane(str, Enum):
+    MXU = "mxu"    # SRAM-PIM analogue: weight-stationary matrix lane
+    VPU = "vpu"    # DRAM-PIM analogue: bandwidth/vector lane
+
+
+@dataclass(frozen=True)
+class OpProfile:
+    """One operator instance: [m, k] @ [k, n] with ``count`` repetitions.
+
+    ``weight_static``: the k×n operand is a parameter (reusable across
+    batches) rather than input-dependent (attention K/V, scan states)."""
+    name: str
+    m: int
+    k: int
+    n: int
+    count: int = 1
+    weight_static: bool = True
+    dtype_bytes: int = 2
+
+    @property
+    def flops(self) -> float:
+        return 2.0 * self.m * self.k * self.n * self.count
+
+    @property
+    def bytes_hbm(self) -> float:
+        mk = self.m * self.k
+        kn = self.k * self.n
+        mn = self.m * self.n
+        return float(self.dtype_bytes) * (mk + kn + mn) * self.count
+
+    @property
+    def intensity(self) -> float:
+        return self.flops / max(self.bytes_hbm, 1.0)
+
+
+@dataclass(frozen=True)
+class OpPlan:
+    op: OpProfile
+    lane: Lane
+    # MXU lane tiling (None on the VPU lane)
+    bm: Optional[int] = None
+    bn: Optional[int] = None
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+
+    @property
+    def bound(self) -> str:
+        return "compute" if self.compute_s >= self.memory_s else "memory"
+
+
+def classify(op: OpProfile, hw: HWParams = TPU_V5E) -> Lane:
+    return Lane.MXU if op.intensity >= hw.ridge else Lane.VPU
+
+
+def plan_blocks(op: OpProfile, hw: HWParams = TPU_V5E):
+    """Pick (bm, bn) so the weight panel k*bn and both tiles fit VMEM with
+    double buffering — the §3.3 'balanced shapes minimize bandwidth given
+    a MAC budget' argument (mean-value inequality), MXU-aligned."""
+    a = hw.mxu_align
+    budget = hw.vmem_bytes // 3        # panel + in-tile + acc
+    bn = a
+    while op.k * (bn * 2) * hw.dtype_bytes <= budget and bn * 2 <= max(op.n, a):
+        bn *= 2
+    bm = a
+    while (bm * 2) * op.k * hw.dtype_bytes <= budget and bm * 2 <= max(op.m, a):
+        bm *= 2
+    return bm, bn
+
+
+def plan_op(op: OpProfile, hw: HWParams = TPU_V5E, chips: int = 1) -> OpPlan:
+    lane = classify(op, hw)
+    compute_s = op.flops / (chips * hw.peak_flops)
+    memory_s = op.bytes_hbm / (chips * hw.hbm_bw)
+    if lane == Lane.MXU:
+        bm, bn = plan_blocks(op, hw)
+        return OpPlan(op, lane, bm, bn, compute_s, memory_s)
+    return OpPlan(op, lane, None, None, compute_s, memory_s)
+
+
+# ---------------------------------------------------------------------------
+# per-model operator inventory
+# ---------------------------------------------------------------------------
+
+def model_op_profiles(cfg: ModelConfig, shape: ShapeSpec) -> List[OpProfile]:
+    """Enumerate the model's GEMM-shaped operators at an assigned shape.
+
+    Decode shapes profile ONE serve step (m = global_batch tokens) against
+    a cache of shape.seq_len; train/prefill profile the full sequence."""
+    L, d = cfg.n_layers, cfg.d_model
+    hd = cfg.hd
+    decode = shape.is_decode
+    tokens = shape.global_batch * (1 if decode else shape.seq_len)
+    s_ctx = shape.seq_len
+    ops: List[OpProfile] = []
+
+    def fc(name, k, n, count=1, m=tokens):
+        ops.append(OpProfile(name, m, k, n, count))
+
+    if cfg.has_attention:
+        n_attn_layers = cfg.n_layers
+        if cfg.family == "hybrid":
+            n_attn_layers = cfg.n_layers // cfg.attn_every
+        h, kvh = cfg.n_heads, cfg.n_kv_heads
+        fc("attn_qkv", d, (h + 2 * kvh) * hd, n_attn_layers)
+        fc("attn_out", h * hd, d, n_attn_layers)
+        # attention score/value matmuls: per (batch*head), input-dependent
+        bh = shape.global_batch * h
+        if decode:
+            ops.append(OpProfile("attn_qk", 1, hd, s_ctx, bh * n_attn_layers,
+                                 weight_static=False))
+            ops.append(OpProfile("attn_sv", 1, s_ctx, hd, bh * n_attn_layers,
+                                 weight_static=False))
+        else:
+            # causal: ~S^2/2 effective
+            ops.append(OpProfile("attn_qk", s_ctx, hd, s_ctx // 2,
+                                 bh * n_attn_layers, weight_static=False))
+            ops.append(OpProfile("attn_sv", s_ctx, s_ctx // 2, hd,
+                                 bh * n_attn_layers, weight_static=False))
+
+    if cfg.family == "dense":
+        fc("ffn_gate_up", d, 2 * cfg.d_ff, L)
+        fc("ffn_down", cfg.d_ff, d, L)
+    elif cfg.family == "moe":
+        fc("moe_router", d, cfg.n_experts, L)
+        # routed experts: each token hits top_k experts
+        m_exp = tokens * cfg.top_k
+        fc("moe_gate_up", d, 2 * cfg.moe_d_ff, L, m=m_exp)
+        fc("moe_down", cfg.moe_d_ff, d, L, m=m_exp)
+        if cfg.n_shared_experts:
+            fc("moe_shared", d, 3 * cfg.n_shared_experts * cfg.moe_d_ff, L)
+    elif cfg.rwkv:
+        fc("rwkv_tm_proj", d, 4 * d, L)          # r,k,v,g
+        fc("rwkv_tm_out", d, d, L)
+        fc("rwkv_decay_lora", d, cfg.rwkv_lora + cfg.rwkv_lora, L)
+        # wkv state update: per token per head, S [hd, hd] read-modify-write
+        ops.append(OpProfile("rwkv_wkv", 1, cfg.rwkv_head_dim, cfg.rwkv_head_dim,
+                             tokens * cfg.rwkv_heads * L, weight_static=False))
+        fc("rwkv_cm", d, 2 * cfg.d_ff, L)        # up + down ~ 2*d*ff
+    if cfg.family in ("ssm", "hybrid") and not cfg.rwkv:
+        n_mamba = cfg.n_layers if cfg.family == "ssm" else \
+            cfg.n_layers  # hybrid: every layer is a mamba layer
+        di, ns = cfg.d_inner, cfg.ssm_state
+        fc("mamba_in_proj", d, 2 * di + 2 * ns + cfg.ssm_heads, n_mamba)
+        fc("mamba_out_proj", di, d, n_mamba)
+        ops.append(OpProfile("mamba_ssd", 1, ns, cfg.ssm_head_dim,
+                             tokens * cfg.ssm_heads * n_mamba * 2,
+                             weight_static=False))
+        if cfg.family == "hybrid":
+            fc("shared_ffn", d, 3 * cfg.d_ff, cfg.n_layers // cfg.attn_every)
+
+    fc("lm_head", d, cfg.vocab_size, 1)
+    return ops
+
+
+def plan_model(cfg: ModelConfig, shape: ShapeSpec, hw: HWParams = TPU_V5E,
+               chips: int = 1) -> List[OpPlan]:
+    return [plan_op(op, hw, chips) for op in model_op_profiles(cfg, shape)]
+
+
+def lane_table(cfg: ModelConfig, shape: ShapeSpec, hw: HWParams = TPU_V5E
+               ) -> str:
+    """Human-readable lane assignment (printed by benchmarks/examples)."""
+    rows = [f"{'op':18s} {'m':>9s} {'k':>7s} {'n':>7s} {'AI':>8s} lane  blocks"]
+    for p in plan_model(cfg, shape, hw):
+        blocks = f"({p.bm},{p.bn})" if p.lane == Lane.MXU else "stream"
+        rows.append(f"{p.op.name:18s} {p.op.m:9d} {p.op.k:7d} {p.op.n:7d} "
+                    f"{p.op.intensity:8.1f} {p.lane.value:4s}  {blocks}")
+    return "\n".join(rows)

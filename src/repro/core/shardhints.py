@@ -1,0 +1,74 @@
+"""Activation sharding hints — the GSPMD guardrail.
+
+With FSDP-sharded weights (contraction dim over 'data') and batch-sharded
+inputs, the partitioner may legally choose to replicate the batch and
+partial-sum over 'data' instead of all-gathering the weights (measured:
+per-device activations of [global_tokens, d/16] in the layer scan).
+Pinning activations at block boundaries forces the ZeRO-3 dataflow: weights
+gather per layer inside the scan, activations stay batch-sharded.
+
+The policy is process-global and set by the launcher (dryrun/train/serve);
+when unset every hint is a no-op, so model code runs unchanged on one
+device (smoke tests, examples).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+
+_POLICY: Optional[Dict[str, jax.sharding.Sharding]] = None
+
+# Expert-parallel dispatch config: (mesh, dp_axes tuple, tp_axis, fsdp_axis)
+# — set by the launcher; None -> MoE uses the single-program GSPMD path.
+_MOE_EP = None
+
+
+def set_policy(policy: Optional[Dict[str, jax.sharding.Sharding]]) -> None:
+    global _POLICY
+    _POLICY = policy
+
+
+def set_moe_ep(cfg) -> None:
+    """cfg = (mesh, dp_axes, tp_axis, fsdp_axis or None), or None."""
+    global _MOE_EP
+    _MOE_EP = cfg
+
+
+def get_moe_ep():
+    return _MOE_EP
+
+
+# Sequence-sharded decode attention with NoC tree-softmax combine
+# (paper Fig. 10 on ICI): (mesh, dp_axes, seq_axis) or None.
+_DECODE_ATTN = None
+
+
+def set_decode_attn(cfg) -> None:
+    global _DECODE_ATTN
+    _DECODE_ATTN = cfg
+
+
+def get_decode_attn():
+    return _DECODE_ATTN
+
+
+def get_policy():
+    return _POLICY
+
+
+def hint(x, kind: str):
+    """Constrain ``x`` to the policy sharding for ``kind`` (no-op without a
+    policy).  Rank mismatches fall back to no-op so decode ([B,1,d]) and
+    train ([B,S,d]) reuse the same kind."""
+    if _POLICY is None or kind not in _POLICY:
+        return x
+    sh = _POLICY[kind]
+    spec = sh.spec
+    if len(spec) > x.ndim:
+        return x
+    if len(spec) < x.ndim:
+        spec = jax.sharding.PartitionSpec(
+            *(tuple(spec) + (None,) * (x.ndim - len(spec))))
+        sh = jax.sharding.NamedSharding(sh.mesh, spec)
+    return jax.lax.with_sharding_constraint(x, sh)

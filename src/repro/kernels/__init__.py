@@ -1,0 +1,9 @@
+# Pallas TPU kernels for the paper's compute hot-spots, each with a
+# pure-jnp oracle (ref.py) and a platform-dispatching wrapper (ops.py):
+#   flash_attention   — prefill/train attention (SRAM-PIM-stacking lane)
+#   decode_attention  — flash-decoding GeMV lane (DRAM-PIM lane) + partials
+#                       for the NoC tree-softmax combine
+#   rmsnorm / rope / swiglu — Curry-ALU-style fused non-linears
+#   matmul            — weight-stationary GEMM (SRAM-PIM semantics)
+#   rwkv_chunk / mamba_chunk — recurrent-state chunk scans (VMEM-resident state)
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,135 @@
+"""Flash-decoding — Pallas TPU kernel (single new token vs. a long KV cache).
+
+This is the DRAM-PIM ("bandwidth lane") workload of the paper: GeMV-shaped,
+zero weight reuse, latency dominated by streaming the KV cache from HBM.
+The kernel keeps the query resident in VMEM and streams KV blocks, exactly
+like AiM banks stream rows past their 16-input MAC units.
+
+When the KV cache is *sequence-sharded* across devices (long_500k), each
+device runs this kernel over its slab and returns (acc, m, l) partials;
+``core.noc.tree_softmax_combine`` merges them over the mesh — the paper's
+Fig. 10 in-transit Softmax reduction.
+
+Grid: (B, KvH, n_seq_blocks) — last axis sequential, scratch accumulates.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
+            m_scr, l_scr, acc_scr, *, scale: float, block_s: int,
+            kv_offset: int, return_partials: bool):
+    ib = pl.program_id(0)
+    isq = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(isq == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                      # [G, D]
+    k = k_ref[0].astype(jnp.float32)                         # [bs, D]
+    s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                        preferred_element_type=jnp.float32) * scale  # [G, bs]
+    kpos = kv_offset + isq * block_s + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = kpos < len_ref[0]
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + lax.dot_general(
+        p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(isq == ns - 1)
+    def _finalize():
+        if return_partials:
+            o_ref[0, 0] = acc_scr[...].astype(o_ref.dtype)
+            m_ref[0, 0] = m_scr[...][:, 0].astype(m_ref.dtype)
+            l_ref[0, 0] = l_scr[...][:, 0].astype(l_ref.dtype)
+        else:
+            l = jnp.maximum(l_scr[...], 1e-30)
+            o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def _decode(q, k, v, lengths, *, kv_offset: int, block_s: int,
+            return_partials: bool, interpret: bool):
+    b, h, d = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    block_s = min(block_s, sk)
+    ns = -(-sk // block_s)
+    pad = ns * block_s - sk
+    kh = jnp.moveaxis(k, 2, 1)                               # [B, KvH, Sk, D]
+    vh = jnp.moveaxis(v, 2, 1)
+    if pad:
+        kh = jnp.pad(kh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    qh = q.reshape(b, kvh, g, d)
+    if lengths is None:
+        lengths = jnp.full((b,), kv_offset + sk, jnp.int32)
+    # clamp by the slab: positions beyond sk are invalid regardless
+    lens = jnp.minimum(lengths.astype(jnp.int32), kv_offset + sk)
+
+    out_dt = jnp.float32 if return_partials else q.dtype
+    kernel = functools.partial(
+        _kernel, scale=1.0 / math.sqrt(d), block_s=block_s,
+        kv_offset=kv_offset, return_partials=return_partials)
+
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid=(b, kvh, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda ib, ih, isq: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, block_s, d), lambda ib, ih, isq, _kvh=kvh: (ib * _kvh + ih, isq, 0)),
+            pl.BlockSpec((1, block_s, d), lambda ib, ih, isq, _kvh=kvh: (ib * _kvh + ih, isq, 0)),
+            pl.BlockSpec((1,), lambda ib, ih, isq: (ib,), memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda ib, ih, isq: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, g), lambda ib, ih, isq: (ib, ih, 0)),
+            pl.BlockSpec((1, 1, g), lambda ib, ih, isq: (ib, ih, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kvh, g, d), out_dt),
+            jax.ShapeDtypeStruct((b, kvh, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, kvh, g), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh.reshape(b * kvh, ns * block_s, d), vh.reshape(b * kvh, ns * block_s, d), lens)
+    return out.reshape(b, h, d), m.reshape(b, h), l.reshape(b, h)
+
+
+def decode_attention(q, k, v, *, lengths=None, block_s: int = 512,
+                     interpret: bool = False):
+    """q [B,H,D]; k,v [B,Sk,KvH,D] -> [B,H,D]."""
+    out, _, _ = _decode(q, k, v, lengths, kv_offset=0, block_s=block_s,
+                        return_partials=False, interpret=interpret)
+    return out
+
+
+def decode_attention_partial(q, k, v, *, lengths=None, kv_offset: int = 0,
+                             block_s: int = 512, interpret: bool = False):
+    """Per-shard partials (acc f32, m, l) for the NoC tree combine."""
+    return _decode(q, k, v, lengths, kv_offset=kv_offset, block_s=block_s,
+                   return_partials=True, interpret=interpret)

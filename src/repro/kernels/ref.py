@@ -1,0 +1,428 @@
+"""Pure-jnp oracles for every kernel.
+
+These are (i) the correctness reference each Pallas kernel is validated
+against (``tests/test_kernels_*``), and (ii) the execution path used on
+non-TPU backends (the CPU dry-run lowers these).  All functions are
+differentiable and scan-based where memory matters.
+
+Layout conventions
+------------------
+attention:  q [B, Sq, H, D];  k, v [B, Sk, KvH, D];  GQA via H % KvH == 0.
+RoPE uses the *interleaved* (neighbour-pair) convention — the layout whose
+rearrangement cost motivates the paper's Fig. 12 router-based swap.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# normalization / elementwise
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def silu(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)
+
+
+def silu_mul(gate: jax.Array, up: jax.Array) -> jax.Array:
+    """SwiGLU gating: silu(gate) * up (paper: SiLU non-linearity in FFN)."""
+    return silu(gate.astype(jnp.float32)).astype(up.dtype) * up
+
+
+def softmax(x: jax.Array, axis: int = -1) -> jax.Array:
+    return jax.nn.softmax(x.astype(jnp.float32), axis=axis).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (interleaved / neighbour-pair convention, per the paper's Fig. 12)
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions [...] -> cos/sin [..., head_dim//2] in fp32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0) -> jax.Array:
+    """x [B, S, H, D], positions [B, S] (or [S]) -> rotated x.
+
+    Interleaved pairs: (x0, x1), (x2, x3), ... each rotated by the same angle.
+    The neighbour swap (x_even <-> -x_odd) is the data rearrangement the
+    paper executes inside NoC routers.
+    """
+    b, s, h, d = x.shape
+    if positions.ndim == 1:
+        positions = jnp.broadcast_to(positions[None, :], (b, s))
+    cos, sin = rope_cos_sin(positions, d, theta)           # [B, S, D/2]
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    xf = x.astype(jnp.float32).reshape(b, s, h, d // 2, 2)
+    x_even, x_odd = xf[..., 0], xf[..., 1]
+    r_even = x_even * cos - x_odd * sin
+    r_odd = x_even * sin + x_odd * cos
+    out = jnp.stack([r_even, r_odd], axis=-1).reshape(b, s, h, d)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """[B, S, KvH, D] -> [B, S, H, D] by repeating each KV head."""
+    b, s, kvh, d = k.shape
+    group = n_heads // kvh
+    return jnp.repeat(k, group, axis=2) if group > 1 else k
+
+
+def plain_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                    lengths: Optional[jax.Array] = None,
+                    window: Optional[int] = None) -> jax.Array:
+    """Reference O(S^2)-memory attention (small shapes only)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    kh = _expand_kv(k, h)
+    vh = _expand_kv(v, h)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kh.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    if lengths is not None:
+        lm = kpos[None, :] < lengths[:, None]              # [B, Sk]
+        scores = jnp.where(lm[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vh.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                    lengths: Optional[jax.Array] = None,
+                    window: Optional[int] = None,
+                    block_k: int = 512) -> jax.Array:
+    """Online-softmax attention, O(S * block_k) memory, differentiable.
+
+    Scans over KV blocks maintaining (m, l, acc) — the same running
+    statistics the Pallas kernel keeps in VMEM scratch, and the same
+    (m, l) algebra CompAir's NoC reduce-tree combines across banks.
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    group = h // kvh
+    block_k = min(block_k, sk)
+    nblk = -(-sk // block_k)
+    pad = nblk * block_k - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, nblk, block_k, kvh, d)
+    vb = v.reshape(b, nblk, block_k, kvh, d)
+
+    qf = q.astype(jnp.float32).reshape(b, sq, kvh, group, d)
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    qpos = (jnp.arange(sq) + q_offset)[:, None]
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, iblk = inp
+        kf = kblk.astype(jnp.float32)
+        s = jnp.einsum("bqgnd,bkgd->bqgnk", qf, kf) * scale   # g=kv head, n=group
+        kpos = iblk * block_k + jnp.arange(block_k)
+        mask = jnp.ones((sq, block_k), dtype=bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos
+        if window is not None:
+            mask &= kpos[None, :] > qpos - window
+        if pad:
+            mask &= (kpos < sk)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        if lengths is not None:
+            lm = kpos[None, :] < lengths[:, None]          # [B, block_k]
+            s = jnp.where(lm[:, None, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqgnk,bkgd->bqgnd", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, kvh, group), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kvh, group), jnp.float32)
+    a0 = jnp.zeros((b, sq, kvh, group, d), jnp.float32)
+    (m, l, acc), _ = lax.scan(
+        step, (m0, l0, a0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), jnp.arange(nblk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def decode_attention_partial(q, k, v, *, lengths: Optional[jax.Array] = None,
+                             kv_offset: int = 0,
+                             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token attention partials over a (possibly sharded) KV slab.
+
+    q [B, H, D]; k, v [B, Sk, KvH, D]  ->  (acc [B,H,D] f32, m [B,H], l [B,H]).
+    The (acc, m, l) triple is what CompAir's reduce tree combines across
+    banks; here it is combined across devices by ``core.noc.tree_softmax_combine``.
+    """
+    b, h, d = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    group = h // kvh
+    # keep the KV slab in its storage dtype: a q-side downcast costs
+    # B*H*D bytes, an f32 cache upcast costs 2x the whole cache PER LAYER
+    # (measured ~810 GiB/step at qwen2-72b decode_32k — §Perf iteration).
+    # REPRO_DECODE_F32CAST=1 restores the baseline numerics for A/B runs.
+    import os as _os
+    if _os.environ.get("REPRO_DECODE_F32CAST"):
+        qf = q.astype(jnp.float32).reshape(b, kvh, group, d)
+        s = jnp.einsum("bgnd,bkgd->bgnk", qf, k.astype(jnp.float32)
+                       ) / jnp.sqrt(jnp.float32(d))
+        kpos = kv_offset + jnp.arange(sk)
+        if lengths is not None:
+            valid = kpos[None, :] < lengths[:, None]
+            s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        m = s.max(axis=-1)
+        p = jnp.exp(s - m[..., None])
+        l = p.sum(axis=-1)
+        acc = jnp.einsum("bgnk,bkgd->bgnd", p, v.astype(jnp.float32))
+        return (acc.reshape(b, h, d), m.reshape(b, h), l.reshape(b, h))
+    qc = q.astype(k.dtype).reshape(b, kvh, group, d)
+    s = jnp.einsum("bgnd,bkgd->bgnk", qc, k,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(jnp.float32(d))
+    kpos = kv_offset + jnp.arange(sk)
+    if lengths is not None:
+        valid = kpos[None, :] < lengths[:, None]
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bgnk,bkgd->bgnd", p.astype(k.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return (acc.reshape(b, h, d), m.reshape(b, h), l.reshape(b, h))
+
+
+def decode_attention(q, k, v, *, lengths: Optional[jax.Array] = None) -> jax.Array:
+    acc, m, l = decode_attention_partial(q, k, v, lengths=lengths)
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+def combine_partials(parts: Tuple[jax.Array, jax.Array, jax.Array],
+                     other: Tuple[jax.Array, jax.Array, jax.Array]):
+    """Merge two (acc, m, l) attention partials — one NoC-tree hop."""
+    acc_a, m_a, l_a = parts
+    acc_b, m_b, l_b = other
+    m = jnp.maximum(m_a, m_b)
+    ca = jnp.exp(m_a - m)
+    cb = jnp.exp(m_b - m)
+    return (acc_a * ca[..., None] + acc_b * cb[..., None], m, l_a * ca + l_b * cb)
+
+
+# ---------------------------------------------------------------------------
+# matmul (the "SRAM-PIM lane": weight-stationary tiled GEMM)
+# ---------------------------------------------------------------------------
+
+def matmul(x: jax.Array, w: jax.Array, *, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD, scalar-per-head decay)
+# ---------------------------------------------------------------------------
+
+def mamba2_scan(x, dt, A, B, C, *, h0=None, chunk: int = 128):
+    """Chunked selective-state-space scan (Mamba2 SSD).
+
+    x  [Bt, S, H, P]   (P = head dim)
+    dt [Bt, S, H]      (softplus-activated step sizes, >= 0)
+    A  [H]             (negative decay rates)
+    B  [Bt, S, N]      (input matrix, shared across heads / n_groups=1)
+    C  [Bt, S, N]      (output matrix)
+    h0 [Bt, H, P, N]   optional initial state
+    returns  y [Bt, S, H, P],  h_final [Bt, H, P, N]
+
+    Recurrence:  h_t = exp(A*dt_t) * h_{t-1} + dt_t * (x_t ⊗ B_t)
+                 y_t = h_t · C_t
+    """
+    bt, s, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    xs = x.astype(jnp.float32).reshape(bt, nc, chunk, h, p)
+    dts = dt.astype(jnp.float32).reshape(bt, nc, chunk, h)
+    Bs = B.astype(jnp.float32).reshape(bt, nc, chunk, n)
+    Cs = C.astype(jnp.float32).reshape(bt, nc, chunk, n)
+    Af = A.astype(jnp.float32)
+
+    def chunk_step(hprev, inp):
+        xc, dtc, Bc, Cc = inp                      # [Bt,Q,H,P], [Bt,Q,H], [Bt,Q,N] x2
+        dA = dtc * Af[None, None, :]               # log-decay per step  [Bt,Q,H]
+        cum = jnp.cumsum(dA, axis=1)               # inclusive           [Bt,Q,H]
+        # intra-chunk: y_intra[t] = sum_{u<=t} exp(cum[t]-cum[u]) dt_u (C_t·B_u) x_u
+        # (cum[t]-cum[u] <= 0 for u <= t, so every exp() here is <= 1).
+        # Mask BEFORE exp: the u > t entries have positive exponents that
+        # overflow to inf, and where() after exp still back-propagates NaN.
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        diff = cum[:, :, None, :] - cum[:, None, :, :]                # [Bt,T,U,H]
+        decay = jnp.exp(jnp.where(tri[None, :, :, None], diff, -1e30))
+        cb = jnp.einsum("btn,bun->btu", Cc, Bc)                        # [Bt,T,U]
+        w = decay * cb[..., None] * dtc[:, None, :, :]                 # [Bt,T,U,H]
+        y_intra = jnp.einsum("btuh,buhp->bthp", w, xc)
+        # inter-chunk: contribution of h_prev
+        dec_t = jnp.exp(cum)                                           # [Bt,T,H]
+        y_inter = jnp.einsum("btn,bhpn,bth->bthp", Cc, hprev, dec_t)
+        # new state: h = exp(sum dA) h_prev + sum_u exp(cum[-1]-cum[u]) dt_u x_u ⊗ B_u
+        dec_rest = jnp.exp(cum[:, -1:, :] - cum)                       # [Bt,U,H]
+        contrib = jnp.einsum("buh,buhp,bun->bhpn", dec_rest * dtc, xc, Bc)
+        hnew = hprev * jnp.exp(cum[:, -1, :])[:, :, None, None] + contrib
+        return hnew, y_intra + y_inter
+
+    if h0 is None:
+        h0 = jnp.zeros((bt, h, p, n), jnp.float32)
+    hf, ys = lax.scan(chunk_step, h0.astype(jnp.float32),
+                      (jnp.moveaxis(xs, 1, 0), jnp.moveaxis(dts, 1, 0),
+                       jnp.moveaxis(Bs, 1, 0), jnp.moveaxis(Cs, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bt, nc * chunk, h, p)[:, :s]
+    return y.astype(x.dtype), hf
+
+
+def mamba2_step(xt, dtt, A, Bt_, Ct, h):
+    """Single-token Mamba2 update (decode).
+
+    xt [B,H,P], dtt [B,H], Bt_ [B,N], Ct [B,N], h [B,H,P,N]."""
+    dA = jnp.exp(dtt.astype(jnp.float32) * A.astype(jnp.float32)[None, :])
+    hn = (h * dA[..., None, None]
+          + jnp.einsum("bh,bhp,bn->bhpn", dtt.astype(jnp.float32),
+                       xt.astype(jnp.float32), Bt_.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bn->bhp", hn, Ct.astype(jnp.float32))
+    return y.astype(xt.dtype), hn
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (linear attention with data-dependent decay)
+# ---------------------------------------------------------------------------
+
+def rwkv6_scan(r, k, v, w, u, *, s0=None):
+    """RWKV-6 wkv recurrence (reference: exact recurrent form).
+
+    r,k,v [B, S, H, D]; w [B, S, H, D] (per-step decay in (0,1), already
+    exp(-exp(...))-activated); u [H, D] bonus for the current token.
+        S_t = diag(w_t) S_{t-1} + k_t v_t^T
+        o_t = r_t · (S_{t-1} + diag(u) k_t v_t^T)
+    returns o [B,S,H,D], S_final [B,H,D,D]  (first D = key dim, second = value).
+
+    The recurrent form is unconditionally stable (every multiplier is w_t in
+    (0,1)); the Pallas kernel uses the chunked pairwise-difference form with
+    all exponents <= 0 and is validated against this oracle.
+    """
+    b, s, h, d = r.shape
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                       # [B,H,D]
+        kv = jnp.einsum("bhd,bhe->bhde", kt, vt)
+        o = jnp.einsum("bhd,bhde->bhe", rt, S + uf[None, :, :, None] * kv)
+        Snew = S * wt[..., None] + kv
+        return Snew, o
+
+    seq = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    if s0 is None:
+        s0 = jnp.zeros((b, h, d, d), jnp.float32)
+    Sf, os_ = lax.scan(step, s0.astype(jnp.float32), seq)
+    return jnp.moveaxis(os_, 0, 1).astype(r.dtype), Sf
+
+
+def rwkv6_scan_chunked(r, k, v, w, u, *, s0=None, chunk: int = 32):
+    """Chunked (parallel-within-chunk) wkv — the algorithm the Pallas kernel
+    implements.  All pairwise decay exponents are differences cum[t-1]-cum[u]
+    with u <= t-1, hence <= 0: numerically stable.
+
+    Memory is O(chunk^2 * D) per (batch, head); keep ``chunk`` modest.
+    """
+    b, s, h, d = r.shape
+    chunk = min(chunk, s)
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        z = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, z), jnp.pad(k, z), jnp.pad(v, z)
+        w = jnp.pad(w, z, constant_values=1.0)
+    rs = r.astype(jnp.float32).reshape(b, nc, chunk, h, d)
+    ks = k.astype(jnp.float32).reshape(b, nc, chunk, h, d)
+    vs = v.astype(jnp.float32).reshape(b, nc, chunk, h, d)
+    ws = w.astype(jnp.float32).reshape(b, nc, chunk, h, d)
+    uf = u.astype(jnp.float32)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    def chunk_step(S, inp):
+        rc, kc, vc, wc = inp                       # [B,Q,H,D]
+        logw = jnp.log(jnp.maximum(wc, 1e-20))
+        cum = jnp.cumsum(logw, axis=1)             # [B,Q,H,D]
+        cum_in = cum - logw                        # log prod_{j<t} w_j
+        # state contribution (decay from chunk entry to t-1)
+        o_state = jnp.einsum("bthd,bhde->bthe", rc * jnp.exp(cum_in), S)
+        # intra-chunk pairwise: weight(t,u) = exp(cum_in[t] - cum[u]), u < t
+        # computed per (t,u) pair in log space -> exponent <= 0 after masking
+        # (mask with a finite -1e30 pre-exp: -inf breeds NaN in the VJP).
+        logdiff = cum_in[:, :, None] - cum[:, None, :, :]   # [B,T,U,H,D]
+        logdiff = jnp.where(tri[None, :, :, None, None], logdiff, -1e30)
+        att = jnp.einsum("bthd,btuhd,buhd->bhtu", rc, jnp.exp(logdiff), kc)
+        o_intra = jnp.einsum("bhtu,buhe->bthe", att, vc)
+        bonus = jnp.einsum("bthd,hd,bthd->bth", rc, uf, kc)
+        o_bonus = bonus[..., None] * vc
+        # state update
+        dec_out = jnp.exp(cum[:, -1:] - cum)       # prod_{j>u} w_j, <= 1
+        Snew = S * jnp.exp(cum[:, -1])[..., None] \
+            + jnp.einsum("buhd,buhe->bhde", ks_local(kc, dec_out), vc)
+        return Snew, o_state + o_intra + o_bonus
+
+    def ks_local(kc, dec_out):
+        return kc * dec_out
+
+    if s0 is None:
+        s0 = jnp.zeros((b, h, d, d), jnp.float32)
+    Sf, os_ = lax.scan(chunk_step, s0.astype(jnp.float32),
+                       (jnp.moveaxis(rs, 1, 0), jnp.moveaxis(ks, 1, 0),
+                        jnp.moveaxis(vs, 1, 0), jnp.moveaxis(ws, 1, 0)))
+    o = jnp.moveaxis(os_, 0, 1).reshape(b, nc * chunk, h, d)[:, :s]
+    return o.astype(r.dtype), Sf
+
+
+def rwkv6_step(rt, kt, vt, wt, u, S):
+    """Single-token RWKV6 update. rt,kt,vt,wt [B,H,D]; S [B,H,D,D]."""
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (rt, kt, vt, wt))
+    uf = u.astype(jnp.float32)
+    kv = jnp.einsum("bhd,bhe->bhde", kf, vf)
+    o = jnp.einsum("bhd,bhde->bhe", rf, S + uf[None, :, :, None] * kv)
+    Snew = S * wf[..., None] + kv
+    return o.astype(rt.dtype), Snew

@@ -1,0 +1,63 @@
+"""RoPE (interleaved) — Pallas TPU kernel.
+
+Paper §4.3.1/Fig. 12: RoPE's neighbour-pair swap + negate is a granularity
+mismatch for row-granular DRAM-PIM, so CompAir performs the rearrangement
+inside NoC routers (34 cycles/bank).  The TPU analogue: do the pair
+rotation entirely in registers inside one kernel — the (de)interleave is a
+VREG shuffle, never a second HBM round-trip (the baseline it replaces is a
+gather/scatter permutation at the XLA level).
+
+cos/sin are computed in-kernel from the position block (no table in HBM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, pos_ref, o_ref, *, theta: float):
+    x = x_ref[0].astype(jnp.float32)                 # [bs, H, D]
+    bs, h, d = x.shape
+    half = d // 2
+    # angle(s, j) = pos[s] / theta^(j/half)
+    j = lax.broadcasted_iota(jnp.float32, (bs, h, half), 2)
+    inv = jnp.exp(-jnp.log(theta) * j / half)
+    ang = pos_ref[0][:, None, None].astype(jnp.float32) * inv
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    xp = x.reshape(bs, h, half, 2)
+    xe, xo = xp[..., 0], xp[..., 1]                  # neighbour pairs
+    re = xe * cos - xo * sin
+    ro = xe * sin + xo * cos
+    o_ref[0] = jnp.stack([re, ro], axis=-1).reshape(bs, h, d).astype(o_ref.dtype)
+
+
+def apply_rope(x, positions, *, theta: float = 10_000.0, block_s: int = 512,
+               interpret: bool = False):
+    """x [B, S, H, D]; positions [B, S] or [S] -> rotated x."""
+    b, s, h, d = x.shape
+    if positions.ndim == 1:
+        positions = jnp.broadcast_to(positions[None, :], (b, s))
+    positions = positions.astype(jnp.int32)
+    block_s = min(block_s, s)
+    nb = -(-s // block_s)
+    pad = nb * block_s - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        positions = jnp.pad(positions, ((0, 0), (0, pad)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, theta=theta),
+        grid=(b, nb),
+        in_specs=[
+            pl.BlockSpec((1, block_s, h, d), lambda ib, i: (ib, i, 0, 0)),
+            pl.BlockSpec((1, block_s), lambda ib, i: (ib, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s, h, d), lambda ib, i: (ib, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nb * block_s, h, d), x.dtype),
+        interpret=interpret,
+    )(x, positions)
+    return out[:, :s]

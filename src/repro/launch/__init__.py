@@ -1,0 +1,3 @@
+# Launch layer: mesh construction, multi-pod dry-run, train/serve drivers.
+# NOTE: do NOT import dryrun here — it sets XLA_FLAGS at import time.
+from repro.launch import mesh  # noqa: F401

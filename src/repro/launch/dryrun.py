@@ -1,0 +1,334 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# (docstring below; the two lines above MUST precede any jax import so the
+# 512 placeholder host devices exist before jax locks the device count.)
+
+_DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each runnable cell this script:
+  1. builds the sharding plan (core/mapping.py),
+  2. jit-lowers the right step function — train_step for train shapes,
+     prefill for prefill shapes, serve (decode) step for decode shapes —
+     with explicit in/out shardings over the production mesh,
+  3. ``.compile()``s it (proving the distribution config is coherent:
+     sharding mismatches / unsupported collectives / compile-time OOM all
+     fail here),
+  4. prints ``memory_analysis()`` + ``cost_analysis()`` and runs the
+     loop-aware HLO walker for the §Roofline terms,
+  5. writes a JSON artifact per cell under --out for benchmarks/roofline.py
+     and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out artifacts/dryrun
+"""
+# Python 3.13: PEP 604 unions work without `from __future__ import annotations`
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCHS, SHAPES_BY_NAME, get_config, shape_applicable,
+                           SHAPES)
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.core import mapping, shardhints
+from repro.launch import hlo_analysis
+from repro.launch.mesh import chips as mesh_chips
+from repro.launch.mesh import make_production_mesh
+from repro.models import frontends, model as M
+from repro.train import step as train_step_mod
+
+P = jax.sharding.PartitionSpec
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation anywhere)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Model inputs for one cell as ShapeDtypeStructs.
+
+    train:   {tokens|embeds, labels}
+    prefill: {tokens|embeds, lengths}
+    decode:  {tokens|embeds(one step), lengths}  (+ the state tree built
+             separately — see build_cell)"""
+    b, s = shape.global_batch, shape.seq_len
+    stub = cfg.frontend != "none"
+    if shape.kind == "train":
+        batch = {"labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if stub:
+            batch["embeds"] = frontends.embedding_spec(cfg, b, s)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"lengths": jax.ShapeDtypeStruct((b,), jnp.int32)}
+        if stub:
+            batch["embeds"] = frontends.embedding_spec(cfg, b, s)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return batch
+    # decode: one new token against a seq_len cache
+    batch = {"lengths": jax.ShapeDtypeStruct((b,), jnp.int32)}
+    if stub:
+        batch["embeds"] = jax.ShapeDtypeStruct((b, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((b,), jnp.int32)
+    return batch
+
+
+def _spec_to_sharding(tree, mesh):
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_shardings(cfg, shape, plan, batch, mesh):
+    out = {}
+    for k, v in batch.items():
+        if k in ("tokens", "labels"):
+            spec = plan.batch_spec if v.ndim == 2 else P(plan.batch_spec[0])
+        elif k == "embeds":
+            spec = plan.embeds_spec if v.ndim == 3 else \
+                P(plan.batch_spec[0], None)
+        elif k == "lengths":
+            spec = P(plan.batch_spec[0])
+        else:
+            spec = P()
+        out[k] = jax.sharding.NamedSharding(mesh, spec)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+
+def set_hint_policy(plan, mesh, cfg=None, moe_ep: bool = True):
+    """Pin activations/logits to batch sharding (see core/shardhints.py —
+    prevents GSPMD from replicating the batch under FSDP weights), and
+    enable explicit EP dispatch for MoE archs (§Perf iteration 2)."""
+    dp = plan.batch_spec[0]
+    policy = {
+        "activation": jax.sharding.NamedSharding(mesh, P(dp, None, None)),
+        "logits": jax.sharding.NamedSharding(mesh, P(dp, None, "model")),
+    }
+    if not os.environ.get("REPRO_NO_WKV_GATHER"):
+        # §Perf it-6: batch-parallel wkv scan (see models/rwkv.py)
+        policy["wkv_replicated"] = jax.sharding.NamedSharding(
+            mesh, P(dp, None, None, None))
+    shardhints.set_policy(policy)
+    if moe_ep and cfg is not None and cfg.family == "moe":
+        shardhints.set_moe_ep((mesh, plan.dp_axes, plan.tp_axis,
+                               plan.fsdp_axis))
+    else:
+        shardhints.set_moe_ep(None)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
+               remat: bool = True, microbatch: int | None = None,
+               fsdp: bool | None = None):
+    """Returns (fn, example_args, in_shardings, out_shardings, donate)."""
+    batch = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        state_shape = train_step_mod.init_state_shaped(cfg)
+        plan = mapping.sharding_plan(cfg, mesh, shape,
+                                     params_shape=state_shape.params,
+                                     fsdp=fsdp)
+        set_hint_policy(plan, mesh, cfg, moe_ep=not os.environ.get("REPRO_NO_MOE_EP"))
+        pspec = plan.params
+        state_spec = train_step_mod.TrainState(
+            params=pspec,
+            opt=type(state_shape.opt)(m=pspec, v=pspec, step=P()))
+        tstep = train_step_mod.make_train_step(cfg, remat=remat,
+                                               microbatch=microbatch)
+
+        def fn(state, batch):
+            return tstep(state, batch)
+
+        in_sh = (_spec_to_sharding(state_spec, mesh),
+                 _batch_shardings(cfg, shape, plan, batch, mesh))
+        out_sh = (_spec_to_sharding(state_spec, mesh), None)
+        return fn, (state_shape, batch), in_sh, out_sh, (0,), plan
+
+    state_shape = jax.eval_shape(
+        lambda: M.init_decode_state(cfg, shape.global_batch, shape.seq_len))
+    params_shape = M.init_params_shaped(cfg)
+    decode_tree = (shape.kind == "decode" and cfg.has_attention
+                   and shape.name != "long_500k"
+                   and not os.environ.get("REPRO_NO_DECODE_TREE"))
+    plan = mapping.sharding_plan(cfg, mesh, shape,
+                                 params_shape=params_shape,
+                                 state_shape=state_shape, fsdp=False,
+                                 decode_seq_shard=decode_tree)
+    set_hint_policy(plan, mesh, cfg, moe_ep=not os.environ.get("REPRO_NO_MOE_EP"))
+    if decode_tree and any("sequence-sharded over 'model'" in n
+                           for n in plan.notes):
+        shardhints.set_decode_attn((mesh, plan.dp_axes, "model"))
+    else:
+        shardhints.set_decode_attn(None)
+
+    if shape.kind == "prefill":
+        def fn(params, state, batch):
+            return M.prefill(cfg, params, state,
+                             tokens=batch.get("tokens"),
+                             embeds=batch.get("embeds"),
+                             lengths=batch["lengths"])
+    else:
+        def fn(params, state, batch):
+            return M.decode_step(cfg, params, state,
+                                 batch.get("tokens"), batch["lengths"],
+                                 embeds=batch.get("embeds"))
+
+    in_sh = (_spec_to_sharding(plan.params, mesh),
+             _spec_to_sharding(plan.state_specs, mesh),
+             _batch_shardings(cfg, shape, plan, batch, mesh))
+    out_sh = (None, _spec_to_sharding(plan.state_specs, mesh))
+    return fn, (params_shape, state_shape, batch), in_sh, out_sh, (1,), plan
+
+
+# ---------------------------------------------------------------------------
+# dry-run one cell
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             out_dir: str | None = None, verbose: bool = True,
+             remat: bool = True, microbatch: int | None = None,
+             fsdp: bool | None = None, tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "runnable": ok, "tag": tag}
+    if not ok:
+        rec["skip_reason"] = reason
+        if verbose:
+            print(f"[dryrun] SKIP {arch} x {shape_name}: {reason}")
+        return _emit(rec, out_dir)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh_chips(mesh)
+    t0 = time.time()
+    fn, args, in_sh, out_sh, donate, plan = build_cell(
+        cfg, shape, mesh, remat=remat, microbatch=microbatch, fsdp=fsdp)
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=donate)
+    with mesh:
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    shardhints.set_policy(None)
+    shardhints.set_moe_ep(None)
+    shardhints.set_decode_attn(None)
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    summary = hlo_analysis.analyze(txt)
+    terms = hlo_analysis.roofline_terms(summary, chips=n_chips)
+
+    rec.update(
+        chips=n_chips,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        bytes_per_device={
+            "arguments": int(mem.argument_size_in_bytes),
+            "output": int(mem.output_size_in_bytes),
+            "temp": int(mem.temp_size_in_bytes),
+            "alias": int(mem.alias_size_in_bytes),
+        },
+        xla_cost={k: cost.get(k) for k in ("flops", "bytes accessed",
+                                           "transcendentals") if k in cost},
+        hlo=dict(flops_per_device=summary.flops,
+                 bytes_per_device=summary.bytes,
+                 collective_bytes_per_device=summary.collective_bytes,
+                 collective_count=summary.collective_count,
+                 while_trips=summary.while_trips[:16]),
+        roofline=terms,
+        plan_notes=plan.notes,
+        model_flops=model_flops(cfg, shape),
+    )
+    if verbose:
+        dom = max(("compute_s", "memory_s", "collective_s"),
+                  key=lambda k: terms[k])
+        print(f"[dryrun] OK {arch} x {shape_name} x {mesh_name}: "
+              f"compile={t_compile:.1f}s "
+              f"mem/dev: args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+              f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB | "
+              f"terms: C={terms['compute_s']:.3e}s M={terms['memory_s']:.3e}s "
+              f"X={terms['collective_s']:.3e}s dominant={dom}")
+    return _emit(rec, out_dir)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for train; the
+    forward-only (2*N*D) for inference shapes; D = tokens processed."""
+    n = cfg.param_count(active_only=(cfg.family == "moe"))
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def _emit(rec: dict, out_dir: str | None) -> dict:
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"_{rec['tag']}" if rec.get("tag") else ""
+        path = os.path.join(
+            out_dir, f"{rec['arch']}_{rec['shape']}_{rec['mesh']}{tag}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", default="single", choices=("single", "multi", "both"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--fsdp", type=int, default=None, help="1/0 override")
+    ap.add_argument("--tag", default="", help="artifact filename suffix")
+    ap.add_argument("--continue-on-error", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else [s.name for s in SHAPES]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shp in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch, shp, mp, out_dir=args.out,
+                             remat=not args.no_remat,
+                             microbatch=args.microbatch,
+                             fsdp=None if args.fsdp is None else bool(args.fsdp),
+                             tag=args.tag)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shp, mp, repr(e)))
+                    print(f"[dryrun] FAIL {arch} x {shp} x "
+                          f"{'multi' if mp else 'single'}: {e}")
+                    if not args.continue_on_error:
+                        traceback.print_exc()
+                        raise
+    if failures:
+        print(f"[dryrun] {len(failures)} failures:")
+        for f in failures:
+            print("   ", *f)
+        raise SystemExit(1)
+    print("[dryrun] all requested cells compiled.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,454 @@
+"""Loop-aware HLO cost analysis from ``compiled.as_text()``.
+
+Why: ``compiled.cost_analysis()`` visits each op ONCE — a scan-over-layers
+model reports one layer's FLOPs (verified experimentally; see DESIGN.md).
+This walker multiplies while-loop bodies by their trip counts (recovered
+from the loop condition's comparison constant), so the roofline terms in
+EXPERIMENTS.md reflect the whole program.
+
+Extracted per module:
+    flops          — dot/convolution (2*M*N*K semantics) + elementwise
+    bytes          — sum of operand+result sizes of compute ops (roofline
+                     HBM-traffic upper bound; parameters/constants counted
+                     at their uses)
+    collective_bytes — per collective opcode, operand payload bytes
+                     (all-gather / all-reduce / reduce-scatter / all-to-all
+                     / collective-permute, sync and async-start forms)
+
+This is a text parser for post-optimization HLO; it is deliberately
+conservative — unknown ops contribute bytes but no FLOPs.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of every array leaf in a shape string (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_elems(shape_str: str) -> int:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return 0
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    shape: str
+    operands: List[str]
+    raw: str
+    attrs: Dict[str, str] = field(default_factory=dict)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    by_name: Dict[str, Instr] = field(default_factory=dict)
+    root: Optional[str] = None
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\s*\{")
+# shape is matched lazily up to the first `opcode(`; tuple shapes may contain
+# `/*index=N*/` comments, `{layout}` braces, nested brackets — all swallowed.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s([\w\-]+)\((.*)$")
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped or stripped.startswith("//"):
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        m = _COMP_HDR.match(stripped)
+        if m and stripped.endswith("{"):
+            cur = Computation(m.group(1))
+            comps[cur.name] = cur
+            if stripped.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        name, shape, opcode, rest = mi.groups()
+        # operands: %name tokens before the closing paren of the call
+        operands = re.findall(r"%([\w\.\-]+)", rest)
+        attrs = {}
+        for key in ("lhs_contracting_dims", "rhs_contracting_dims",
+                    "lhs_batch_dims", "rhs_batch_dims"):
+            ma = re.search(key + r"=\{([\d,]*)\}", rest)
+            if ma:
+                attrs[key] = ma.group(1)
+        for key in ("condition", "body", "to_apply", "calls"):
+            ma = re.search(key + r"=%?([\w\.\-]+)", rest)
+            if ma:
+                attrs[key] = ma.group(1)
+        ins = Instr(name, opcode, shape, operands, stripped, attrs)
+        cur.instrs.append(ins)
+        cur.by_name[name] = ins
+        if stripped.startswith("ROOT"):
+            cur.root = name
+    return comps, entry
+
+
+def _dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+_ELEMENTWISE_FLOP_OPS = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs",
+    "cosine", "sine", "logistic", "expm1", "log1p", "atan2", "remainder",
+}
+
+# Ops whose I/O genuinely hits HBM on a TPU compilation.  CPU HLO is far
+# less fused than TPU HLO, so counting every elementwise op's operands
+# would overstate the memory term ~100x; elementwise/broadcast/compare/
+# select/convert are assumed fused into their consumers (flops still
+# counted), and bytes are charged at these fusion-boundary ops only.
+_MEMORY_OPS = {
+    "dot", "convolution", "reduce", "reduce-window", "scatter", "gather",
+    "dynamic-slice", "dynamic-update-slice", "copy", "transpose",
+    "concatenate", "pad", "reverse", "sort", "slice", "iota-large",
+    "cholesky", "triangular-solve", "rng", "rng-bit-generator",
+}
+
+
+def _trip_count(cond: Computation) -> int:
+    """Recover a scan/while trip count from its condition computation:
+    the comparison constant in ``compare(..., direction=LT)`` (fallback:
+    largest integer constant; 1 if none)."""
+    consts: Dict[str, int] = {}
+    for ins in cond.instrs:
+        if ins.opcode == "constant":
+            mc = re.search(r"constant\((-?\d+)\)", ins.raw)
+            if mc:
+                consts[ins.name] = int(mc.group(1))
+    for ins in cond.instrs:
+        if ins.opcode == "compare":
+            for op in ins.operands:
+                if op in consts and consts[op] > 0:
+                    return consts[op]
+    positive = [v for v in consts.values() if v > 0]
+    return max(positive) if positive else 1
+
+
+@dataclass
+class CostSummary:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_count: Dict[str, int] = field(default_factory=dict)
+    while_trips: List[int] = field(default_factory=list)
+    by_key: Dict[str, float] = field(default_factory=dict)  # debug: bytes per opcode:shape
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _operand_shape(comp: Computation, comps, name: str) -> str:
+    ins = comp.by_name.get(name)
+    return ins.shape if ins else ""
+
+
+def analyze(text: str, debug_bytes: Optional[dict] = None) -> CostSummary:
+    """``debug_bytes``: pass a dict to collect per-(opcode:shape) byte
+    charges (loop-multiplied) for profiling the analyzer's attribution."""
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    memo: Dict[str, CostSummary] = {}
+    # computations reachable as fusions/whiles are costed via their callers;
+    # called-computation names:
+    called = set()
+    for c in comps.values():
+        for ins in c.instrs:
+            for k in ("condition", "body", "to_apply", "calls"):
+                if k in ins.attrs:
+                    called.add(ins.attrs[k])
+
+    has_mem_memo: Dict[str, bool] = {}
+    sliced_params_memo: Dict[str, Dict[int, int]] = {}
+
+    def sliced_params(cname: str) -> Dict[int, int]:
+        """Parameters of a fused computation that are only dynamic-sliced
+        inside it (the scan-xs pattern): parameter index -> slice bytes.
+        Charging such operands at full size overstates a layer scan's
+        traffic by the stack depth (measured 240x on the decode cache)."""
+        if cname in sliced_params_memo:
+            return sliced_params_memo[cname]
+        comp = comps[cname]
+        param_no: Dict[str, int] = {}
+        consumers: Dict[str, List[Instr]] = {}
+        for ins in comp.instrs:
+            if ins.opcode == "parameter":
+                mp = re.search(r"parameter\((\d+)\)", ins.raw)
+                if mp:
+                    param_no[ins.name] = int(mp.group(1))
+            for o in ins.operands:
+                consumers.setdefault(o, []).append(ins)
+        out: Dict[int, int] = {}
+        for pname, idx in param_no.items():
+            uses = consumers.get(pname, [])
+            if uses and all(u.opcode in ("dynamic-slice", "slice") for u in uses):
+                out[idx] = max(_shape_bytes(u.shape) for u in uses)
+        sliced_params_memo[cname] = out
+        return out
+
+    def has_memory_op(cname: str) -> bool:
+        """True when the computation (recursively) holds an op that must
+        hit HBM even under TPU-grade fusion — pure elementwise fusions are
+        treated as glue absorbed by their neighbours."""
+        if cname in has_mem_memo:
+            return has_mem_memo[cname]
+        has_mem_memo[cname] = False  # cycle guard
+        comp = comps[cname]
+        found = False
+        for ins in comp.instrs:
+            if ins.opcode in ("dot", "convolution", "reduce", "scatter",
+                              "gather", "dynamic-update-slice", "sort",
+                              "reduce-window"):
+                found = True
+                break
+            for key in ("to_apply", "calls", "body"):
+                sub = ins.attrs.get(key)
+                if sub in comps and has_memory_op(sub):
+                    found = True
+                    break
+            if found:
+                break
+        has_mem_memo[cname] = found
+        return found
+
+    def comp_cost(cname: str) -> CostSummary:
+        if cname in memo:
+            return memo[cname]
+        comp = comps[cname]
+        s = CostSummary()
+
+        def charge(ins, amount):
+            s.bytes += amount
+            key = ins.opcode + ":" + ins.shape[:48]
+            s.by_key[key] = s.by_key.get(key, 0) + amount
+
+        for ins in comp.instrs:
+            oc = ins.opcode
+            if oc in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "after-all", "opt-barrier", "partition-id",
+                      "replica-id"):
+                continue
+            if oc == "while":
+                body = ins.attrs.get("body")
+                cond = ins.attrs.get("condition")
+                trips = _trip_count(comps[cond]) if cond in comps else 1
+                s.while_trips.append(trips)
+                for sub, mult in ((body, trips), (cond, trips)):
+                    if sub in comps:
+                        sub_s = comp_cost(sub)
+                        s.flops += sub_s.flops * mult
+                        s.bytes += sub_s.bytes * mult
+                        s.transcendentals += sub_s.transcendentals * mult
+                        for k, v in sub_s.collective_bytes.items():
+                            s.collective_bytes[k] = s.collective_bytes.get(k, 0) + v * mult
+                        for k, v in sub_s.collective_count.items():
+                            s.collective_count[k] = s.collective_count.get(k, 0) + v * mult
+                        for k, v in sub_s.by_key.items():
+                            s.by_key[k] = s.by_key.get(k, 0) + v * mult
+                continue
+            if oc in ("fusion", "call", "conditional", "map"):
+                # FLOPs/collectives of the body count; bytes do NOT — the
+                # fusion interior lives in registers/VMEM (that is what
+                # fusion means).  Only the fusion's own I/O touches HBM.
+                for key in ("to_apply", "calls"):
+                    sub = ins.attrs.get(key)
+                    if sub in comps:
+                        sub_s = comp_cost(sub)
+                        s.flops += sub_s.flops
+                        s.transcendentals += sub_s.transcendentals
+                        if oc == "call":  # outlined code: real materialization
+                            s.bytes += sub_s.bytes
+                            for k, v in sub_s.by_key.items():
+                                s.by_key[k] = s.by_key.get(k, 0) + v
+                        for k, v in sub_s.collective_bytes.items():
+                            s.collective_bytes[k] = s.collective_bytes.get(k, 0) + v
+                        for k, v in sub_s.collective_count.items():
+                            s.collective_count[k] = s.collective_count.get(k, 0) + v
+                sub_name = next((ins.attrs[k] for k in ("to_apply", "calls")
+                                 if ins.attrs.get(k) in comps), None)
+                do_charge = oc != "fusion" or (sub_name is not None
+                                               and has_memory_op(sub_name))
+                if do_charge:
+                    sliced = sliced_params(sub_name) if sub_name else {}
+                    # in-place scan-state update: a fusion rooted in a
+                    # dynamic-update-slice writes only the update slice —
+                    # charging the full (stacked-cache-sized) output
+                    # overstates decode traffic ~240x (measured).
+                    out_bytes = _shape_bytes(ins.shape)
+                    inplace = False
+                    if sub_name:
+                        sub = comps[sub_name]
+                        root = sub.by_name.get(sub.root or "")
+                        # resolve through dtype/layout wrappers (the CPU
+                        # backend wraps bf16 DUS in f32 converts)
+                        seen = 0
+                        while (root is not None and seen < 4 and root.opcode
+                               in ("convert", "bitcast", "copy", "reshape")
+                               and root.operands):
+                            root = sub.by_name.get(root.operands[0])
+                            seen += 1
+                        if root is not None and root.opcode in (
+                                "dynamic-update-slice", "scatter"):
+                            # update operand: DUS -> operands[1],
+                            # scatter -> operands[2] (updates)
+                            ui = 1 if root.opcode == "dynamic-update-slice" else 2
+                            upd = root.operands[ui] if len(root.operands) > ui else None
+                            upd_shape = sub.by_name[upd].shape if upd in sub.by_name else ins.shape
+                            out_bytes = 2 * _shape_bytes(upd_shape)
+                            inplace = True
+                    io = 0
+                    for i, o in enumerate(ins.operands):
+                        if o not in comp.by_name:
+                            continue
+                        full = _shape_bytes(comp.by_name[o].shape)
+                        if inplace and full >= _shape_bytes(ins.shape):
+                            continue  # aliased in-place buffer
+                        io += min(full, sliced[i]) if i in sliced else full
+                    charge(ins, io + out_bytes)
+                continue
+            base = next((c for c in _COLLECTIVES if oc.startswith(c)), None)
+            if base is not None:
+                if oc.endswith("-done"):
+                    continue
+                payload = sum(_shape_bytes(_operand_shape(comp, comps, o))
+                              for o in ins.operands if o in comp.by_name)
+                if payload == 0:
+                    payload = _shape_bytes(ins.shape)
+                s.collective_bytes[base] = s.collective_bytes.get(base, 0) + payload
+                s.collective_count[base] = s.collective_count.get(base, 0) + 1
+                charge(ins, payload + _shape_bytes(ins.shape))
+                continue
+            if oc == "dot":
+                out_elems = _shape_elems(ins.shape)
+                lhs_shape = _operand_shape(comp, comps, ins.operands[0]) if ins.operands else ""
+                ldims = _dims(lhs_shape)
+                contract = ins.attrs.get("lhs_contracting_dims", "")
+                k = 1
+                for ci in contract.split(","):
+                    if ci and int(ci) < len(ldims):
+                        k *= ldims[int(ci)]
+                s.flops += 2.0 * out_elems * k
+                io = sum(_shape_bytes(_operand_shape(comp, comps, o))
+                         for o in ins.operands if o in comp.by_name)
+                charge(ins, io + _shape_bytes(ins.shape))
+                continue
+            if oc == "convolution":
+                out_elems = _shape_elems(ins.shape)
+                rhs_shape = _operand_shape(comp, comps, ins.operands[1]) if len(ins.operands) > 1 else ""
+                k = max(_shape_elems(rhs_shape), 1)
+                out_feat = _dims(ins.shape)[-1] if _dims(ins.shape) else 1
+                s.flops += 2.0 * out_elems * (k / max(out_feat, 1))
+                charge(ins, _shape_bytes(ins.shape) * 3)
+                continue
+            # generic op
+            elems = _shape_elems(ins.shape)
+            if oc in _ELEMENTWISE_FLOP_OPS:
+                s.flops += elems
+                if oc in ("exponential", "log", "tanh", "rsqrt", "sqrt",
+                          "logistic", "cosine", "sine", "expm1", "log1p"):
+                    s.transcendentals += elems
+            elif oc in ("reduce", "reduce-window"):
+                in_elems = sum(_shape_elems(_operand_shape(comp, comps, o))
+                               for o in ins.operands[:1])
+                s.flops += in_elems
+            if oc in ("dynamic-slice", "slice", "gather"):
+                # only the slice moves, not the sliced-from buffer
+                charge(ins, 2 * _shape_bytes(ins.shape))
+            elif oc == "dynamic-update-slice":
+                upd = (_shape_bytes(_operand_shape(comp, comps, ins.operands[1]))
+                       if len(ins.operands) > 1 and ins.operands[1] in comp.by_name
+                       else _shape_bytes(ins.shape))
+                charge(ins, 2 * upd)
+            elif oc == "scatter":
+                # in-place semantics: traffic = updates (operand[2]) r/w
+                upd = (_shape_bytes(_operand_shape(comp, comps, ins.operands[2]))
+                       if len(ins.operands) > 2 and ins.operands[2] in comp.by_name
+                       else _shape_bytes(ins.shape))
+                charge(ins, 2 * upd)
+            elif oc in _MEMORY_OPS:
+                io = sum(_shape_bytes(_operand_shape(comp, comps, o))
+                         for o in ins.operands if o in comp.by_name)
+                charge(ins, io + _shape_bytes(ins.shape))
+        memo[cname] = s
+        return s
+
+    result = comp_cost(entry)
+    if debug_bytes is not None:
+        debug_bytes.update(result.by_key)
+    return result
+
+
+def roofline_terms(summary: CostSummary, *, chips: int,
+                   peak_flops: float = 197e12, hbm_bw: float = 819e9,
+                   link_bw: float = 50e9) -> Dict[str, float]:
+    """The three §Roofline terms.  Parsed HLO is per-device (post-SPMD), so
+    global = per_device * chips; the terms below are per the assignment's
+    formulas with HLO_* = global."""
+    flops_global = summary.flops * chips
+    bytes_global = summary.bytes * chips
+    coll_global = summary.total_collective_bytes * chips
+    return {
+        "hlo_flops_global": flops_global,
+        "hlo_bytes_global": bytes_global,
+        "collective_bytes_global": coll_global,
+        "compute_s": flops_global / (chips * peak_flops),
+        "memory_s": bytes_global / (chips * hbm_bw),
+        "collective_s": coll_global / (chips * link_bw),
+    }

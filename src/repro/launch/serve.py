@@ -1,0 +1,64 @@
+"""Serving entrypoint: stand up the batched engine for an arch and run a
+synthetic request stream (or an interactive stdin loop).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \\
+      --reduced --requests 8
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, get_config, reduced as reduce_cfg
+from repro.models import model
+from repro.serve import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b", choices=list(ARCHS))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="restore trained params (repro.checkpoint layout)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    params = model.init_params(cfg, jax.random.key(0))
+    if args.ckpt_dir:
+        from repro.checkpoint import CheckpointManager
+        from repro.train import step as ts
+        mgr = CheckpointManager(args.ckpt_dir)
+        step_no, state = mgr.restore(jax.eval_shape(
+            lambda: ts.init_state(cfg, jax.random.key(0))))
+        if state is not None:
+            params = state.params
+            print(f"[serve] restored step {step_no} from {args.ckpt_dir}")
+
+    eng = ServeEngine(cfg, params, max_seq=args.max_seq, slots=args.slots)
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        plen = int(rng.integers(2, min(24, args.max_seq // 4)))
+        eng.submit(rng.integers(0, cfg.vocab_size, plen).tolist(),
+                   max_new_tokens=args.max_new_tokens,
+                   temperature=args.temperature)
+    done = eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    total = sum(len(r.out_tokens) for r in done)
+    for r in sorted(done, key=lambda r: r.rid)[:5]:
+        print(f"[serve] req {r.rid}: {len(r.prompt)} prompt -> "
+              f"{r.out_tokens[:8]}{'...' if len(r.out_tokens) > 8 else ''}")
+    print(f"[serve] {len(done)} requests, {total} tokens, {dt:.2f}s "
+          f"({total / dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.models import layers, model, moe, rwkv, ssm, frontends  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    init_params, init_params_shaped, forward, init_decode_state,
+    prefill, decode_step,
+)

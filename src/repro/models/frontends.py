@@ -1,0 +1,33 @@
+"""Modality-frontend STUBS for the [audio]/[vlm] architectures.
+
+Per the assignment, the transformer BACKBONE is what is modeled; the
+frontend only has to provide precomputed frame/patch embeddings with the
+right shapes.  ``input_specs()`` in the launcher calls these to build
+ShapeDtypeStruct stand-ins; examples/tests call ``synthetic_embeddings``
+for actual arrays (a fixed random projection of token ids, deterministic).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def frontend_kind(cfg: ModelConfig) -> str:
+    return cfg.frontend  # 'none' | 'audio' | 'vlm'
+
+
+def embedding_spec(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct for the precomputed frontend embeddings."""
+    return jax.ShapeDtypeStruct((batch, seq, cfg.d_model), dtype)
+
+
+def synthetic_embeddings(cfg: ModelConfig, tokens: jax.Array,
+                         dtype=jnp.bfloat16) -> jax.Array:
+    """Deterministic stand-in for EnCodec frames / ViT patches: embed token
+    ids through a fixed random table (seeded by arch name)."""
+    seed = abs(hash(cfg.name)) % (2 ** 31)
+    table = jax.random.normal(jax.random.key(seed),
+                              (cfg.vocab_size, cfg.d_model), jnp.float32)
+    return jnp.take(table, tokens, axis=0).astype(dtype) * cfg.d_model ** -0.5

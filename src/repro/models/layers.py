@@ -1,0 +1,225 @@
+"""Shared building blocks: linear, RMSNorm, RoPE-GQA attention, SwiGLU FFN.
+
+Parameters are plain nested dicts of jnp arrays (no framework).  Compute
+dtype is bf16 with fp32 accumulation (matching the paper's BF16 MAC units);
+kernel dispatch goes through ``repro.kernels.ops``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+
+
+def _split(rng, n):
+    return jax.random.split(rng, n)
+
+
+def linear_init(rng, d_in: int, d_out: int, *, bias: bool = False,
+                dtype=jnp.bfloat16, scale: Optional[float] = None):
+    w_rng, _ = _split(rng, 2)
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": (jax.random.normal(w_rng, (d_in, d_out), jnp.float32) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = jnp.einsum("...k,kn->...n", x, p["w"].astype(x.dtype))
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.bfloat16):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    return ops.rmsnorm(x, p["scale"], eps=eps)
+
+
+def embed_init(rng, vocab: int, d: int, dtype=jnp.bfloat16):
+    return {"table": (jax.random.normal(rng, (vocab, d), jnp.float32) * d ** -0.5).astype(dtype)}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA + RoPE)
+# ---------------------------------------------------------------------------
+
+def attention_init(rng, cfg: ModelConfig, dtype=jnp.bfloat16):
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    r = _split(rng, 4)
+    return {
+        "wq": linear_init(r[0], d, h * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": linear_init(r[1], d, kvh * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": linear_init(r[2], d, kvh * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": linear_init(r[3], h * hd, d, dtype=dtype),
+    }
+
+
+def attention(p, x, positions, cfg: ModelConfig, *,
+              lengths=None, window=None):
+    """Full-sequence attention (train / prefill).  x [B,S,d] -> [B,S,d]."""
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = linear(p["wq"], x).reshape(b, s, h, hd)
+    k = linear(p["wk"], x).reshape(b, s, kvh, hd)
+    v = linear(p["wv"], x).reshape(b, s, kvh, hd)
+    q = ops.apply_rope(q, positions, theta=cfg.rope_theta)
+    k = ops.apply_rope(k, positions, theta=cfg.rope_theta)
+    o = ops.flash_attention(q, k, v, causal=True, lengths=lengths,
+                            window=window)
+    return linear(p["wo"], o.reshape(b, s, h * hd))
+
+
+def attention_prefill(p, x, positions, cfg: ModelConfig, cache, *,
+                      lengths=None, window=None):
+    """Prefill: run full attention AND fill the KV cache slab [0, S)."""
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = linear(p["wq"], x).reshape(b, s, h, hd)
+    k = linear(p["wk"], x).reshape(b, s, kvh, hd)
+    v = linear(p["wv"], x).reshape(b, s, kvh, hd)
+    q = ops.apply_rope(q, positions, theta=cfg.rope_theta)
+    k = ops.apply_rope(k, positions, theta=cfg.rope_theta)
+    cache = {
+        "k": lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, 0, 0, 0)),
+        "v": lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, 0, 0, 0)),
+    }
+    o = ops.flash_attention(q, k, v, causal=True, lengths=lengths,
+                            window=window)
+    return linear(p["wo"], o.reshape(b, s, h * hd)), cache
+
+
+def attention_decode(p, x, cfg: ModelConfig, cache, lengths, *, window=None):
+    """One-token decode. x [B,1,d]; lengths[B] = tokens already in cache.
+
+    Returns (y [B,1,d], new_cache).  The new K/V are written at position
+    ``lengths`` per sequence; attention spans [0, lengths] inclusive.
+
+    With ``shardhints.set_decode_attn`` active, the KV cache is
+    sequence-sharded over the TP axis and per-shard flash-decoding
+    partials (acc, m, l) are combined by the CompAir-NoC tree softmax
+    (paper Fig. 10) — §Perf iteration 3.
+    """
+    b = x.shape[0]
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = linear(p["wq"], x).reshape(b, 1, h, hd)
+    k = linear(p["wk"], x).reshape(b, 1, kvh, hd)
+    v = linear(p["wv"], x).reshape(b, 1, kvh, hd)
+    pos = lengths.astype(jnp.int32)[:, None]                 # [B,1]
+    q = ops.apply_rope(q, pos, theta=cfg.rope_theta)
+    k = ops.apply_rope(k, pos, theta=cfg.rope_theta)
+    bidx = jnp.arange(b)
+    ck = cache["k"].at[bidx, lengths].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, lengths].set(v[:, 0].astype(cache["v"].dtype))
+
+    from repro.core import shardhints
+    da = shardhints.get_decode_attn()
+    if da is not None:
+        o = _decode_attn_seqsharded(q[:, 0], ck, cv, lengths + 1, da)
+    else:
+        o = ops.decode_attention(q[:, 0], ck, cv, lengths=lengths + 1)
+    y = linear(p["wo"], o.reshape(b, 1, h * hd) if o.ndim == 3 else o.reshape(b, h * hd))
+    return y.reshape(b, 1, -1), {"k": ck, "v": cv}
+
+
+def attention_decode_stacked(p, x, cfg: ModelConfig, ck_all, cv_all,
+                             layer_idx, lengths, *, window=None):
+    """Decode with the FULL stacked cache carried through the layer scan
+    (§Perf iteration: cache-as-scan-ys rewrites whole slabs every step —
+    measured 810 GiB/step at qwen2-72b decode_32k; carrying the stack and
+    scattering only the new KV row leaves reads as the only slab traffic).
+
+    ck_all/cv_all: [L, B, Smax, KvH, hd]; layer_idx: scalar int32.
+    Returns (y [B,1,d], ck_all, cv_all)."""
+    b = x.shape[0]
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = linear(p["wq"], x).reshape(b, 1, h, hd)
+    k = linear(p["wk"], x).reshape(b, 1, kvh, hd)
+    v = linear(p["wv"], x).reshape(b, 1, kvh, hd)
+    pos = lengths.astype(jnp.int32)[:, None]
+    q = ops.apply_rope(q, pos, theta=cfg.rope_theta)
+    k = ops.apply_rope(k, pos, theta=cfg.rope_theta)
+    bidx = jnp.arange(b)
+    li = jnp.broadcast_to(layer_idx, (b,))
+    ck_all = ck_all.at[li, bidx, lengths].set(k[:, 0].astype(ck_all.dtype))
+    cv_all = cv_all.at[li, bidx, lengths].set(v[:, 0].astype(cv_all.dtype))
+    ck = lax.dynamic_index_in_dim(ck_all, layer_idx, 0, keepdims=False)
+    cv = lax.dynamic_index_in_dim(cv_all, layer_idx, 0, keepdims=False)
+
+    from repro.core import shardhints
+    da = shardhints.get_decode_attn()
+    if da is not None:
+        o = _decode_attn_seqsharded(q[:, 0], ck, cv, lengths + 1, da)
+    else:
+        o = ops.decode_attention(q[:, 0], ck, cv, lengths=lengths + 1)
+    y = linear(p["wo"], o.reshape(b, h * hd))
+    return y.reshape(b, 1, -1), ck_all, cv_all
+
+
+def _decode_attn_seqsharded(q, ck, cv, lens, da):
+    """flash-decoding over a sequence-sharded KV cache: local partials +
+    in-transit (butterfly) softmax combine over the seq axis."""
+    import jax.lax as lax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import noc
+    mesh, dp_axes, seq_ax = da
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = tuple(a for a in dp_axes if a in axis_sizes) or None
+
+    def body(qv, ckv, cvv, ln):
+        s_loc = ckv.shape[1]
+        off = lax.axis_index(seq_ax) * s_loc
+        acc, m, l = ops.decode_attention_partial(qv, ckv, cvv, lengths=ln,
+                                                 kv_offset=off)
+        return noc.tree_softmax_combine(acc, m, l, seq_ax).astype(qv.dtype)
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dp, None, None), P(dp, seq_ax, None, None),
+                  P(dp, seq_ax, None, None), P(dp)),
+        out_specs=P(dp, None, None), check_vma=False,
+    )(q, ck, cv, lens)
+
+
+def attn_cache_init(cfg: ModelConfig, batch: int, max_seq: int,
+                    dtype=jnp.bfloat16, n_slots: int = 1):
+    """KV cache for one attention application; [B, Smax, KvH, Dh]."""
+    shape = (batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    if n_slots > 1:
+        shape = (n_slots,) + shape
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU FFN
+# ---------------------------------------------------------------------------
+
+def ffn_init(rng, d: int, d_ff: int, dtype=jnp.bfloat16):
+    r = _split(rng, 3)
+    return {
+        "gate": linear_init(r[0], d, d_ff, dtype=dtype),
+        "up": linear_init(r[1], d, d_ff, dtype=dtype),
+        "down": linear_init(r[2], d_ff, d, dtype=dtype),
+    }
+
+
+def ffn(p, x):
+    g = linear(p["gate"], x)
+    u = linear(p["up"], x)
+    return linear(p["down"], ops.silu_mul(g, u))

@@ -1,0 +1,431 @@
+"""Unified decoder LM over all assigned families.
+
+Scan-over-layers with stacked ``[L, ...]`` parameter pytrees keeps HLO size
+(and 512-device dry-run compile time) bounded.  The hybrid family (Zamba2)
+scans over repeating groups of ``attn_every`` Mamba2 layers followed by one
+*shared-weight* attention block (per-application KV caches), plus an
+un-grouped tail.
+
+Public API (all functional):
+    init_params(cfg, rng)             -> params pytree
+    forward(cfg, params, ...)         -> logits [B, S, V] (train / scoring)
+    init_decode_state(cfg, batch, max_seq) -> cache/state pytree
+    prefill(cfg, params, state, ...)  -> (logits_last [B, V], state)
+    decode_step(cfg, params, state, tokens, lengths) -> (logits [B, V], state)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core.shardhints import hint
+from repro.kernels import ops
+from repro.models import layers, moe, rwkv, ssm
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_init(cfg: ModelConfig, rng, dtype):
+    """One mixing block's params (without the hybrid shared block)."""
+    r = jax.random.split(rng, 4)
+    if cfg.family in ("dense", "moe"):
+        p = {
+            "ln1": layers.rmsnorm_init(cfg.d_model, dtype),
+            "attn": layers.attention_init(r[0], cfg, dtype),
+            "ln2": layers.rmsnorm_init(cfg.d_model, dtype),
+        }
+        if cfg.family == "moe":
+            p["moe"] = moe.moe_init(r[1], cfg, dtype)
+        else:
+            p["ffn"] = layers.ffn_init(r[1], cfg.d_model, cfg.d_ff, dtype)
+        return p
+    if cfg.rwkv:
+        return {
+            "ln1": layers.rmsnorm_init(cfg.d_model, dtype),
+            "ln2": layers.rmsnorm_init(cfg.d_model, dtype),
+            **rwkv.rwkv_init(r[0], cfg, dtype),
+        }
+    # mamba layer (ssm / hybrid)
+    return {
+        "ln1": layers.rmsnorm_init(cfg.d_model, dtype),
+        "mamba": ssm.mamba_init(r[0], cfg, dtype),
+    }
+
+
+def _stack_init(cfg: ModelConfig, rng, n: int, dtype):
+    rngs = jax.random.split(rng, max(n, 1))
+    return jax.vmap(lambda r: _layer_init(cfg, r, dtype))(rngs[:n]) if n else None
+
+
+def hybrid_layout(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(n_groups, group_size, n_tail) for the hybrid family."""
+    k = cfg.attn_every
+    g = cfg.n_layers // k
+    tail = cfg.n_layers - g * k
+    return g, k, tail
+
+
+def init_params(cfg: ModelConfig, rng, dtype=jnp.bfloat16):
+    r = jax.random.split(rng, 6)
+    params = {"embed": layers.embed_init(r[0], cfg.vocab_size, cfg.d_model, dtype),
+              "final_norm": layers.rmsnorm_init(cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.linear_init(r[1], cfg.d_model,
+                                               cfg.vocab_size, dtype=dtype)
+    if cfg.family == "hybrid":
+        g, k, tail = hybrid_layout(cfg)
+        flat = _stack_init(cfg, r[2], g * k, dtype)
+        params["groups"] = jax.tree.map(
+            lambda a: a.reshape((g, k) + a.shape[1:]), flat)
+        params["tail"] = _stack_init(cfg, r[3], tail, dtype)
+        params["shared"] = {
+            "ln1": layers.rmsnorm_init(cfg.d_model, dtype),
+            "attn": layers.attention_init(r[4], cfg, dtype),
+            "ln2": layers.rmsnorm_init(cfg.d_model, dtype),
+            "ffn": layers.ffn_init(r[5], cfg.d_model, cfg.d_ff, dtype),
+        }
+    else:
+        params["layers"] = _stack_init(cfg, r[2], cfg.n_layers, dtype)
+    return params
+
+
+def init_params_shaped(cfg: ModelConfig, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree (no allocation) — dry-run parameter stand-ins."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg, dtype=dtype),
+        jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# blocks (full-sequence)
+# ---------------------------------------------------------------------------
+
+def _block_apply(cfg: ModelConfig, lp, x, positions, lengths, window=None):
+    """Pre-norm residual block -> (x', aux_losses)."""
+    aux = jnp.zeros((2,), jnp.float32)  # (lb_loss, z_loss)
+    if cfg.family in ("dense", "moe"):
+        x = x + layers.attention(lp["attn"], layers.rmsnorm(lp["ln1"], x, cfg.norm_eps),
+                                 positions, cfg, lengths=lengths, window=window)
+        h = layers.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if cfg.family == "moe":
+            y, a = moe.moe_apply(lp["moe"], h, cfg)
+            aux = aux + jnp.stack([a["lb_loss"], a["z_loss"]])
+        else:
+            y = layers.ffn(lp["ffn"], h)
+        return x + y, aux
+    if cfg.rwkv:
+        x = x + rwkv.time_mix(lp["tm"], layers.rmsnorm(lp["ln1"], x, cfg.norm_eps), cfg)
+        x = x + rwkv.channel_mix(lp["cm"], layers.rmsnorm(lp["ln2"], x, cfg.norm_eps))
+        return x, aux
+    # mamba
+    x = x + ssm.mamba_apply(lp["mamba"], layers.rmsnorm(lp["ln1"], x, cfg.norm_eps), cfg)
+    return x, aux
+
+
+def _shared_block(cfg: ModelConfig, sp, x, positions, lengths, window=None):
+    x = x + layers.attention(sp["attn"], layers.rmsnorm(sp["ln1"], x, cfg.norm_eps),
+                             positions, cfg, lengths=lengths, window=window)
+    x = x + layers.ffn(sp["ffn"], layers.rmsnorm(sp["ln2"], x, cfg.norm_eps))
+    return x
+
+
+def _logits(cfg: ModelConfig, params, x):
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        y = jnp.einsum("...d,vd->...v", x, params["embed"]["table"].astype(x.dtype))
+    else:
+        y = layers.linear(params["lm_head"], x)
+    return hint(y, "logits")
+
+
+def forward(cfg: ModelConfig, params, *, tokens=None, embeds=None,
+            positions=None, lengths=None, train: bool = False,
+            attn_window: Optional[int] = None, remat: bool = True):
+    """Full-sequence forward -> (logits [B,S,V], aux [2])."""
+    x = embeds if embeds is not None else layers.embed(params["embed"], tokens)
+    x = hint(x, "activation")
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(xc, lp):
+        y, aux = _block_apply(cfg, lp, xc, positions, lengths, attn_window)
+        return hint(y, "activation"), aux
+
+    if train and remat:
+        body = jax.checkpoint(body)
+
+    if cfg.family == "hybrid":
+        g, k, tail = hybrid_layout(cfg)
+        sp = params["shared"]
+
+        def group_body(xc, gp):
+            xc, auxs = lax.scan(body, xc, gp)
+            xc = _shared_block(cfg, sp, xc, positions, lengths, attn_window)
+            return hint(xc, "activation"), auxs.sum(0)
+
+        if train and remat:
+            group_body = jax.checkpoint(group_body)
+        x, aux_g = lax.scan(group_body, x, params["groups"])
+        aux = aux_g.sum(0)
+        if tail:
+            x, aux_t = lax.scan(body, x, params["tail"])
+            aux = aux + aux_t.sum(0)
+    else:
+        x, auxs = lax.scan(body, x, params["layers"])
+        aux = auxs.sum(0)
+    return _logits(cfg, params, x), aux
+
+
+# ---------------------------------------------------------------------------
+# decode state
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int,
+                      dtype=jnp.bfloat16):
+    if cfg.family in ("dense", "moe"):
+        return {"attn": layers.attn_cache_init(cfg, batch, max_seq, dtype,
+                                               n_slots=cfg.n_layers)}
+    if cfg.rwkv:
+        tm_shift, wkv, cm_shift = rwkv.rwkv_state_init(cfg, batch, cfg.n_layers, dtype)
+        return {"tm_shift": tm_shift, "wkv": wkv, "cm_shift": cm_shift}
+    if cfg.family == "ssm":
+        conv, h = ssm.mamba_state_init(cfg, batch, cfg.n_layers, dtype)
+        return {"conv": conv, "ssm": h}
+    # hybrid
+    g, k, tail = hybrid_layout(cfg)
+    conv_g, h_g = ssm.mamba_state_init(cfg, batch, g * k, dtype)
+    conv_t, h_t = ssm.mamba_state_init(cfg, batch, max(tail, 1), dtype)
+    return {
+        "conv_g": jax.tree.map(lambda a: a.reshape((g, k) + a.shape[1:]), conv_g),
+        "ssm_g": jax.tree.map(lambda a: a.reshape((g, k) + a.shape[1:]), h_g),
+        "conv_t": conv_t, "ssm_t": h_t,
+        "attn": layers.attn_cache_init(cfg, batch, max_seq, dtype, n_slots=g),
+    }
+
+
+# ---------------------------------------------------------------------------
+# prefill (fills caches, returns last-position logits)
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params, state, *, tokens=None, embeds=None,
+            lengths=None, attn_window: Optional[int] = None):
+    x = embeds if embeds is not None else layers.embed(params["embed"], tokens)
+    x = hint(x, "activation")
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+
+    if cfg.family in ("dense", "moe"):
+        def body(xc, xs):
+            lp, ck, cv = xs
+            h = layers.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
+            y, cache = layers.attention_prefill(lp["attn"], h, positions, cfg,
+                                                {"k": ck, "v": cv},
+                                                lengths=lengths, window=attn_window)
+            xc = xc + y
+            h2 = layers.rmsnorm(lp["ln2"], xc, cfg.norm_eps)
+            if cfg.family == "moe":
+                y2, _ = moe.moe_apply(lp["moe"], h2, cfg)
+            else:
+                y2 = layers.ffn(lp["ffn"], h2)
+            return hint(xc + y2, "activation"), (cache["k"], cache["v"])
+
+        x, (ck, cv) = lax.scan(body, x, (params["layers"],
+                                         state["attn"]["k"], state["attn"]["v"]))
+        state = {"attn": {"k": ck, "v": cv}}
+    elif cfg.rwkv:
+        def body(xc, xs):
+            lp, _, _, _ = xs
+            h = layers.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
+            y, (tm_shift, wkv) = rwkv.time_mix(lp["tm"], h, cfg, return_state=True)
+            xc = xc + y
+            h2 = layers.rmsnorm(lp["ln2"], xc, cfg.norm_eps)
+            y2, cm_shift = rwkv.channel_mix(lp["cm"], h2, return_state=True)
+            return hint(xc + y2, "activation"), (tm_shift, wkv, cm_shift)
+
+        x, (tm_shift, wkv, cm_shift) = lax.scan(
+            body, x, (params["layers"], state["tm_shift"], state["wkv"],
+                      state["cm_shift"]))
+        state = {"tm_shift": tm_shift, "wkv": wkv, "cm_shift": cm_shift}
+    elif cfg.family == "ssm":
+        def body(xc, xs):
+            lp, _, _ = xs
+            h = layers.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
+            y, (conv, hf) = ssm.mamba_apply(lp["mamba"], h, cfg, return_state=True)
+            return hint(xc + y, "activation"), (conv, hf)
+
+        x, (conv, hf) = lax.scan(body, x, (params["layers"], state["conv"],
+                                           state["ssm"]))
+        state = {"conv": conv, "ssm": hf}
+    else:  # hybrid
+        g, k, tail = hybrid_layout(cfg)
+        sp = params["shared"]
+
+        def mamba_body(xc, xs):
+            lp, _, _ = xs
+            h = layers.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
+            y, (conv, hf) = ssm.mamba_apply(lp["mamba"], h, cfg, return_state=True)
+            return hint(xc + y, "activation"), (conv, hf)
+
+        def group_body(xc, xs):
+            gp, _, _, ck, cv = xs
+            xc, (conv, hf) = lax.scan(mamba_body, xc, (gp, xs[1], xs[2]))
+            h = layers.rmsnorm(sp["ln1"], xc, cfg.norm_eps)
+            y, cache = layers.attention_prefill(sp["attn"], h, positions, cfg,
+                                                {"k": ck, "v": cv},
+                                                lengths=lengths, window=attn_window)
+            xc = xc + y
+            xc = xc + layers.ffn(sp["ffn"], layers.rmsnorm(sp["ln2"], xc, cfg.norm_eps))
+            return hint(xc, "activation"), (conv, hf, cache["k"], cache["v"])
+
+        x, (conv_g, ssm_g, ck, cv) = lax.scan(
+            group_body, x, (params["groups"], state["conv_g"], state["ssm_g"],
+                            state["attn"]["k"], state["attn"]["v"]))
+        new_state = {"conv_g": conv_g, "ssm_g": ssm_g,
+                     "attn": {"k": ck, "v": cv}}
+        if tail:
+            x, (conv_t, ssm_t) = lax.scan(mamba_body, x,
+                                          (params["tail"], state["conv_t"],
+                                           state["ssm_t"]))
+            new_state.update(conv_t=conv_t, ssm_t=ssm_t)
+        else:
+            new_state.update(conv_t=state["conv_t"], ssm_t=state["ssm_t"])
+        state = new_state
+
+    logits = _logits(cfg, params, _last_token(x, lengths))
+    return logits, state
+
+
+def _last_token(x, lengths):
+    b = x.shape[0]
+    idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1)
+    return x[jnp.arange(b), idx][:, None, :]  # [B,1,d]
+
+
+# ---------------------------------------------------------------------------
+# decode step (one new token per sequence)
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, params, state, tokens, lengths, *,
+                embeds=None, attn_window: Optional[int] = None):
+    """tokens [B] int32 (or embeds [B, d]); lengths [B] = cache fill level.
+
+    Returns (logits [B, V], new_state)."""
+    if embeds is not None:
+        x = embeds[:, None, :]
+    else:
+        x = layers.embed(params["embed"], tokens[:, None])
+    b = x.shape[0]
+
+    import os as _os
+    if cfg.family in ("dense", "moe") and _os.environ.get("REPRO_CACHE_XS"):
+        # baseline (pre-§Perf) path: cache as scan xs/ys — rewrites whole
+        # slabs every decode step; kept for A/B reproduction only
+        def body(xc, xs):
+            lp, ck, cv = xs
+            h = layers.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
+            y, cache = layers.attention_decode(lp["attn"], h, cfg,
+                                               {"k": ck, "v": cv}, lengths,
+                                               window=attn_window)
+            xc = xc + y
+            h2 = layers.rmsnorm(lp["ln2"], xc, cfg.norm_eps)
+            if cfg.family == "moe":
+                y2, _ = moe.moe_apply(lp["moe"], h2, cfg)
+            else:
+                y2 = layers.ffn(lp["ffn"], h2)
+            return hint(xc + y2, "activation"), (cache["k"], cache["v"])
+
+        x, (ck, cv) = lax.scan(body, x, (params["layers"],
+                                         state["attn"]["k"], state["attn"]["v"]))
+        state = {"attn": {"k": ck, "v": cv}}
+    elif cfg.family in ("dense", "moe"):
+        # cache carried through the scan (not xs/ys): only the new KV row
+        # is written per layer — see layers.attention_decode_stacked
+        def body(carry, xs):
+            xc, ck_all, cv_all = carry
+            lp, li = xs
+            h = layers.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
+            y, ck_all, cv_all = layers.attention_decode_stacked(
+                lp["attn"], h, cfg, ck_all, cv_all, li, lengths,
+                window=attn_window)
+            xc = xc + y
+            h2 = layers.rmsnorm(lp["ln2"], xc, cfg.norm_eps)
+            if cfg.family == "moe":
+                y2, _ = moe.moe_apply(lp["moe"], h2, cfg)
+            else:
+                y2 = layers.ffn(lp["ffn"], h2)
+            return (hint(xc + y2, "activation"), ck_all, cv_all), None
+
+        (x, ck, cv), _ = lax.scan(
+            body, (x, state["attn"]["k"], state["attn"]["v"]),
+            (params["layers"], jnp.arange(cfg.n_layers)))
+        state = {"attn": {"k": ck, "v": cv}}
+    elif cfg.rwkv:
+        def body(xc, xs):
+            lp, tms, wkv, cms = xs
+            h = layers.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
+            y, (tms2, wkv2) = rwkv.time_mix_step(lp["tm"], h, cfg, (tms, wkv))
+            xc = xc + y
+            h2 = layers.rmsnorm(lp["ln2"], xc, cfg.norm_eps)
+            y2, cms2 = rwkv.channel_mix_step(lp["cm"], h2, cms)
+            return hint(xc + y2, "activation"), (tms2, wkv2, cms2)
+
+        x, (tms, wkv, cms) = lax.scan(body, x, (params["layers"],
+                                                state["tm_shift"], state["wkv"],
+                                                state["cm_shift"]))
+        state = {"tm_shift": tms, "wkv": wkv, "cm_shift": cms}
+    elif cfg.family == "ssm":
+        def body(xc, xs):
+            lp, conv, h = xs
+            hh = layers.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
+            y, (conv2, h2) = ssm.mamba_decode_step(lp["mamba"], hh, cfg, (conv, h))
+            return hint(xc + y, "activation"), (conv2, h2)
+
+        x, (conv, h) = lax.scan(body, x, (params["layers"], state["conv"],
+                                          state["ssm"]))
+        state = {"conv": conv, "ssm": h}
+    else:  # hybrid
+        g, k, tail = hybrid_layout(cfg)
+        sp = params["shared"]
+
+        def mamba_body(xc, xs):
+            lp, conv, h = xs
+            hh = layers.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
+            y, (conv2, h2) = ssm.mamba_decode_step(lp["mamba"], hh, cfg, (conv, h))
+            return hint(xc + y, "activation"), (conv2, h2)
+
+        def group_body(xc, xs):
+            gp, conv, h, ck, cv = xs
+            xc, (conv2, h2) = lax.scan(mamba_body, xc, (gp, conv, h))
+            hh = layers.rmsnorm(sp["ln1"], xc, cfg.norm_eps)
+            y, cache = layers.attention_decode(sp["attn"], hh, cfg,
+                                               {"k": ck, "v": cv}, lengths,
+                                               window=attn_window)
+            xc = xc + y
+            xc = xc + layers.ffn(sp["ffn"], layers.rmsnorm(sp["ln2"], xc, cfg.norm_eps))
+            return hint(xc, "activation"), (conv2, h2, cache["k"], cache["v"])
+
+        x, (conv_g, ssm_g, ck, cv) = lax.scan(
+            group_body, x, (params["groups"], state["conv_g"], state["ssm_g"],
+                            state["attn"]["k"], state["attn"]["v"]))
+        new_state = {"conv_g": conv_g, "ssm_g": ssm_g,
+                     "attn": {"k": ck, "v": cv}}
+        if tail:
+            x, (conv_t, ssm_t) = lax.scan(mamba_body, x,
+                                          (params["tail"], state["conv_t"],
+                                           state["ssm_t"]))
+            new_state.update(conv_t=conv_t, ssm_t=ssm_t)
+        else:
+            new_state.update(conv_t=state["conv_t"], ssm_t=state["ssm_t"])
+        state = new_state
+
+    return _logits(cfg, params, x)[:, 0], state

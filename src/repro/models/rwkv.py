@@ -1,0 +1,150 @@
+"""RWKV-6 "Finch" block: time-mix (wkv6) + channel-mix.
+
+Faithful to the v6 defining features: token-shift lerp and the
+*data-dependent* per-channel decay w_t produced by a low-rank (LoRA)
+projection, w_t = exp(-exp(w0 + tanh(x W_a) W_b)).  Simplifications vs the
+released model (documented in DESIGN.md): static token-shift mix ratios
+(v6 uses a second data-dependent lerp) and per-head RMSNorm instead of
+GroupNorm.  The wkv recurrence itself is exact (kernels/ref.py oracle).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers
+
+
+def rwkv_init(rng, cfg: ModelConfig, dtype=jnp.bfloat16):
+    d, hd = cfg.d_model, cfg.rwkv_head_dim
+    h = cfg.rwkv_heads
+    lora = cfg.rwkv_lora
+    r = jax.random.split(rng, 10)
+    return {
+        "tm": {  # time mix
+            "mix": (0.5 * jnp.ones((5, d))).astype(dtype),   # r,k,v,w,g lerp
+            "wr": layers.linear_init(r[0], d, d, dtype=dtype),
+            "wk": layers.linear_init(r[1], d, d, dtype=dtype),
+            "wv": layers.linear_init(r[2], d, d, dtype=dtype),
+            "wg": layers.linear_init(r[3], d, d, dtype=dtype),
+            "wo": layers.linear_init(r[4], d, d, dtype=dtype),
+            "w0": jnp.full((d,), -5.0, jnp.float32),         # base decay
+            "w_a": (jax.random.normal(r[5], (d, lora), jnp.float32) * d ** -0.5
+                    ).astype(dtype),
+            "w_b": jnp.zeros((lora, d), dtype),
+            "u": (jax.random.normal(r[6], (h, hd), jnp.float32) * 0.1
+                  ).astype(jnp.float32),
+            "ln": layers.rmsnorm_init(d, dtype),
+        },
+        "cm": {  # channel mix
+            "mix": (0.5 * jnp.ones((2, d))).astype(dtype),   # r,k lerp
+            "wk": layers.linear_init(r[7], d, cfg.d_ff, dtype=dtype),
+            "wv": layers.linear_init(r[8], cfg.d_ff, d, dtype=dtype),
+            "wr": layers.linear_init(r[9], d, d, dtype=dtype),
+        },
+    }
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros / carried state at t=0).
+
+    Returns (shifted, new_last)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    shifted = jnp.concatenate([last, x[:, :-1]], axis=1)
+    return shifted, x[:, -1:]
+
+
+def _decay(tm, xw):
+    """Data-dependent decay w_t in (0,1): exp(-exp(w0 + tanh(xw Wa) Wb))."""
+    lora = jnp.tanh(xw.astype(jnp.float32) @ tm["w_a"].astype(jnp.float32))
+    logit = tm["w0"] + lora @ tm["w_b"].astype(jnp.float32)
+    return jnp.exp(-jnp.exp(jnp.clip(logit, -12.0, 4.0)))
+
+
+def time_mix(tm, x, cfg: ModelConfig, *, shift_state=None, wkv_state=None,
+             return_state: bool = False):
+    b, s, d = x.shape
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    prev, new_shift = _shift(x, shift_state)
+    mix = tm["mix"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x * mix[i] + prev * (1 - mix[i]) for i in range(5))
+    r = layers.linear(tm["wr"], xr).reshape(b, s, h, hd)
+    k = layers.linear(tm["wk"], xk).reshape(b, s, h, hd)
+    v = layers.linear(tm["wv"], xv).reshape(b, s, h, hd)
+    g = layers.linear(tm["wg"], xg)
+    w = _decay(tm, xw).reshape(b, s, h, hd)
+    # §Perf it-6 (REFUTED, kept as a note): hinting r/k/v/w replicated over
+    # the TP axis before the scan does NOT remove the per-chunk partial-sum
+    # all-reduces (8.5k ARs measured) — they originate inside the scan body
+    # where a boundary constraint cannot pin shardings; fixing this needs
+    # constraints inside the chunk step (or the Pallas kernel, which is
+    # per-shard by construction).  See EXPERIMENTS.md §Perf cell 1.
+    if wkv_state is None and not return_state:
+        o, sf = ops.rwkv6_scan(r, k, v, w.astype(jnp.float32), tm["u"])
+    else:
+        o, sf = ops.rwkv6_scan(r, k, v, w.astype(jnp.float32), tm["u"],
+                               s0=wkv_state)
+    o = o.reshape(b, s, d)
+    o = layers.rmsnorm(tm["ln"], o, cfg.norm_eps) * ops.silu(g)
+    out = layers.linear(tm["wo"], o)
+    if return_state:
+        return out, (new_shift, sf)
+    return out
+
+
+def time_mix_step(tm, x, cfg: ModelConfig, state):
+    """One-token step. x [B,1,d]; state = (last_x [B,1,d], S [B,H,D,D])."""
+    shift_state, S = state
+    b, _, d = x.shape
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    prev = shift_state
+    mix = tm["mix"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x * mix[i] + prev * (1 - mix[i]) for i in range(5))
+    r = layers.linear(tm["wr"], xr).reshape(b, h, hd)
+    k = layers.linear(tm["wk"], xk).reshape(b, h, hd)
+    v = layers.linear(tm["wv"], xv).reshape(b, h, hd)
+    g = layers.linear(tm["wg"], xg)
+    w = _decay(tm, xw).reshape(b, h, hd)
+    o, Snew = ops.rwkv6_step(r, k, v, w, tm["u"], S)
+    o = o.reshape(b, 1, d)
+    o = layers.rmsnorm(tm["ln"], o, cfg.norm_eps) * ops.silu(g)
+    return layers.linear(tm["wo"], o), (x, Snew)
+
+
+def channel_mix(cm, x, *, shift_state=None, return_state: bool = False):
+    prev, new_shift = _shift(x, shift_state)
+    mix = cm["mix"].astype(x.dtype)
+    xr = x * mix[0] + prev * (1 - mix[0])
+    xk = x * mix[1] + prev * (1 - mix[1])
+    r = jax.nn.sigmoid(layers.linear(cm["wr"], xr).astype(jnp.float32))
+    k = layers.linear(cm["wk"], xk)
+    kk = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    out = (r * layers.linear(cm["wv"], kk).astype(jnp.float32)).astype(x.dtype)
+    if return_state:
+        return out, new_shift
+    return out
+
+
+def channel_mix_step(cm, x, state):
+    prev = state
+    mix = cm["mix"].astype(x.dtype)
+    xr = x * mix[0] + prev * (1 - mix[0])
+    xk = x * mix[1] + prev * (1 - mix[1])
+    r = jax.nn.sigmoid(layers.linear(cm["wr"], xr).astype(jnp.float32))
+    k = layers.linear(cm["wk"], xk)
+    kk = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    out = (r * layers.linear(cm["wv"], kk).astype(jnp.float32)).astype(x.dtype)
+    return out, x
+
+
+def rwkv_state_init(cfg: ModelConfig, batch: int, n_layers: int,
+                    dtype=jnp.bfloat16):
+    d, h, hd = cfg.d_model, cfg.rwkv_heads, cfg.rwkv_head_dim
+    return (
+        jnp.zeros((n_layers, batch, 1, d), dtype),        # tm shift
+        jnp.zeros((n_layers, batch, h, hd, hd), jnp.float32),  # wkv state
+        jnp.zeros((n_layers, batch, 1, d), dtype),        # cm shift
+    )

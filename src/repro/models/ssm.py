@@ -1,0 +1,121 @@
+"""Mamba2 block (SSD with scalar-per-head decay), n_groups=1.
+
+Structure (Mamba2 paper): in_proj -> [z | x | B | C | dt]; causal depthwise
+conv over (x,B,C); SSD scan; gated RMSNorm; out_proj.  Decode keeps a
+(conv tail, ssm state) pair per layer — O(1) per token, which is what makes
+``long_500k`` runnable for the hybrid/ssm archs.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers
+
+
+def mamba_init(rng, cfg: ModelConfig, dtype=jnp.bfloat16):
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h = cfg.ssm_heads
+    r = jax.random.split(rng, 4)
+    proj_out = 2 * di + 2 * n + h          # z, x, B, C, dt
+    return {
+        "in_proj": layers.linear_init(r[0], d, proj_out, dtype=dtype),
+        "conv_w": (jax.random.normal(r[1], (cfg.conv_width, di + 2 * n),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": layers.rmsnorm_init(di, dtype),
+        "out_proj": layers.linear_init(r[2], di, d, dtype=dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xin = zxbcdt[..., di:2 * di]
+    B = zxbcdt[..., 2 * di:2 * di + n]
+    C = zxbcdt[..., 2 * di + n:2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n:]
+    return z, xin, B, C, dt
+
+
+def _causal_conv(x, w, conv_state=None):
+    """Depthwise causal conv over seq. x [B,S,C]; w [W,C].
+
+    Returns (y, tail) where tail is the last W-1 inputs (decode state)."""
+    b, s, c = x.shape
+    wlen = w.shape[0]
+    if conv_state is None:
+        xp = jnp.pad(x, ((0, 0), (wlen - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(wlen):  # W=4: tiny static unroll, fuses to one expression
+        y = y + xp[:, i:i + s].astype(jnp.float32) * w[i].astype(jnp.float32)
+    tail = xp[:, -(wlen - 1):] if wlen > 1 else None
+    return y.astype(x.dtype), tail
+
+
+def mamba_apply(p, x, cfg: ModelConfig, *, conv_state=None, ssm_state=None,
+                return_state: bool = False):
+    """x [B,S,d] -> y [B,S,d] (+ (conv_tail, ssm_state) when requested)."""
+    b, s, d = x.shape
+    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xin, B, C, dt = _split_proj(cfg, layers.linear(p["in_proj"], x))
+    conv_in = jnp.concatenate([xin, B, C], axis=-1)
+    conv_out, tail = _causal_conv(conv_in, p["conv_w"], conv_state)
+    conv_out = ops.silu(conv_out)
+    xs = conv_out[..., :di].reshape(b, s, h, hd)
+    Bs = conv_out[..., di:di + n]
+    Cs = conv_out[..., di + n:]
+    dt_sp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, hfin = ops.mamba2_scan(xs, dt_sp, A, Bs, Cs, h0=ssm_state)
+    y = y + xs.astype(jnp.float32).astype(y.dtype) * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(b, s, di)
+    y = layers.rmsnorm(p["norm"], ops.silu_mul(z, y), cfg.norm_eps)
+    out = layers.linear(p["out_proj"], y)
+    if return_state:
+        return out, (tail, hfin)
+    return out
+
+
+def mamba_decode_step(p, x, cfg: ModelConfig, state):
+    """One-token step. x [B,1,d]; state = (conv_tail [B,W-1,C], h [B,H,P,N])."""
+    conv_tail, h = state
+    b = x.shape[0]
+    di, n, hh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xin, B, C, dt = _split_proj(cfg, layers.linear(p["in_proj"], x))
+    conv_in = jnp.concatenate([xin, B, C], axis=-1)           # [B,1,C]
+    xp = jnp.concatenate([conv_tail.astype(conv_in.dtype), conv_in], axis=1)
+    w = p["conv_w"].astype(jnp.float32)
+    y = (xp.astype(jnp.float32) * w[None]).sum(axis=1, keepdims=True)
+    conv_out = ops.silu(y.astype(x.dtype))
+    xs = conv_out[..., :di].reshape(b, hh, hd)
+    Bs = conv_out[:, 0, di:di + n]
+    Cs = conv_out[:, 0, di + n:]
+    dt_sp = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    yt, hnew = ops.mamba2_step(xs, dt_sp, A, Bs, Cs, h)
+    yt = yt + xs.astype(jnp.float32).astype(yt.dtype) * p["D"][None, :, None].astype(yt.dtype)
+    yt = yt.reshape(b, 1, di)
+    yt = layers.rmsnorm(p["norm"], ops.silu_mul(z, yt), cfg.norm_eps)
+    out = layers.linear(p["out_proj"], yt)
+    return out, (xp[:, 1:], hnew)
+
+
+def mamba_state_init(cfg: ModelConfig, batch: int, n_layers: int,
+                     dtype=jnp.bfloat16):
+    di, n = cfg.d_inner, cfg.ssm_state
+    conv_c = di + 2 * n
+    return (
+        jnp.zeros((n_layers, batch, cfg.conv_width - 1, conv_c), dtype),
+        jnp.zeros((n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim, n),
+                  jnp.float32),
+    )

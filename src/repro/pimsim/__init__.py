@@ -1,0 +1,6 @@
+# Analytical performance/energy model of the paper's hardware:
+#   params — Table 3 constants (AiM DRAM-PIM, SRAM-CIM macro, NoC, CXL)
+#   ops    — per-substrate latency/energy models
+#   system — CENT / CENT+Curry / CompAir base / CompAir opt / AttAcc proxy
+# The paper's figures are reproduced from these in benchmarks/fig*.py.
+from repro.pimsim import ops, params, system  # noqa: F401

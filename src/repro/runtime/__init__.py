@@ -1,0 +1,3 @@
+from repro.runtime import driver, elastic, straggler  # noqa: F401
+from repro.runtime.driver import SimulatedFailure, TrainDriver  # noqa: F401
+from repro.runtime.straggler import StragglerDetector  # noqa: F401

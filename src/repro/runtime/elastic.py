@@ -1,0 +1,47 @@
+"""Elastic rescale: move a training/serving state between meshes.
+
+Pattern: checkpoint (or live state) -> rebuild mesh with the new device
+count -> re-derive the sharding plan for the new mesh -> device_put every
+leaf onto its new sharding.  Because the data pipeline is deterministic
+per step, training resumes exactly where it stopped with a different
+DP width (the global batch is re-sharded, not changed).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+
+from repro.checkpoint import ckpt as C
+
+
+def reshard_tree(tree, shardings):
+    """device_put each leaf onto its (new-mesh) sharding."""
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+
+
+def rescale_from_checkpoint(ckpt_dir: str, target_tree, new_shardings,
+                            *, step: Optional[int] = None):
+    """Restore the latest (or given) checkpoint directly onto a new mesh's
+    shardings — the restart path after adding/removing pods."""
+    step = step if step is not None else C.latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    state = C.restore(ckpt_dir, step, target_tree, shardings=new_shardings)
+    return step, state
+
+
+def validate_rescale(old_mesh, new_mesh, global_batch: int) -> list:
+    """Pre-flight checks the orchestrator runs before rescaling."""
+    problems = []
+    def dp(mesh):
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        return sizes.get("pod", 1) * sizes.get("data", 1)
+    if dict(zip(new_mesh.axis_names, new_mesh.devices.shape)).get("model", 1) != \
+       dict(zip(old_mesh.axis_names, old_mesh.devices.shape)).get("model", 1):
+        problems.append("TP degree changed: params reshard is still valid, "
+                        "but kernels re-tune (allowed, slower first step)")
+    if global_batch % dp(new_mesh) != 0:
+        problems.append(f"global_batch={global_batch} not divisible by new "
+                        f"DP={dp(new_mesh)}")
+    return problems

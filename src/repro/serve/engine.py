@@ -1,0 +1,157 @@
+"""Batched serving engine: slot-based continuous batching.
+
+The paper's system serves LLM inference; this is the host-side loop that
+drives its two step kinds — prefill (compute-bound, the SRAM-PIM lane) and
+decode (bandwidth-bound, the DRAM-PIM lane) — over a fixed pool of batch
+slots with per-slot lengths, greedy/temperature sampling, and EOS/ max-len
+retirement.  One jit'd decode_step serves all slots every tick; prefill
+admits one request per tick into a free slot (padding-bucketed).
+
+This engine is what examples/serve_e2e.py runs end-to-end.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # [len] int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0            # 0 => greedy
+    eos_id: Optional[int] = None
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_seq: int = 512,
+                 slots: int = 8, seed: int = 0, prefill_buckets=(32, 128, 512)):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.slots = slots
+        self.rng = jax.random.key(seed)
+        self.state = M.init_decode_state(cfg, slots, max_seq)
+        self.lengths = np.zeros((slots,), np.int32)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.queue: List[Request] = []
+        self._rid = itertools.count()
+        self.prefill_buckets = tuple(sorted(prefill_buckets))
+        self._decode = jax.jit(
+            lambda params, state, toks, lens: M.decode_step(
+                cfg, params, state, toks, lens))
+        self._tick = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt, **kw) -> int:
+        rid = next(self._rid)
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32), **kw))
+        return rid
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.active):
+            if r is None:
+                return i
+        return None
+
+    def _bucket(self, n: int) -> int:
+        for b in self.prefill_buckets:
+            if n <= b:
+                return b
+        return self.prefill_buckets[-1]
+
+    def _admit(self):
+        slot = self._free_slot()
+        if slot is None or not self.queue:
+            return
+        req = self.queue.pop(0)
+        plen = min(len(req.prompt), self.max_seq - req.max_new_tokens - 1)
+        prompt = req.prompt[:plen]
+        bucket = self._bucket(plen)
+        padded = np.zeros((bucket,), np.int32)
+        padded[:plen] = prompt
+        # single-sequence prefill into this slot: run prefill on a batch of
+        # one, then scatter the produced cache slab into the engine state.
+        one_state = M.init_decode_state(self.cfg, 1, self.max_seq)
+        logits, one_state = jax.jit(
+            lambda p, s, t, l: M.prefill(self.cfg, p, s, tokens=t, lengths=l),
+            static_argnames=())(self.params, one_state, padded[None],
+                                jnp.array([plen], jnp.int32))
+        self.state = _scatter_slot(self.state, one_state, slot)
+        self.lengths[slot] = plen
+        first = self._sample(logits[0], req)
+        req.out_tokens.append(int(first))
+        self.active[slot] = req
+
+    def _sample(self, logits, req: Request) -> int:
+        logits = logits.reshape(-1)
+        if req.temperature <= 0.0:
+            return int(jnp.argmax(logits))
+        self.rng, sub = jax.random.split(self.rng)
+        return int(jax.random.categorical(sub, logits / req.temperature))
+
+    # ------------------------------------------------------------------
+    def step(self) -> List[Request]:
+        """One engine tick: admit, batched-decode all active slots, retire.
+        Returns requests completed this tick."""
+        self._tick += 1
+        self._admit()
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        finished: List[Request] = []
+        if live:
+            toks = np.zeros((self.slots,), np.int32)
+            for i in live:
+                toks[i] = self.active[i].out_tokens[-1]
+            logits, self.state = self._decode(
+                self.params, self.state, jnp.asarray(toks),
+                jnp.asarray(self.lengths))
+            for i in live:
+                req = self.active[i]
+                self.lengths[i] += 1
+                nxt = self._sample(logits[i], req)
+                req.out_tokens.append(nxt)
+                hit_eos = req.eos_id is not None and nxt == req.eos_id
+                if (len(req.out_tokens) >= req.max_new_tokens or hit_eos
+                        or self.lengths[i] >= self.max_seq - 1):
+                    req.done = True
+                    finished.append(req)
+                    self.active[i] = None
+                    self.lengths[i] = 0
+        return finished
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_ticks):
+            done.extend(self.step())
+            if not self.queue and all(r is None for r in self.active):
+                break
+        return done
+
+
+def _scatter_slot(state, one_state, slot: int):
+    """Write a batch-of-1 prefill state into batch slot ``slot``.
+
+    The batch dim is the first axis where one_state has extent 1 and the
+    engine state differs (batch precedes all per-token dims in every
+    layout used by repro.models)."""
+    def put(dst, src):
+        if dst.shape == src.shape:          # slots == 1: replace wholesale
+            return src.astype(dst.dtype)
+        for ax in range(dst.ndim):
+            if src.shape[ax] == 1 and dst.shape[ax] != 1:
+                idx = [slice(None)] * dst.ndim
+                idx[ax] = slice(slot, slot + 1)
+                return dst.at[tuple(idx)].set(src.astype(dst.dtype))
+        return dst
+    return jax.tree.map(put, state, one_state)

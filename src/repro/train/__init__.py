@@ -1,0 +1,2 @@
+from repro.train import compress, optim, step  # noqa: F401
+from repro.train.step import TrainState, init_state, init_state_shaped, make_train_step  # noqa: F401

@@ -1,0 +1,31 @@
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 420) -> str:
+    """Run a JAX snippet in a fresh process with N fake host devices
+    (device count locks at first backend init, so multi-device tests
+    need their own process)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=timeout, cwd=REPO)
+    assert r.returncode == 0, f"STDERR:\n{r.stderr[-3000:]}\nSTDOUT:\n{r.stdout[-1000:]}"
+    return r.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_subprocess

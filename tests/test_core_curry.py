@@ -1,0 +1,48 @@
+"""Curry ALU iterated numerics: hypothesis accuracy bounds."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import curry
+
+
+@hypothesis.settings(max_examples=50, deadline=None)
+@hypothesis.given(x=st.floats(-10.0, 10.0))
+def test_exp_accuracy(x):
+    got = float(curry.curry_exp(jnp.float32(x), 8))
+    want = float(np.exp(np.float32(x)))
+    assert abs(got - want) <= 1e-4 * max(abs(want), 1e-6)
+
+
+@hypothesis.settings(max_examples=50, deadline=None)
+@hypothesis.given(x=st.floats(1e-3, 1e4))
+def test_rsqrt_accuracy(x):
+    got = float(curry.curry_rsqrt(jnp.float32(x), 3))
+    want = 1.0 / np.sqrt(np.float32(x))
+    assert abs(got - want) <= 1e-5 * want
+
+
+def test_softmax_silu_rmsnorm_fidelity(rng):
+    x = jnp.asarray(rng.normal(size=(8, 64)) * 3, jnp.float32)
+    np.testing.assert_allclose(np.asarray(curry.curry_softmax(x, -1)),
+                               np.asarray(jnp.exp(x - jnp.max(x, -1, keepdims=True))
+                                          / jnp.sum(jnp.exp(x - jnp.max(x, -1, keepdims=True)), -1, keepdims=True)),
+                               rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(curry.curry_silu(x)),
+                               np.asarray(x * (1 / (1 + jnp.exp(-x)))),
+                               rtol=1e-3, atol=1e-4)
+    w = jnp.ones((64,), jnp.float32)
+    var = jnp.mean(x * x, -1, keepdims=True)
+    want = x / jnp.sqrt(var + 1e-5)
+    np.testing.assert_allclose(np.asarray(curry.curry_rmsnorm(x, w)),
+                               np.asarray(want), rtol=1e-3, atol=1e-4)
+
+
+def test_chain_apply(rng):
+    x = jnp.asarray(rng.normal(size=(16,)), jnp.float32)
+    ch = curry.Chain([curry.ChainStep("*=", 2.0), curry.ChainStep("+=", 1.0),
+                      curry.ChainStep("max=", 0.0)])
+    np.testing.assert_allclose(np.asarray(ch.apply(x)),
+                               np.maximum(np.asarray(x) * 2 + 1, 0.0))
+    assert len(ch) == 3

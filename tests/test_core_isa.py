@@ -1,0 +1,91 @@
+"""Hierarchical ISA: lowering invariants, path-generation fusion, and
+program execution vs jnp oracles (paper §5)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import isa
+from repro.kernels import ref
+
+
+def test_softmax_program_matches_jnp(rng):
+    x = jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)
+    y, plan = isa.softmax_execute(x, rounds=8, fuse=True)
+    want = jax.nn.softmax(x.reshape(-1)).reshape(16, 32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_fusion_preserves_semantics(rng):
+    x = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    y1, _ = isa.softmax_execute(x, rounds=6, fuse=True)
+    y2, _ = isa.softmax_execute(x, rounds=6, fuse=False)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6)
+
+
+def test_fusion_reduces_packets():
+    plan_f = isa.lower(isa.softmax_program(8), fuse=True)
+    plan_u = isa.lower(isa.softmax_program(8), fuse=False)
+    assert plan_f.n_packets() < plan_u.n_packets() / 3
+    assert plan_f.alu_ops() == plan_u.alu_ops()  # fusion moves, not drops
+
+
+def test_rope_program_matches_kernel_ref(rng):
+    B, S, D = 1, 6, 16
+    x = jnp.asarray(rng.normal(size=(B, S, 1, D)), jnp.float32)
+    pos = jnp.arange(S)
+    want = ref.apply_rope(x, pos)
+    cos, sin = ref.rope_cos_sin(
+        jnp.broadcast_to(pos[None], (B, S)).astype(jnp.float32), D, 1e4)
+    got, plan = isa.rope_execute(x[0, :, 0, :],
+                                 jnp.repeat(cos, 2, -1)[0],
+                                 jnp.repeat(sin, 2, -1)[0])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want[0, :, 0, :]),
+                               rtol=1e-5, atol=1e-5)
+    assert any(isinstance(p, isa.ExchangePacket) for p in plan.packets)
+
+
+@hypothesis.settings(max_examples=30, deadline=None)
+@hypothesis.given(
+    ops=st.lists(st.tuples(st.sampled_from(["+=", "-=", "*=", "/="]),
+                           st.floats(0.5, 2.0)), min_size=1, max_size=12),
+    seed=st.integers(0, 2 ** 16))
+def test_scalar_chain_fusion_property(ops, seed):
+    """Any chain of NoC_Scalar const ops: fused plan == unfused plan, and
+    the fused plan is exactly one packet."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+    prog = [isa.RowInstr("NoC_Scalar", op, "x" if i == 0 else "t", "t",
+                         None, c) for i, (op, c) in enumerate(ops)]
+    pf = isa.lower(prog, fuse=True)
+    pu = isa.lower(prog, fuse=False)
+    assert pf.n_packets() == 1
+    assert pu.n_packets() == len(ops)
+    got_f = isa.Machine({"x": x}).run(pf)["t"]
+    got_u = isa.Machine({"x": x}).run(pu)["t"]
+    np.testing.assert_allclose(np.asarray(got_f), np.asarray(got_u), rtol=1e-6)
+
+
+def test_reduce_bcast_roundtrip(rng):
+    x = jnp.asarray(rng.normal(size=(8, 4)), jnp.float32)
+    prog = [
+        isa.RowInstr("NoC_Reduce", "+=", "x", "r", None, 0),
+        isa.RowInstr("NoC_BCast", None, "r", "b", None, 0),
+    ]
+    buf = isa.Machine({"x": x}).run(isa.lower(prog))
+    want = np.asarray(x).sum(0)
+    np.testing.assert_allclose(np.asarray(buf["b"]),
+                               np.broadcast_to(want, (8, 4)), rtol=1e-5)
+
+
+def test_sram_write_compute(rng):
+    x = jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(4, 8, 5)), jnp.float32)
+    prog = [isa.RowInstr("SRAM_Write", None, "w", ""),
+            isa.RowInstr("SRAM_Compute", None, "x", "y")]
+    m = isa.Machine({"x": x, "w": w})
+    buf = m.run(isa.lower(prog))
+    want = np.einsum("bi,bio->bo", np.asarray(x), np.asarray(w))
+    np.testing.assert_allclose(np.asarray(buf["y"]), want, rtol=1e-5)

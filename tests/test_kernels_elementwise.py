@@ -1,0 +1,78 @@
+"""RMSNorm / RoPE / SwiGLU / weight-stationary matmul kernels vs oracles."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.matmul import weight_stationary_matmul
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.rope import apply_rope
+from repro.kernels.swiglu import silu_mul
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("rows,d,br", [(7, 16, 4), (64, 128, 32), (100, 48, 64)])
+def test_rmsnorm_sweep(rng, dtype, rows, d, br):
+    x = jnp.asarray(rng.normal(size=(rows, d)), dtype)
+    w = jnp.asarray(rng.normal(size=(d,)) + 1.0, dtype)
+    got = rmsnorm(x, w, block_rows=br, interpret=True)
+    want = ref.rmsnorm(x, w)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_rmsnorm_newton_mode(rng):
+    x = jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)
+    w = jnp.ones((64,), jnp.float32)
+    got = rmsnorm(x, w, block_rows=16, curry_rounds=3, interpret=True)
+    want = ref.rmsnorm(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,s,h,d,bs,theta", [
+    (1, 16, 1, 8, 8, 1e4), (2, 40, 4, 32, 16, 1e4), (1, 64, 2, 64, 64, 1e6),
+])
+def test_rope_sweep(rng, b, s, h, d, bs, theta):
+    x = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    pos = jnp.asarray(rng.integers(0, 10_000, size=(b, s)), jnp.int32)
+    got = apply_rope(x, pos, theta=theta, block_s=bs, interpret=True)
+    want = ref.apply_rope(x, pos, theta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_rope_norm_preservation(rng):
+    x = jnp.asarray(rng.normal(size=(1, 32, 2, 16)), jnp.float32)
+    got = apply_rope(x, jnp.arange(32), block_s=8, interpret=True)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(got), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-4)
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(rows=st.integers(1, 80), d=st.sampled_from([8, 32, 100]),
+                  seed=st.integers(0, 2 ** 16), rounds=st.sampled_from([0, 6]))
+def test_swiglu_property(rows, d, seed, rounds):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(rows, d)) * 3, jnp.float32)
+    u = jnp.asarray(rng.normal(size=(rows, d)), jnp.float32)
+    got = silu_mul(g, u, block_rows=16, curry_rounds=rounds, interpret=True)
+    want = ref.silu_mul(g, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn", [
+    (16, 8, 16, 8, 8), (100, 40, 50, 32, 16), (128, 128, 128, 64, 64),
+    (33, 17, 9, 16, 8),
+])
+def test_matmul_sweep(rng, m, k, n, bm, bn):
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    got = weight_stationary_matmul(x, w, bm=bm, bn=bn, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w),
+                               rtol=1e-4, atol=1e-4)

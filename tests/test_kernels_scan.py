@@ -1,0 +1,82 @@
+"""RWKV6 / Mamba2 chunked Pallas kernels vs exact recurrent oracles."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.mamba_chunk import mamba2_chunked
+from repro.kernels.rwkv_chunk import rwkv6_chunked
+
+
+@pytest.mark.parametrize("b,s,h,d,chunk", [
+    (1, 17, 1, 8, 8), (2, 64, 3, 16, 16), (1, 50, 2, 32, 32),
+])
+def test_rwkv_kernel_sweep(rng, b, s, h, d, chunk):
+    r = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.05, 0.999, size=(b, s, h, d)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(h, d)), jnp.float32)
+    o1, s1 = rwkv6_chunked(r, k, v, w, u, chunk=chunk, interpret=True)
+    o2, s2 = ref.rwkv6_scan(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_rwkv_chunk_invariance(rng):
+    """Output must not depend on the chunk size (associativity of the
+    chunked reformulation)."""
+    b, s, h, d = 1, 48, 2, 8
+    r, k, v = (jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+               for _ in range(3))
+    w = jnp.asarray(rng.uniform(0.2, 0.99, size=(b, s, h, d)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(h, d)), jnp.float32)
+    o8, _ = rwkv6_chunked(r, k, v, w, u, chunk=8, interpret=True)
+    o16, _ = rwkv6_chunked(r, k, v, w, u, chunk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(o8), np.asarray(o16), rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 16, 1, 8, 4, 8), (2, 50, 3, 16, 8, 16), (1, 64, 2, 8, 16, 32),
+])
+def test_mamba_kernel_sweep(rng, b, s, h, p, n, chunk):
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.3, size=(b, s, h)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.3, 2.0, size=(h,)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    y1, h1 = mamba2_chunked(x, dt, A, B, C, chunk=chunk, interpret=True)
+    y2, h2 = ref.mamba2_scan(x, dt, A, B, C, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=2e-4,
+                               atol=2e-4)
+
+
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(s=st.integers(2, 40), seed=st.integers(0, 2 ** 16))
+def test_mamba_step_rollout_matches_scan(s, seed):
+    """Property: chunked scan == token-by-token decode rollout (the
+    train/serve consistency the serving engine depends on)."""
+    rng = np.random.default_rng(seed)
+    b, h, p, n = 1, 2, 4, 4
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.3, size=(b, s, h)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.3, 2.0, size=(h,)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    y1, h1 = ref.mamba2_scan(x, dt, A, B, C, chunk=8)
+    hh = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        yt, hh = ref.mamba2_step(x[:, t], dt[:, t], A, B[:, t], C[:, t], hh)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(jnp.stack(ys, 1)),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(hh), rtol=1e-4,
+                               atol=1e-4)

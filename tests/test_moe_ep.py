@@ -1,0 +1,73 @@
+"""Explicit-EP MoE dispatch (shard_map) == single-program GSPMD dispatch
+(§Perf iteration 2) — verified on an 8-device (2-data x 4-model) mesh."""
+
+
+def test_ep_matches_plain(subproc):
+    out = subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config, reduced
+from repro.core import shardhints
+from repro.models import moe
+
+cfg = reduced(get_config('olmoe-1b-7b'))
+cfg = cfg.replace(capacity_factor=float(cfg.n_experts) / cfg.top_k)  # dropless
+mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+p = moe.moe_init(jax.random.key(0), cfg, dtype=jnp.float32)
+x = jax.random.normal(jax.random.key(1), (4, 12, cfg.d_model), jnp.float32)
+
+y_plain, aux_plain = jax.jit(lambda p, x: moe.moe_apply(p, x, cfg))(p, x)
+
+shardhints.set_moe_ep((mesh, ('data',), 'model', None))
+try:
+    y_ep, aux_ep = jax.jit(lambda p, x: moe.moe_apply(p, x, cfg))(p, x)
+finally:
+    shardhints.set_moe_ep(None)
+
+err = float(jnp.abs(y_ep - y_plain).max())
+assert err < 2e-4, err
+# aux losses are per-shard estimators under EP (pmean of nonlinear
+# per-shard stats) — agree to ~10%, exact only with one data shard
+for k in ('lb_loss', 'z_loss'):
+    a, b = float(aux_plain[k]), float(aux_ep[k])
+    assert abs(a - b) < 0.1 * max(abs(a), 1.0), (k, a, b)
+print('OK', err)
+""")
+    assert "OK" in out
+
+
+def test_ep_with_fsdp_gather(subproc):
+    out = subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.configs import get_config, reduced
+from repro.core import shardhints
+from repro.models import moe
+
+cfg = reduced(get_config('qwen2-moe-a2.7b'))
+cfg = cfg.replace(capacity_factor=float(cfg.n_experts) / cfg.top_k)
+mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'),
+                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+p = moe.moe_init(jax.random.key(0), cfg, dtype=jnp.float32)
+x = jax.random.normal(jax.random.key(1), (4, 8, cfg.d_model), jnp.float32)
+y_plain, _ = jax.jit(lambda p, x: moe.moe_apply(p, x, cfg))(p, x)
+
+# FSDP-shard the expert weights over 'data' (ZeRO-3 gather inside EP)
+shardings = {
+    'w_gate': NamedSharding(mesh, P('model', None, 'data')),
+    'w_up': NamedSharding(mesh, P('model', None, 'data')),
+    'w_down': NamedSharding(mesh, P('model', 'data', None)),
+}
+p2 = dict(p)
+for k_, sh in shardings.items():
+    p2[k_] = jax.device_put(p[k_], sh)
+shardhints.set_moe_ep((mesh, ('pod', 'data'), 'model', 'data'))
+try:
+    y_ep, _ = jax.jit(lambda p, x: moe.moe_apply(p, x, cfg))(p2, x)
+finally:
+    shardhints.set_moe_ep(None)
+err = float(jnp.abs(y_ep - y_plain).max())
+assert err < 2e-4, err
+print('OK', err)
+""")
+    assert "OK" in out
