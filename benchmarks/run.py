@@ -10,7 +10,8 @@ import traceback
 from benchmarks import (fig04_substrate, fig05_nonlinear, fig08_mapping,
                         fig09_coldecoder, fig15_e2e, fig16_decode,
                         fig17_prefill, fig18_tp, fig19_longctx, fig21_area,
-                        fig22_curry, fig23_pathgen, fig24_gqa, roofline)
+                        fig22_curry, fig23_pathgen, fig24_gqa, roofline,
+                        serve_throughput)
 
 MODULES = {
     "fig04": fig04_substrate, "fig05": fig05_nonlinear,
@@ -18,7 +19,7 @@ MODULES = {
     "fig15": fig15_e2e, "fig16": fig16_decode, "fig17": fig17_prefill,
     "fig18": fig18_tp, "fig19": fig19_longctx, "fig21": fig21_area,
     "fig22": fig22_curry, "fig23": fig23_pathgen, "fig24": fig24_gqa,
-    "roofline": roofline,
+    "roofline": roofline, "serve": serve_throughput,
 }
 
 

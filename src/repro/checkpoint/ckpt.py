@@ -21,14 +21,19 @@ from typing import Any, Optional, Tuple
 import jax
 import numpy as np
 
+from repro import compat
+
 _SEP = "::"
+
+
+def _keystr(path) -> str:
+    return compat.keystr(path, separator=_SEP)
 
 
 def _flatten(tree) -> dict:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = jax.tree_util.keystr(path, simple=True, separator=_SEP)
-        flat[key] = leaf
+        flat[_keystr(path)] = leaf
     return flat
 
 
@@ -117,7 +122,7 @@ def restore(ckpt_dir: str, step: int, target_tree, *, shardings=None):
     flat_shard = _flatten(shardings) if shardings is not None else {}
 
     def rebuild(path_keys, leaf):
-        key = jax.tree_util.keystr(path_keys, simple=True, separator=_SEP)
+        key = _keystr(path_keys)
         arr = data[key]
         want = tuple(leaf.shape)
         if tuple(arr.shape) != want:

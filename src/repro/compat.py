@@ -1,0 +1,60 @@
+"""Version shims for the span of jax releases this repo runs on.
+
+The production target is current jax (``jax.shard_map``, ``check_vma``,
+``jax.sharding.AxisType``); CI and the baked container run older wheels
+where those still live under ``jax.experimental`` / different kwarg names.
+Everything here is a thin re-dispatch — no behavioral differences.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` across jax versions: ``axis_types`` (and
+    ``jax.sharding.AxisType``) only exist on newer releases."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
+def keystr(path, separator: str = ".") -> str:
+    """``jax.tree_util.keystr(..., simple=True, separator=...)`` on any
+    jax version (older releases emit the same "a.b.0" form by hand)."""
+    try:
+        return jax.tree_util.keystr(path, simple=True, separator=separator)
+    except TypeError:
+        parts = []
+        for entry in path:
+            for attr in ("key", "idx", "name"):
+                if hasattr(entry, attr):
+                    parts.append(str(getattr(entry, attr)))
+                    break
+            else:
+                parts.append(str(entry))
+        return separator.join(parts)
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a named mapped axis, inside shard_map/pmap bodies.
+
+    ``jax.lax.axis_size`` on new jax; on older releases the axis env frame
+    holds the size (as a plain int, or a frame object with ``.size``)."""
+    from jax import lax
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    from jax import core
+    frame = core.axis_frame(axis_name)
+    return frame.size if hasattr(frame, "size") else frame
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` with the modern signature on any jax version."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

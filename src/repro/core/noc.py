@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
 from repro.kernels import ref
 
 Combiner = Callable  # (tree, tree) -> tree
@@ -40,7 +41,7 @@ COMBINERS = {"add": _add, "max": _max}
 
 
 def _axis_size(axis_name: str) -> int:
-    return lax.axis_size(axis_name)
+    return compat.axis_size(axis_name)
 
 
 def _is_pow2(n: int) -> bool:

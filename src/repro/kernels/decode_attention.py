@@ -133,3 +133,121 @@ def decode_attention_partial(q, k, v, *, lengths=None, kv_offset: int = 0,
     """Per-shard partials (acc f32, m, l) for the NoC tree combine."""
     return _decode(q, k, v, lengths, kv_offset=kv_offset, block_s=block_s,
                    return_partials=True, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# paged variant: the KV cache lives in physical pages [KvH, NB, BS, D] and a
+# per-sequence block table maps logical block -> page.  The page id feeds the
+# BlockSpec index_map via scalar prefetch, so the DMA engine gathers pages
+# directly — the host never linearizes the cache.  Everything else (online
+# softmax over sequential KV blocks, the (acc, m, l) partials contract that
+# ``core.noc.tree_softmax_combine`` consumes) is identical to the dense path.
+# ---------------------------------------------------------------------------
+
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                  m_scr, l_scr, acc_scr, *, scale: float, block_s: int,
+                  kv_offset: int, return_partials: bool):
+    ib = pl.program_id(0)
+    ibk = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(ibk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                      # [G, D]
+    k = k_ref[0, 0].astype(jnp.float32)                      # [BS, D]
+    s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                        preferred_element_type=jnp.float32) * scale  # [G, BS]
+    kpos = kv_offset + ibk * block_s + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = kpos < len_ref[ib]
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + lax.dot_general(
+        p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ibk == nb - 1)
+    def _finalize():
+        if return_partials:
+            o_ref[0, 0] = acc_scr[...].astype(o_ref.dtype)
+            m_ref[0, 0] = m_scr[...][:, 0].astype(m_ref.dtype)
+            l_ref[0, 0] = l_scr[...][:, 0].astype(l_ref.dtype)
+        else:
+            l = jnp.maximum(l_scr[...], 1e-30)
+            o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def _paged_decode(q, k_pages, v_pages, block_tables, lengths, *,
+                  kv_offset: int, return_partials: bool, interpret: bool):
+    b, h, d = q.shape
+    kvh, _, bs, _ = k_pages.shape
+    g = h // kvh
+    mb = block_tables.shape[1]
+    qh = q.reshape(b, kvh, g, d)
+    if lengths is None:
+        lengths = jnp.full((b,), kv_offset + mb * bs, jnp.int32)
+    lens = jnp.minimum(lengths.astype(jnp.int32), kv_offset + mb * bs)
+
+    out_dt = jnp.float32 if return_partials else q.dtype
+    kernel = functools.partial(
+        _paged_kernel, scale=1.0 / math.sqrt(d), block_s=bs,
+        kv_offset=kv_offset, return_partials=return_partials)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,            # block_tables, lengths
+        grid=(b, kvh, mb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda ib, ih, ibk, bt, ln: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda ib, ih, ibk, bt, ln: (ih, bt[ib, ibk], 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda ib, ih, ibk, bt, ln: (ih, bt[ib, ibk], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda ib, ih, ibk, bt, ln: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, g), lambda ib, ih, ibk, bt, ln: (ib, ih, 0)),
+            pl.BlockSpec((1, 1, g), lambda ib, ih, ibk, bt, ln: (ib, ih, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kvh, g, d), out_dt),
+            jax.ShapeDtypeStruct((b, kvh, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, kvh, g), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lens, qh, k_pages, v_pages)
+    return out.reshape(b, h, d), m.reshape(b, h), l.reshape(b, h)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, *, lengths=None,
+                           interpret: bool = False):
+    """q [B,H,D]; k_pages,v_pages [KvH,NB,BS,D]; block_tables [B,MB] -> [B,H,D]."""
+    out, _, _ = _paged_decode(q, k_pages, v_pages, block_tables, lengths,
+                              kv_offset=0, return_partials=False,
+                              interpret=interpret)
+    return out
+
+
+def paged_decode_attention_partial(q, k_pages, v_pages, block_tables, *,
+                                   lengths=None, kv_offset: int = 0,
+                                   interpret: bool = False):
+    """Per-shard paged partials (acc f32, m, l) for the NoC tree combine."""
+    return _paged_decode(q, k_pages, v_pages, block_tables, lengths,
+                         kv_offset=kv_offset, return_partials=True,
+                         interpret=interpret)

@@ -116,6 +116,29 @@ def decode_attention_partial(q, k, v, *, lengths=None, kv_offset: int = 0,
                                         kv_offset=kv_offset)
 
 
+def paged_decode_attention(q, k_pages, v_pages, block_tables, *, lengths=None):
+    if _use_pallas():
+        return _da.paged_decode_attention(q, k_pages, v_pages, block_tables,
+                                          lengths=lengths, interpret=_interp())
+    return ref.paged_decode_attention(q, k_pages, v_pages, block_tables,
+                                      lengths=lengths)
+
+
+def paged_decode_attention_partial(q, k_pages, v_pages, block_tables, *,
+                                   lengths=None, kv_offset: int = 0):
+    if _use_pallas():
+        return _da.paged_decode_attention_partial(
+            q, k_pages, v_pages, block_tables, lengths=lengths,
+            kv_offset=kv_offset, interpret=_interp())
+    return ref.paged_decode_attention_partial(q, k_pages, v_pages,
+                                              block_tables, lengths=lengths,
+                                              kv_offset=kv_offset)
+
+
+def gather_pages(pages, block_table):
+    return ref.gather_pages(pages, block_table)
+
+
 def matmul(x, w, *, out_dtype=None, bm: int = 256, bn: int = 256,
            vmem_budget: int = 4 * 1024 * 1024):
     """2-D matmul; routes to the weight-stationary kernel when the weight

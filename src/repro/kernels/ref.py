@@ -242,6 +242,52 @@ def combine_partials(parts: Tuple[jax.Array, jax.Array, jax.Array],
 
 
 # ---------------------------------------------------------------------------
+# paged decode attention (block/paged KV cache, vLLM-style)
+# ---------------------------------------------------------------------------
+
+def gather_pages(pages: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Linearize a paged KV buffer for one-or-more sequences.
+
+    pages [KvH, NB, BS, D]; block_table [B, MB] (or [MB]) int32 physical
+    page ids -> linear KV [B, MB*BS, KvH, D] (or [MB*BS, KvH, D]).
+    """
+    squeeze = block_table.ndim == 1
+    if squeeze:
+        block_table = block_table[None]
+    kvh, _, bs, d = pages.shape
+    mb = block_table.shape[-1]
+    lin = pages[:, block_table]                       # [KvH, B, MB, BS, D]
+    lin = jnp.moveaxis(lin, 0, 3)                     # [B, MB, BS, KvH, D]
+    lin = lin.reshape(block_table.shape[0], mb * bs, kvh, d)
+    return lin[0] if squeeze else lin
+
+
+def paged_decode_attention_partial(q, k_pages, v_pages, block_tables, *,
+                                   lengths: Optional[jax.Array] = None,
+                                   kv_offset: int = 0,
+                                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Flash-decoding partials over a *paged* KV cache.
+
+    q [B, H, D]; k_pages, v_pages [KvH, NB, BS, D]; block_tables [B, MB]
+    int32 mapping logical block -> physical page.  Returns the same
+    (acc f32, m, l) triple as :func:`decode_attention_partial`, so
+    ``core.noc.tree_softmax_combine`` / :func:`combine_partials` apply
+    unchanged to paged shards.
+    """
+    k_lin = gather_pages(k_pages, block_tables)
+    v_lin = gather_pages(v_pages, block_tables)
+    return decode_attention_partial(q, k_lin, v_lin, lengths=lengths,
+                                    kv_offset=kv_offset)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, *,
+                           lengths: Optional[jax.Array] = None) -> jax.Array:
+    acc, m, l = paged_decode_attention_partial(q, k_pages, v_pages,
+                                               block_tables, lengths=lengths)
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # matmul (the "SRAM-PIM lane": weight-stationary tiled GEMM)
 # ---------------------------------------------------------------------------
 

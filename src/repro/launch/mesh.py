@@ -10,10 +10,13 @@ from __future__ import annotations
 import jax
 
 
+# version-compat mesh constructor (handles pre-AxisType jax releases);
+# re-exported here because mesh construction is this module's job
+from repro.compat import make_mesh as compat_mesh  # noqa: E402
+
+
 def _mk(shape, axes):
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

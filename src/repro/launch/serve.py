@@ -1,8 +1,11 @@
-"""Serving entrypoint: stand up the batched engine for an arch and run a
-synthetic request stream (or an interactive stdin loop).
+"""Serving entrypoint: stand up the paged-KV continuous-batching engine
+for an arch and run a synthetic request stream.
 
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \\
       --reduced --requests 8
+
+``--dense`` forces the dense ``[slots, max_seq]`` KV slab (the A/B
+baseline); by default attention families run paged.
 """
 import argparse
 import time
@@ -24,6 +27,14 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--dense", action="store_true",
+                    help="force the dense KV slab instead of paged KV")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged-KV page size (tokens)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="physical page pool size (default: full capacity)")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="max padded tokens (prefill+decode) per tick")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore trained params (repro.checkpoint layout)")
     args = ap.parse_args()
@@ -42,7 +53,11 @@ def main():
             params = state.params
             print(f"[serve] restored step {step_no} from {args.ckpt_dir}")
 
-    eng = ServeEngine(cfg, params, max_seq=args.max_seq, slots=args.slots)
+    paged = None if not args.dense else False
+    eng = ServeEngine(cfg, params, max_seq=args.max_seq, slots=args.slots,
+                      paged=paged, block_size=args.block_size,
+                      num_blocks=args.num_blocks,
+                      max_tokens_per_tick=args.token_budget)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for i in range(args.requests):
@@ -56,8 +71,12 @@ def main():
     for r in sorted(done, key=lambda r: r.rid)[:5]:
         print(f"[serve] req {r.rid}: {len(r.prompt)} prompt -> "
               f"{r.out_tokens[:8]}{'...' if len(r.out_tokens) > 8 else ''}")
+    mode = "paged" if eng.paged else "dense"
     print(f"[serve] {len(done)} requests, {total} tokens, {dt:.2f}s "
-          f"({total / dt:.1f} tok/s)")
+          f"({total / dt:.1f} tok/s)  kv={mode} "
+          f"({eng.kv_cache_bytes() / 1e6:.1f} MB), "
+          f"occupancy={eng.mean_occupancy:.2f}, "
+          f"prefill_traces={eng.stats['prefill_traces']:.0f}")
 
 
 if __name__ == "__main__":

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.kernels import ops
 
@@ -189,7 +190,7 @@ def _decode_attn_seqsharded(q, ck, cv, lens, da):
                                                  kv_offset=off)
         return noc.tree_softmax_combine(acc, m, l, seq_ax).astype(qv.dtype)
 
-    return jax.shard_map(
+    return compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(dp, None, None), P(dp, seq_ax, None, None),
                   P(dp, seq_ax, None, None), P(dp)),
@@ -204,6 +205,101 @@ def attn_cache_init(cfg: ModelConfig, batch: int, max_seq: int,
     if n_slots > 1:
         shape = (n_slots,) + shape
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache (block tables; vLLM-style physical pages)
+# ---------------------------------------------------------------------------
+#
+# Pages are laid out [L, KvH, NB, BS, Dh] so the paged Pallas kernel can DMA
+# one (head, page) tile per grid step straight from the block-table index.
+# Physical page 0 is reserved as a *null sink*: writes for padding rows and
+# for retired slots land there, so a block-table entry of 0 is always safe.
+
+def paged_kv_cache_init(cfg: ModelConfig, num_blocks: int, block_size: int,
+                        dtype=jnp.bfloat16, n_slots: int = 1):
+    shape = (n_slots, cfg.n_kv_heads, num_blocks, block_size, cfg.hd)
+    return {"k_pages": jnp.zeros(shape, dtype), "v_pages": jnp.zeros(shape, dtype)}
+
+
+def attention_decode_paged(p, x, cfg: ModelConfig, kp_all, vp_all,
+                           layer_idx, lengths, block_tables, *, window=None):
+    """One-token decode against a paged KV cache.
+
+    x [B,1,d]; kp_all/vp_all [L, KvH, NB, BS, Dh]; layer_idx scalar int32;
+    lengths [B] = tokens already cached; block_tables [B, MB] int32.
+    The new K/V row is scattered into the page holding position ``lengths``
+    (retired slots carry an all-zero table row, so they write the null page).
+    Returns (y [B,1,d], kp_all, vp_all)."""
+    b = x.shape[0]
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    bs = kp_all.shape[3]
+    q = linear(p["wq"], x).reshape(b, 1, h, hd)
+    k = linear(p["wk"], x).reshape(b, 1, kvh, hd)
+    v = linear(p["wv"], x).reshape(b, 1, kvh, hd)
+    pos = lengths.astype(jnp.int32)[:, None]
+    q = ops.apply_rope(q, pos, theta=cfg.rope_theta)
+    k = ops.apply_rope(k, pos, theta=cfg.rope_theta)
+    bidx = jnp.arange(b)
+    phys = block_tables[bidx, lengths // bs]                 # [B]
+    off = lengths % bs
+    kp_all = kp_all.at[layer_idx, :, phys, off].set(k[:, 0].astype(kp_all.dtype))
+    vp_all = vp_all.at[layer_idx, :, phys, off].set(v[:, 0].astype(vp_all.dtype))
+    kp = lax.dynamic_index_in_dim(kp_all, layer_idx, 0, keepdims=False)
+    vp = lax.dynamic_index_in_dim(vp_all, layer_idx, 0, keepdims=False)
+    o = ops.paged_decode_attention(q[:, 0], kp, vp, block_tables,
+                                   lengths=lengths + 1)
+    y = linear(p["wo"], o.reshape(b, h * hd))
+    return y.reshape(b, 1, -1), kp_all, vp_all
+
+
+def attention_prefill_paged(p, x, positions, cfg: ModelConfig, kp_all, vp_all,
+                            layer_idx, block_table, q_offset, length, *,
+                            window=None):
+    """Chunked prefill of ONE sequence (batch 1) against paged KV.
+
+    x [1,C,d] is the chunk at global positions [q_offset, q_offset+C);
+    ``length`` (traced scalar) counts the valid rows of the chunk.  Attends
+    over the already-cached prefix (gathered from pages via ``block_table``
+    [MB]) plus the chunk itself, then scatters the chunk's K/V into pages.
+    Padding rows are redirected to the null page 0.
+    Returns (y [1,C,d], kp_all, vp_all)."""
+    _, c, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    bs = kp_all.shape[3]
+    q = linear(p["wq"], x).reshape(1, c, h, hd)
+    k = linear(p["wk"], x).reshape(1, c, kvh, hd)
+    v = linear(p["wv"], x).reshape(1, c, kvh, hd)
+    q = ops.apply_rope(q, positions, theta=cfg.rope_theta)
+    k = ops.apply_rope(k, positions, theta=cfg.rope_theta)
+
+    kp = lax.dynamic_index_in_dim(kp_all, layer_idx, 0, keepdims=False)
+    vp = lax.dynamic_index_in_dim(vp_all, layer_idx, 0, keepdims=False)
+    # linearize the cached prefix and append the chunk; the +C tail pad keeps
+    # the dynamic_update_slice in bounds for every q_offset <= MB*BS
+    k_lin = ops.gather_pages(kp, block_table[None])          # [1, MB*BS, KvH, hd]
+    v_lin = ops.gather_pages(vp, block_table[None])
+    zpad = jnp.zeros((1, c) + k_lin.shape[2:], k_lin.dtype)
+    k_lin = lax.dynamic_update_slice(
+        jnp.concatenate([k_lin, zpad], axis=1), k.astype(k_lin.dtype),
+        (0, q_offset, 0, 0))
+    v_lin = lax.dynamic_update_slice(
+        jnp.concatenate([v_lin, zpad], axis=1), v.astype(v_lin.dtype),
+        (0, q_offset, 0, 0))
+    o = ops.flash_attention(q, k_lin, v_lin, causal=True, q_offset=q_offset,
+                            lengths=(q_offset + length)[None], window=window)
+    y = linear(p["wo"], o.reshape(1, c, h * hd))
+
+    # scatter the chunk K/V into pages; invalid rows -> null page 0
+    t = jnp.arange(c)
+    pos = q_offset + t
+    valid = t < length
+    phys = jnp.where(valid, block_table[jnp.clip(pos // bs, 0,
+                                                 block_table.shape[0] - 1)], 0)
+    off = pos % bs
+    kp_all = kp_all.at[layer_idx, :, phys, off].set(k[0].astype(kp_all.dtype))
+    vp_all = vp_all.at[layer_idx, :, phys, off].set(v[0].astype(vp_all.dtype))
+    return y, kp_all, vp_all
 
 
 # ---------------------------------------------------------------------------

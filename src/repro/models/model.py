@@ -211,6 +211,23 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int,
     }
 
 
+PAGED_FAMILIES = ("dense", "moe")
+
+
+def init_paged_decode_state(cfg: ModelConfig, num_blocks: int,
+                            block_size: int, dtype=jnp.bfloat16):
+    """Paged KV cache: physical pages [L, KvH, NB, BS, hd] shared by all
+    slots, addressed through per-slot block tables (page 0 = null sink).
+    Only families with a growing KV cache page; rwkv/ssm state is O(1) per
+    sequence and the hybrid shared-attention cache stays dense for now."""
+    if cfg.family not in PAGED_FAMILIES:
+        raise ValueError(
+            f"paged decode state requires family in {PAGED_FAMILIES}, "
+            f"got {cfg.family!r}")
+    return {"attn": layers.paged_kv_cache_init(cfg, num_blocks, block_size,
+                                               dtype, n_slots=cfg.n_layers)}
+
+
 # ---------------------------------------------------------------------------
 # prefill (fills caches, returns last-position logits)
 # ---------------------------------------------------------------------------
@@ -309,6 +326,81 @@ def _last_token(x, lengths):
     b = x.shape[0]
     idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1)
     return x[jnp.arange(b), idx][:, None, :]  # [B,1,d]
+
+
+def prefill_paged(cfg: ModelConfig, params, state, *, tokens, length,
+                  q_offset, block_table, attn_window: Optional[int] = None):
+    """One *chunk* of a single-sequence prefill into the paged KV cache.
+
+    tokens [1, C] (right-padded chunk); length (scalar int32) = valid rows;
+    q_offset (scalar int32) = tokens already cached for this sequence;
+    block_table [MB] int32 physical page ids for the sequence's slot.
+
+    Chunks attend to the already-paged prefix plus themselves, so calling
+    this repeatedly with growing q_offset reproduces a monolithic prefill
+    exactly.  Returns (logits_at_chunk_end [1, V], state)."""
+    if cfg.family not in PAGED_FAMILIES:
+        raise ValueError(f"prefill_paged: unsupported family {cfg.family!r}")
+    x = layers.embed(params["embed"], tokens)
+    x = hint(x, "activation")
+    _, c, _ = x.shape
+    positions = (q_offset + jnp.arange(c))[None]
+
+    def body(carry, xs):
+        xc, kp_all, vp_all = carry
+        lp, li = xs
+        h = layers.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
+        y, kp_all, vp_all = layers.attention_prefill_paged(
+            lp["attn"], h, positions, cfg, kp_all, vp_all, li, block_table,
+            q_offset, length, window=attn_window)
+        xc = xc + y
+        h2 = layers.rmsnorm(lp["ln2"], xc, cfg.norm_eps)
+        if cfg.family == "moe":
+            y2, _ = moe.moe_apply(lp["moe"], h2, cfg)
+        else:
+            y2 = layers.ffn(lp["ffn"], h2)
+        return (hint(xc + y2, "activation"), kp_all, vp_all), None
+
+    (x, kp, vp), _ = lax.scan(
+        body, (x, state["attn"]["k_pages"], state["attn"]["v_pages"]),
+        (params["layers"], jnp.arange(cfg.n_layers)))
+    state = {"attn": {"k_pages": kp, "v_pages": vp}}
+    logits = _logits(cfg, params, _last_token(x, jnp.reshape(length, (1,))))
+    return logits[:, 0], state
+
+
+def decode_step_paged(cfg: ModelConfig, params, state, tokens, lengths,
+                      block_tables, *, attn_window: Optional[int] = None):
+    """Batched one-token decode over the paged KV cache.
+
+    tokens [B] int32; lengths [B] = cache fill level; block_tables [B, MB].
+    Same contract as :func:`decode_step` (returns (logits [B, V], state));
+    the KV row for position ``lengths`` is scattered into pages and the
+    paged flash-decoding kernel gathers via the block table."""
+    if cfg.family not in PAGED_FAMILIES:
+        raise ValueError(f"decode_step_paged: unsupported family {cfg.family!r}")
+    x = layers.embed(params["embed"], tokens[:, None])
+
+    def body(carry, xs):
+        xc, kp_all, vp_all = carry
+        lp, li = xs
+        h = layers.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
+        y, kp_all, vp_all = layers.attention_decode_paged(
+            lp["attn"], h, cfg, kp_all, vp_all, li, lengths, block_tables,
+            window=attn_window)
+        xc = xc + y
+        h2 = layers.rmsnorm(lp["ln2"], xc, cfg.norm_eps)
+        if cfg.family == "moe":
+            y2, _ = moe.moe_apply(lp["moe"], h2, cfg)
+        else:
+            y2 = layers.ffn(lp["ffn"], h2)
+        return (hint(xc + y2, "activation"), kp_all, vp_all), None
+
+    (x, kp, vp), _ = lax.scan(
+        body, (x, state["attn"]["k_pages"], state["attn"]["v_pages"]),
+        (params["layers"], jnp.arange(cfg.n_layers)))
+    state = {"attn": {"k_pages": kp, "v_pages": vp}}
+    return _logits(cfg, params, x)[:, 0], state
 
 
 # ---------------------------------------------------------------------------

@@ -15,6 +15,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.models import layers
 
@@ -219,7 +220,7 @@ def _moe_apply_ep(p, x, cfg: ModelConfig, ep, capacity_factor=None):
     dspec = P(dp, None, None)
     wg_spec = P(tp_axis, None, fsdp_axis)
     wd_spec = P(tp_axis, fsdp_axis, None)
-    y, aux_v = jax.shard_map(
+    y, aux_v = compat.shard_map(
         body, mesh=mesh,
         in_specs=(dspec, P(), wg_spec, wg_spec, wd_spec),
         out_specs=(dspec, P()), check_vma=False,

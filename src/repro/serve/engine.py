@@ -1,13 +1,32 @@
-"""Batched serving engine: slot-based continuous batching.
+"""Paged-KV continuous-batching serving engine.
 
-The paper's system serves LLM inference; this is the host-side loop that
-drives its two step kinds — prefill (compute-bound, the SRAM-PIM lane) and
-decode (bandwidth-bound, the DRAM-PIM lane) — over a fixed pool of batch
-slots with per-slot lengths, greedy/temperature sampling, and EOS/ max-len
-retirement.  One jit'd decode_step serves all slots every tick; prefill
-admits one request per tick into a free slot (padding-bucketed).
+The paper's decode phase is bandwidth-bound: the DRAM-PIM lane streams the
+KV cache past bank-level MACs, so host-side serving must keep every bank
+busy with many concurrent sequences.  This engine does that with the three
+standard production mechanisms:
 
-This engine is what examples/serve_e2e.py runs end-to-end.
+* **Paged KV cache** — physical pages ``[L, KvH, NB, BS, hd]`` shared by
+  all slots, addressed through per-slot block tables (vLLM-style).  Pages
+  are allocated on demand and recycled at retirement, so peak KV memory
+  follows *live tokens*, not ``slots x max_seq``.  Physical page 0 is a
+  null sink for padding/retired-slot writes.
+* **Continuous batching** — multiple requests are admitted per tick under
+  a token budget; one jit'd ``decode_step_paged`` serves all slots every
+  tick, so a retiring sequence's slot is refilled without draining the
+  batch.
+* **Chunked prefill** — prompts are split into bucket-sized chunks under
+  the per-tick token budget, each chunk attending to the already-paged
+  prefix (exact — verified token-for-token against monolithic prefill).
+  Decode tokens are reserved from the budget *before* prefill every tick.
+  Note: the default budget (``slots + largest bucket``) admits a full
+  largest-bucket prefill per tick; pass a smaller ``max_tokens_per_tick``
+  to force chunking and bound per-tick prefill latency for long prompts.
+
+Prefill functions are jit'd **once per bucket** and cached
+(``stats["prefill_traces"]`` counts actual traces; it stays flat across
+admissions).  Families without a growing KV cache (rwkv / ssm / hybrid)
+run the same scheduler over the dense state path (``paged=False``), which
+is also kept as an A/B baseline for ``benchmarks/serve_throughput.py``.
 """
 from __future__ import annotations
 
@@ -32,32 +51,165 @@ class Request:
     eos_id: Optional[int] = None
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+    prefill_pos: int = 0                # tokens already prefilled (chunked)
+
+
+class BlockAllocator:
+    """Host-side physical-page pool + per-slot block tables.
+
+    Page 0 is reserved as the null sink (never handed out), so an all-zero
+    block-table row is always safe to pass to the device."""
+
+    def __init__(self, num_blocks: int, block_size: int, slots: int,
+                 max_blocks_per_slot: int):
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self._free = list(range(num_blocks - 1, 0, -1))
+        self.table = np.zeros((slots, max_blocks_per_slot), np.int32)
+        self.used = np.zeros((slots,), np.int32)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot``'s table to cover ``n_tokens``; False if the pool is
+        exhausted (the caller stalls the slot until pages are recycled)."""
+        need = -(-n_tokens // self.block_size)
+        if need > self.table.shape[1]:
+            return False
+        while self.used[slot] < need:
+            if not self._free:
+                return False
+            self.table[slot, self.used[slot]] = self._free.pop()
+            self.used[slot] += 1
+        return True
+
+    def release(self, slot: int) -> None:
+        for i in range(int(self.used[slot])):
+            self._free.append(int(self.table[slot, i]))
+        self.table[slot] = 0
+        self.used[slot] = 0
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_seq: int = 512,
-                 slots: int = 8, seed: int = 0, prefill_buckets=(32, 128, 512)):
+                 slots: int = 8, seed: int = 0,
+                 prefill_buckets=(32, 128, 512), paged: Optional[bool] = None,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 max_tokens_per_tick: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
         self.slots = slots
         self.rng = jax.random.key(seed)
-        self.state = M.init_decode_state(cfg, slots, max_seq)
+        self.dtype = jax.tree.leaves(params)[0].dtype
+        self.paged = (cfg.family in M.PAGED_FAMILIES) if paged is None else paged
+        if self.paged and cfg.family not in M.PAGED_FAMILIES:
+            raise ValueError(f"paged KV unsupported for family {cfg.family!r}")
+
+        # prefill chunk buckets; always include max_seq so any admissible
+        # prompt fits some bucket
+        bks = sorted({min(b, max_seq) for b in prefill_buckets} | {max_seq})
+        self.prefill_buckets = tuple(bks)
+        self.max_tokens_per_tick = (max_tokens_per_tick if max_tokens_per_tick
+                                    else slots + self.prefill_buckets[-1])
+        if self.max_tokens_per_tick < self.prefill_buckets[0]:
+            raise ValueError(
+                f"max_tokens_per_tick={self.max_tokens_per_tick} can never "
+                f"afford the smallest prefill bucket "
+                f"({self.prefill_buckets[0]}); no request could ever start")
+
+        if self.paged:
+            self.block_size = block_size
+            self.blocks_per_slot = -(-max_seq // block_size)
+            if num_blocks is None:
+                num_blocks = 1 + slots * self.blocks_per_slot  # +1: null page
+            self.alloc = BlockAllocator(num_blocks, block_size, slots,
+                                        self.blocks_per_slot)
+            self.state = M.init_paged_decode_state(cfg, num_blocks, block_size,
+                                                   dtype=self.dtype)
+        else:
+            self.state = M.init_decode_state(cfg, slots, max_seq,
+                                             dtype=self.dtype)
+
         self.lengths = np.zeros((slots,), np.int32)
         self.active: List[Optional[Request]] = [None] * slots
         self.queue: List[Request] = []
         self._rid = itertools.count()
-        self.prefill_buckets = tuple(sorted(prefill_buckets))
-        self._decode = jax.jit(
-            lambda params, state, toks, lens: M.decode_step(
-                cfg, params, state, toks, lens))
         self._tick = 0
+        self.stats: Dict[str, float] = {
+            "prefill_traces": 0, "decode_traces": 0, "ticks": 0,
+            "prefill_tokens": 0, "decode_tokens": 0, "occupancy_sum": 0.0,
+            "stalled_ticks": 0, "preemptions": 0,
+        }
+        self._prefill_fns: Dict[int, object] = {}
+        self._decode = self._make_decode_fn()
 
-    # ------------------------------------------------------------------
+    # -- jit caches ----------------------------------------------------
+    def _make_decode_fn(self):
+        cfg = self.cfg
+
+        if self.paged:
+            def f(params, state, toks, lens, tables):
+                self.stats["decode_traces"] += 1
+                return M.decode_step_paged(cfg, params, state, toks, lens,
+                                           tables)
+        else:
+            def f(params, state, toks, lens, tables):
+                self.stats["decode_traces"] += 1
+                return M.decode_step(cfg, params, state, toks, lens)
+        return jax.jit(f)
+
+    def _prefill_fn(self, bucket: int):
+        """One compiled prefill per bucket, cached for the engine lifetime
+        (the seed engine re-traced ``jax.jit(lambda ...)`` on every
+        admission)."""
+        fn = self._prefill_fns.get(bucket)
+        if fn is not None:
+            return fn
+        cfg, dtype, max_seq = self.cfg, self.dtype, self.max_seq
+
+        if self.paged:
+            def f(params, state, toks, length, q_offset, bt_row):
+                self.stats["prefill_traces"] += 1
+                return M.prefill_paged(cfg, params, state, tokens=toks,
+                                       length=length, q_offset=q_offset,
+                                       block_table=bt_row)
+        else:
+            def f(params, toks, lens):
+                self.stats["prefill_traces"] += 1
+                one = M.init_decode_state(cfg, 1, max_seq, dtype=dtype)
+                return M.prefill(cfg, params, one, tokens=toks, lengths=lens)
+        fn = jax.jit(f)
+        self._prefill_fns[bucket] = fn
+        return fn
+
+    # -- submission ----------------------------------------------------
     def submit(self, prompt, **kw) -> int:
-        rid = next(self._rid)
-        self.queue.append(Request(rid, np.asarray(prompt, np.int32), **kw))
-        return rid
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if prompt.min() < 0 or prompt.max() >= self.cfg.vocab_size:
+            # out-of-vocab ids would embed as NaN (jnp OOB gather fills),
+            # and NaN in recycled pages poisons later occupants' masked
+            # attention sums (0 * NaN) — fail loudly instead
+            raise ValueError(
+                f"token ids must be in [0, {self.cfg.vocab_size}); got "
+                f"range [{prompt.min()}, {prompt.max()}]")
+        req = Request(next(self._rid), prompt, **kw)
+        if self.paged:
+            # a request that cannot ever fit the pool would stall forever
+            # holding its partial allocation (no preemption yet)
+            pages = -(-min(self._plen(req) + req.max_new_tokens,
+                           self.max_seq) // self.block_size)
+            usable = self.alloc.num_blocks - 1
+            if pages > usable:
+                raise ValueError(
+                    f"request needs up to {pages} KV pages but the pool has "
+                    f"only {usable}; raise num_blocks or shrink the request")
+        self.queue.append(req)
+        return req.rid
 
     def _free_slot(self) -> Optional[int]:
         for i, r in enumerate(self.active):
@@ -71,28 +223,97 @@ class ServeEngine:
                 return b
         return self.prefill_buckets[-1]
 
-    def _admit(self):
-        slot = self._free_slot()
-        if slot is None or not self.queue:
-            return
-        req = self.queue.pop(0)
-        plen = min(len(req.prompt), self.max_seq - req.max_new_tokens - 1)
-        prompt = req.prompt[:plen]
-        bucket = self._bucket(plen)
-        padded = np.zeros((bucket,), np.int32)
-        padded[:plen] = prompt
-        # single-sequence prefill into this slot: run prefill on a batch of
-        # one, then scatter the produced cache slab into the engine state.
-        one_state = M.init_decode_state(self.cfg, 1, self.max_seq)
-        logits, one_state = jax.jit(
-            lambda p, s, t, l: M.prefill(self.cfg, p, s, tokens=t, lengths=l),
-            static_argnames=())(self.params, one_state, padded[None],
-                                jnp.array([plen], jnp.int32))
-        self.state = _scatter_slot(self.state, one_state, slot)
-        self.lengths[slot] = plen
+    def _plen(self, req: Request) -> int:
+        return max(1, min(len(req.prompt),
+                          self.max_seq - req.max_new_tokens - 1))
+
+    # -- scheduling ----------------------------------------------------
+    def _admit(self) -> None:
+        """Move queued requests into free slots (no token cost; the prefill
+        work is budgeted separately in _prefill_tick)."""
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            req = self.queue.pop(0)
+            req.prefill_pos = 0
+            self.active[slot] = req
+            self.lengths[slot] = 0
+
+    def _prefill_tick(self, budget: int, finished: List[Request]) -> int:
+        """Advance pending prefills under ``budget`` padded tokens.  Paged
+        slots move chunk-by-chunk and several can progress per tick; dense
+        slabs cannot chunk, so that mode keeps the seed engine's admission
+        rate (one monolithic prefill per tick — the A/B baseline).
+        Returns the unspent budget."""
+        pending = [(slot, req) for slot, req in enumerate(self.active)
+                   if req is not None and req.prefill_pos < self._plen(req)]
+        if not self.paged:
+            for slot, req in pending[:1]:
+                plen = self._plen(req)
+                logits = self._run_prefill_chunk(slot, req,
+                                                 self._bucket(plen), plen)
+                self.stats["prefill_tokens"] += plen
+                req.prefill_pos = plen
+                self.lengths[slot] = plen
+                self._finish_prefill(slot, req, logits, finished)
+            return budget
+        for slot, req in pending:
+            plen = self._plen(req)
+            while req.prefill_pos < plen:
+                remaining = plen - req.prefill_pos
+                bucket = self._bucket(min(remaining, max(budget, 1)))
+                if bucket > budget:
+                    if bucket <= self.max_tokens_per_tick:
+                        break                  # affordable on a richer tick
+                    # the round-up bucket can NEVER fit the budget (it sits
+                    # between two bucket sizes): chunk at the largest
+                    # affordable bucket instead of stalling forever
+                    afford = [b for b in self.prefill_buckets if b <= budget]
+                    if not afford:
+                        break                  # not affordable this tick
+                    bucket = afford[-1]
+                n = min(remaining, bucket)
+                if not self.alloc.ensure(slot, req.prefill_pos + n):
+                    self.stats["stalled_ticks"] += 1
+                    break                      # pool exhausted; wait
+                logits = self._run_prefill_chunk(slot, req, bucket, n)
+                budget -= bucket
+                self.stats["prefill_tokens"] += n
+                req.prefill_pos += n
+                self.lengths[slot] = req.prefill_pos
+                if req.prefill_pos >= plen:
+                    self._finish_prefill(slot, req, logits, finished)
+        return budget
+
+    def _finish_prefill(self, slot: int, req: Request, logits,
+                        finished: List[Request]) -> None:
+        """Prompt fully cached: sample the first token; retire immediately
+        on EOS / single-token requests."""
         first = self._sample(logits[0], req)
         req.out_tokens.append(int(first))
-        self.active[slot] = req
+        hit_eos = req.eos_id is not None and first == req.eos_id
+        if hit_eos or req.max_new_tokens <= 1:
+            req.done = True
+            finished.append(req)
+            self._retire(slot)
+
+    def _run_prefill_chunk(self, slot: int, req: Request, bucket: int,
+                           n: int):
+        padded = np.zeros((bucket,), np.int32)
+        padded[:n] = req.prompt[req.prefill_pos:req.prefill_pos + n]
+        fn = self._prefill_fn(bucket)
+        if self.paged:
+            logits, self.state = fn(
+                self.params, self.state, jnp.asarray(padded[None]),
+                jnp.int32(n), jnp.int32(req.prefill_pos),
+                jnp.asarray(self.alloc.table[slot].copy()))
+            return logits
+        # dense: single-sequence prefill scattered into the slot's slab
+        logits, one_state = fn(self.params, jnp.asarray(padded[None]),
+                               jnp.array([n], jnp.int32))
+        self.state = _scatter_slot(self.state, one_state, slot)
+        return logits
 
     def _sample(self, logits, req: Request) -> int:
         logits = logits.reshape(-1)
@@ -101,42 +322,133 @@ class ServeEngine:
         self.rng, sub = jax.random.split(self.rng)
         return int(jax.random.categorical(sub, logits / req.temperature))
 
-    # ------------------------------------------------------------------
+    # -- engine tick ---------------------------------------------------
+    def _decode_ready(self, slot: int) -> bool:
+        req = self.active[slot]
+        return (req is not None and req.out_tokens
+                and req.prefill_pos >= self._plen(req))
+
     def step(self) -> List[Request]:
-        """One engine tick: admit, batched-decode all active slots, retire.
-        Returns requests completed this tick."""
+        """One engine tick: admit + chunk-prefill under the token budget,
+        one batched decode over all ready slots, retire finished requests.
+        Returns the requests completed this tick."""
         self._tick += 1
+        self.stats["ticks"] += 1
+        progress0 = self.stats["prefill_tokens"] + self.stats["decode_tokens"]
+        stall0 = self.stats["stalled_ticks"]
         self._admit()
-        live = [i for i, r in enumerate(self.active) if r is not None]
         finished: List[Request] = []
+        decode_slots = [i for i in range(self.slots) if self._decode_ready(i)]
+        # decode is never starved: its tokens are reserved before prefill,
+        # and (paged) so are its pages — otherwise a prefilling slot could
+        # snatch the last page a decode needs, every tick, forever
+        if self.paged:
+            for i in decode_slots:
+                self.alloc.ensure(i, self.lengths[i] + 1)
+        self._prefill_tick(self.max_tokens_per_tick - len(decode_slots),
+                           finished)
+        live = [i for i in range(self.slots) if self._decode_ready(i)]
+        self.stats["occupancy_sum"] += (
+            sum(r is not None for r in self.active) / self.slots)
         if live:
-            toks = np.zeros((self.slots,), np.int32)
+            runnable = []
             for i in live:
-                toks[i] = self.active[i].out_tokens[-1]
-            logits, self.state = self._decode(
-                self.params, self.state, jnp.asarray(toks),
-                jnp.asarray(self.lengths))
-            for i in live:
-                req = self.active[i]
-                self.lengths[i] += 1
-                nxt = self._sample(logits[i], req)
-                req.out_tokens.append(nxt)
-                hit_eos = req.eos_id is not None and nxt == req.eos_id
-                if (len(req.out_tokens) >= req.max_new_tokens or hit_eos
-                        or self.lengths[i] >= self.max_seq - 1):
-                    req.done = True
-                    finished.append(req)
-                    self.active[i] = None
-                    self.lengths[i] = 0
+                if self.paged and not self.alloc.ensure(i, self.lengths[i] + 1):
+                    self.stats["stalled_ticks"] += 1
+                    continue                   # stalled: re-decoded later
+                runnable.append(i)
+            if runnable:
+                toks = np.zeros((self.slots,), np.int32)
+                for i in runnable:
+                    toks[i] = self.active[i].out_tokens[-1]
+                # .copy(): jnp.asarray zero-copy-aliases numpy buffers on
+                # CPU, and lengths/table are mutated below while the async
+                # dispatch may still be reading them
+                tables = (jnp.asarray(self.alloc.table.copy()) if self.paged
+                          else None)
+                logits, self.state = self._decode(
+                    self.params, self.state, jnp.asarray(toks),
+                    jnp.asarray(self.lengths.copy()), tables)
+                for i in runnable:
+                    req = self.active[i]
+                    self.lengths[i] += 1
+                    self.stats["decode_tokens"] += 1
+                    nxt = self._sample(logits[i], req)
+                    req.out_tokens.append(nxt)
+                    hit_eos = req.eos_id is not None and nxt == req.eos_id
+                    if (len(req.out_tokens) >= req.max_new_tokens or hit_eos
+                            or self.lengths[i] >= self.max_seq - 1):
+                        req.done = True
+                        finished.append(req)
+                        self._retire(i)
+        made_progress = (self.stats["prefill_tokens"]
+                         + self.stats["decode_tokens"] > progress0)
+        if (self.paged and not made_progress and not finished
+                and self.stats["stalled_ticks"] > stall0):
+            # every live slot is waiting on pages and nothing else moved:
+            # a static tick would repeat forever — break the deadlock
+            self._preempt_for_deadlock()
         return finished
 
-    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+    def _preempt_for_deadlock(self) -> None:
+        """Two+ partially-allocated slots can wait on each other's pages
+        (each request fits the pool alone, together they don't).  Release
+        the cheapest-to-restart slot and requeue its request so the others
+        can run; it restarts from scratch later (greedy output unchanged;
+        temperature requests re-roll).  Real preemption/eviction that
+        saves progress is future work (see ROADMAP)."""
+        victims = [i for i, r in enumerate(self.active)
+                   if r is not None and self.alloc.used[i] > 0]
+        if len(victims) < 2:
+            return
+        slot = min(victims, key=lambda i: (len(self.active[i].out_tokens),
+                                           self.active[i].prefill_pos))
+        req = self.active[slot]
+        req.prefill_pos = 0
+        req.out_tokens = []
+        self._retire(slot)
+        self.queue.insert(0, req)
+        self.stats["preemptions"] += 1
+
+    def _retire(self, slot: int) -> None:
+        self.active[slot] = None
+        self.lengths[slot] = 0
+        if self.paged:
+            self.alloc.release(slot)
+
+    def run_until_drained(self, max_ticks: int = 10_000,
+                          strict: bool = True) -> List[Request]:
+        """Step until queue and slots are empty.  With ``strict`` (default)
+        an engine that cannot drain within ``max_ticks`` raises instead of
+        silently returning a partial result set."""
         done: List[Request] = []
         for _ in range(max_ticks):
             done.extend(self.step())
             if not self.queue and all(r is None for r in self.active):
-                break
+                return done
+        if strict:
+            live = [r.rid for r in self.active if r is not None]
+            raise RuntimeError(
+                f"engine not drained after {max_ticks} ticks "
+                f"(queued={len(self.queue)}, active rids={live}, "
+                f"stalled_ticks={self.stats['stalled_ticks']:.0f})")
         return done
+
+    # -- introspection -------------------------------------------------
+    def reset_stats(self) -> None:
+        """Zero the counters (jit caches are kept) — benchmarks call this
+        after a warmup drain so compile time stays out of the timed run."""
+        for k in self.stats:
+            self.stats[k] = 0
+
+    @property
+    def mean_occupancy(self) -> float:
+        t = self.stats["ticks"]
+        return self.stats["occupancy_sum"] / t if t else 0.0
+
+    def kv_cache_bytes(self) -> int:
+        return sum(a.size * a.dtype.itemsize
+                   for a in jax.tree.leaves(self.state))
 
 
 def _scatter_slot(state, one_state, slot: int):

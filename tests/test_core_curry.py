@@ -1,6 +1,8 @@
 """Curry ALU iterated numerics: hypothesis accuracy bounds."""
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 import jax.numpy as jnp
 import numpy as np
 

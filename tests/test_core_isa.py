@@ -1,7 +1,9 @@
 """Hierarchical ISA: lowering invariants, path-generation fusion, and
 program execution vs jnp oracles (paper §5)."""
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 import jax
 import jax.numpy as jnp
 import numpy as np

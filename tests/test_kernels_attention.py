@@ -1,11 +1,12 @@
 """Flash/decode attention Pallas kernels vs the pure-jnp oracle:
 shape/dtype sweeps + hypothesis property tests (interpret mode)."""
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import (decode_attention,

@@ -1,9 +1,10 @@
 """RMSNorm / RoPE / SwiGLU / weight-stationary matmul kernels vs oracles."""
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.kernels import ref
 from repro.kernels.matmul import weight_stationary_matmul

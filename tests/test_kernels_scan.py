@@ -1,9 +1,10 @@
 """RWKV6 / Mamba2 chunked Pallas kernels vs exact recurrent oracles."""
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.kernels import ref
 from repro.kernels.mamba_chunk import mamba2_chunked

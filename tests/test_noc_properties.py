@@ -15,13 +15,14 @@ failures = []
 for n, shape, dtype, comb in itertools.product(
         (2, 4, 8), ((4,), (3, 5), (2, 2, 2)),
         (jnp.float32, jnp.bfloat16), ('add', 'max')):
-    mesh = jax.make_mesh((n,), ('x',),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import compat_mesh
+    mesh = compat_mesh((n,), ('x',))
     v = jnp.asarray(rng.normal(size=(n,) + shape), dtype)
     want = (v.astype(jnp.float32).sum(0) if comb == 'add'
             else v.astype(jnp.float32).max(0))
     for fn in (noc.butterfly_all_reduce, noc.tree_all_reduce):
-        got = jax.shard_map(lambda a: fn(a, 'x', comb), mesh=mesh,
+        from repro import compat
+        got = compat.shard_map(lambda a: fn(a, 'x', comb), mesh=mesh,
                             in_specs=P('x'), out_specs=P('x'),
                             check_vma=False)(v)
         err = float(jnp.abs(got.astype(jnp.float32)

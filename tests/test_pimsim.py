@@ -1,8 +1,9 @@
 """Analytical simulator: paper-claim bands + internal consistency
 properties (monotonicity, ablation ordering, breakdown positivity)."""
-import hypothesis
-import hypothesis.strategies as st
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.configs.paper_models import (GPT3_175B, LLAMA2_70B, LLAMA2_7B,
                                         QWEN_72B)

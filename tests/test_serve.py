@@ -1,5 +1,5 @@
 """Serving engine: drain, greedy consistency vs manual rollout, slot reuse,
-ragged admission."""
+multi-admission scheduling, compile-count flatness, determinism."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -69,3 +69,82 @@ def test_engine_ssm_arch():
     done = eng.run_until_drained()
     assert len(done) == 2
     assert all(np.isfinite(r.out_tokens).all() for r in done)
+
+
+def test_engine_multi_admission_per_tick():
+    """The paged scheduler fills several free slots in one tick when the
+    token budget allows (the seed engine admitted exactly one per tick)."""
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, params, max_seq=64, slots=4,
+                      prefill_buckets=(8, 16, 32),
+                      max_tokens_per_tick=4 + 4 * 8)
+    for _ in range(4):
+        eng.submit([1, 2, 3], max_new_tokens=4)
+    eng.step()
+    started = sum(bool(r is not None and r.out_tokens) for r in eng.active)
+    assert started == 4                    # all four prefilled on tick 1
+
+
+def test_prefill_compile_count_stays_flat():
+    """One trace per bucket, ever: admissions re-use the cached jit (the
+    seed engine built a fresh jax.jit(lambda ...) per admission)."""
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, params, max_seq=64, slots=2,
+                      prefill_buckets=(8, 16, 32))
+    for i in range(6):
+        eng.submit([1 + i, 2, 3], max_new_tokens=3)   # same bucket
+    eng.run_until_drained()
+    assert eng.stats["prefill_traces"] == 1
+    assert eng.stats["decode_traces"] == 1
+    for i in range(4):
+        eng.submit(list(range(1, 11)), max_new_tokens=3)  # bucket 16
+    eng.run_until_drained()
+    assert eng.stats["prefill_traces"] == 2
+    assert eng.stats["decode_traces"] == 1
+
+
+def test_slots_reused_after_retirement():
+    """More requests than slots: slots recycle after EOS/max-len and the
+    paged allocator ends with every page back in the pool."""
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, params, max_seq=32, slots=2, block_size=8,
+                      prefill_buckets=(8, 16, 32))
+    rids = [eng.submit([1 + i, 5, 9], max_new_tokens=3) for i in range(7)]
+    done = eng.run_until_drained()
+    assert sorted(r.rid for r in done) == rids
+    assert all(r is None for r in eng.active)
+    if eng.paged:
+        assert eng.alloc.free_blocks == eng.alloc.num_blocks - 1
+
+
+def test_batched_equals_single_slot_runs():
+    """Batched greedy decode of N concurrent requests == N independent
+    single-slot runs, token-for-token."""
+    cfg, params = _setup()
+    prompts = [[3, 1, 4, 1, 5], [2, 7], [18, 2, 8, 1], [9, 9, 9]]
+    kw = dict(max_seq=32, slots=4, prefill_buckets=(8, 16, 32))
+    eng = ServeEngine(cfg, params, **kw)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=5)
+    batched = {r.rid: r.out_tokens for r in eng.run_until_drained()}
+    for rid, p in enumerate(prompts):
+        solo = ServeEngine(cfg, params, max_seq=32, slots=1,
+                           prefill_buckets=(8, 16, 32))
+        solo.submit(p, max_new_tokens=5)
+        assert solo.run_until_drained()[0].out_tokens == batched[rid], rid
+
+
+def test_engine_deterministic_across_runs():
+    """Same stream twice -> identical tokens.  Guards the host/device
+    buffer-aliasing race (jnp.asarray zero-copies numpy on CPU; mutating
+    lengths/tables during an in-flight decode was nondeterministic)."""
+    cfg, params = _setup()
+
+    def drive():
+        eng = ServeEngine(cfg, params, max_seq=64, slots=3,
+                          prefill_buckets=(8, 16, 32))
+        for i in range(6):
+            eng.submit([1 + i, 2, 3, 4 + i], max_new_tokens=6)
+        return {r.rid: r.out_tokens for r in eng.run_until_drained()}
+
+    assert drive() == drive()

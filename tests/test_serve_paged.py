@@ -1,0 +1,260 @@
+"""Paged-KV serving: kernel vs dense oracle (interpret mode), the (acc,m,l)
+partials contract, chunked prefill exactness, block allocator, and
+paged-engine vs dense-engine token parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.kernels import decode_attention as da
+from repro.kernels import ref
+from repro.models import model as M
+from repro.serve import ServeEngine
+from repro.serve.engine import BlockAllocator
+
+
+def _rand_paged_case(rng, b=3, h=8, kvh=4, d=16, bs=8, mb=6, nb=20):
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    k_pages = jnp.asarray(rng.normal(size=(kvh, nb, bs, d)), jnp.float32)
+    v_pages = jnp.asarray(rng.normal(size=(kvh, nb, bs, d)), jnp.float32)
+    bt = jnp.asarray(rng.permutation(nb)[:b * mb].reshape(b, mb), jnp.int32)
+    lens = jnp.asarray(rng.integers(1, mb * bs, size=(b,)), jnp.int32)
+    return q, k_pages, v_pages, bt, lens
+
+
+def test_paged_kernel_matches_dense_ref_interpret(rng):
+    """Pallas paged kernel (interpret) == dense reference on the gathered
+    linear cache, to fp32 tolerance."""
+    q, kp, vp, bt, lens = _rand_paged_case(rng)
+    k_lin = ref.gather_pages(kp, bt)
+    v_lin = ref.gather_pages(vp, bt)
+    want = ref.decode_attention(q, k_lin, v_lin, lengths=lens)
+    got = da.paged_decode_attention(q, kp, vp, bt, lengths=lens,
+                                    interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_partials_contract(rng):
+    """Paged partials keep the (acc, m, l) algebra: they match the dense
+    reference partials and recombine across page-range shards exactly as
+    ``core.noc.tree_softmax_combine`` expects."""
+    q, kp, vp, bt, lens = _rand_paged_case(rng)
+    k_lin = ref.gather_pages(kp, bt)
+    v_lin = ref.gather_pages(vp, bt)
+    acc_w, m_w, l_w = ref.decode_attention_partial(q, k_lin, v_lin,
+                                                   lengths=lens)
+    for impl in ("ref", "interpret"):
+        if impl == "ref":
+            acc, m, l = ref.paged_decode_attention_partial(q, kp, vp, bt,
+                                                           lengths=lens)
+        else:
+            acc, m, l = da.paged_decode_attention_partial(
+                q, kp, vp, bt, lengths=lens, interpret=True)
+        np.testing.assert_allclose(np.asarray(acc), np.asarray(acc_w),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(m), np.asarray(m_w),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(l), np.asarray(l_w),
+                                   rtol=1e-5, atol=1e-5)
+
+    # default lengths must include kv_offset identically on both backends
+    # (the sharded-serving entry point passes lengths=None + kv_offset)
+    r_off = ref.paged_decode_attention_partial(q, kp, vp, bt, kv_offset=5)
+    p_off = da.paged_decode_attention_partial(q, kp, vp, bt, kv_offset=5,
+                                              interpret=True)
+    for a, b in zip(r_off, p_off):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+    # shard the KV range in two, combine partials: == full attention
+    bs = kp.shape[2]
+    half = bt.shape[1] // 2
+    p1 = ref.decode_attention_partial(q, k_lin[:, :half * bs],
+                                      v_lin[:, :half * bs], lengths=lens)
+    p2 = ref.decode_attention_partial(q, k_lin[:, half * bs:],
+                                      v_lin[:, half * bs:], lengths=lens,
+                                      kv_offset=half * bs)
+    acc, m, l = ref.combine_partials(p1, p2)
+    merged = acc / jnp.maximum(l, 1e-30)[..., None]
+    want = ref.decode_attention(q, k_lin, v_lin, lengths=lens)
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_prefill_paged_matches_dense_rollout():
+    """Model-level: chunked prefill_paged + decode_step_paged reproduces
+    the dense prefill + decode_step greedy rollout token-for-token."""
+    cfg = reduced(get_config("granite-3-2b"))
+    params = M.init_params(cfg, jax.random.key(0), dtype=jnp.float32)
+    prompt = [3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5]
+    plen, max_seq, bs = len(prompt), 32, 8
+    mb = max_seq // bs
+
+    state = M.init_decode_state(cfg, 1, max_seq, dtype=jnp.float32)
+    lg, state = M.prefill(cfg, params, state,
+                          tokens=jnp.asarray([prompt], jnp.int32),
+                          lengths=jnp.array([plen], jnp.int32))
+    dense = [int(jnp.argmax(lg))]
+    ln = plen
+    for _ in range(5):
+        lg, state = M.decode_step(cfg, params, state,
+                                  jnp.array([dense[-1]], jnp.int32),
+                                  jnp.array([ln], jnp.int32))
+        ln += 1
+        dense.append(int(jnp.argmax(lg[0])))
+
+    pstate = M.init_paged_decode_state(cfg, 1 + mb, bs, dtype=jnp.float32)
+    bt = jnp.arange(1, 1 + mb, dtype=jnp.int32)
+    off, chunk = 0, 4
+    while off < plen:
+        n = min(chunk, plen - off)
+        tok = np.zeros((1, chunk), np.int32)
+        tok[0, :n] = prompt[off:off + n]
+        lg, pstate = M.prefill_paged(cfg, params, pstate,
+                                     tokens=jnp.asarray(tok),
+                                     length=jnp.int32(n),
+                                     q_offset=jnp.int32(off), block_table=bt)
+        off += n
+    paged = [int(jnp.argmax(lg[0]))]
+    ln = plen
+    for _ in range(5):
+        lg, pstate = M.decode_step_paged(cfg, params, pstate,
+                                         jnp.array([paged[-1]], jnp.int32),
+                                         jnp.array([ln], jnp.int32), bt[None])
+        ln += 1
+        paged.append(int(jnp.argmax(lg[0])))
+    assert paged == dense
+
+
+def test_block_allocator():
+    alloc = BlockAllocator(num_blocks=7, block_size=4, slots=2,
+                           max_blocks_per_slot=3)
+    assert alloc.free_blocks == 6          # page 0 reserved as null sink
+    assert alloc.ensure(0, 9)              # 3 blocks
+    assert alloc.used[0] == 3 and 0 not in alloc.table[0][:3]
+    assert alloc.ensure(1, 5)              # 2 blocks
+    assert not alloc.ensure(1, 13)         # > max_blocks_per_slot
+    held = set(alloc.table[0][:3]) | set(alloc.table[1][:2])
+    assert len(held) == 5                  # all distinct physical pages
+    alloc.release(0)
+    assert alloc.free_blocks == 4 and alloc.used[0] == 0
+    assert alloc.ensure(1, 12)             # can now grow into freed pages
+    assert alloc.ensure(0, 9)
+    assert alloc.free_blocks == 0
+
+    tight = BlockAllocator(num_blocks=3, block_size=4, slots=1,
+                           max_blocks_per_slot=3)
+    assert not tight.ensure(0, 9)          # pool exhausted mid-growth...
+    assert tight.used[0] == 2              # ...partial hold kept for retry
+    tight.release(0)
+    assert tight.ensure(0, 5)
+
+
+def _setup(arch="granite-3-2b"):
+    cfg = reduced(get_config(arch))
+    params = M.init_params(cfg, jax.random.key(0), dtype=jnp.float32)
+    return cfg, params
+
+
+_PROMPTS = [[3, 1, 4], [1, 5, 9, 2, 6], [5, 3], list(range(2, 52)),
+            [7, 7, 7, 7], [2, 71, 8], [42], [9, 9, 2]]
+
+
+def _drain_tokens(eng):
+    for p in _PROMPTS:
+        eng.submit(p, max_new_tokens=5)
+    return {r.rid: tuple(r.out_tokens) for r in eng.run_until_drained()}
+
+
+def test_paged_engine_matches_dense_engine():
+    """Acceptance: paged engine == dense engine, greedy, token-for-token,
+    on a toy config — across slot reuse and a chunked 50-token prompt."""
+    cfg, params = _setup()
+    kw = dict(max_seq=64, slots=3, prefill_buckets=(8, 16, 32), block_size=8)
+    dense = _drain_tokens(ServeEngine(cfg, params, paged=False, **kw))
+    paged = _drain_tokens(ServeEngine(cfg, params, paged=True, **kw))
+    assert len(dense) == len(_PROMPTS)
+    assert dense == paged
+    assert all(len(t) == 5 for t in paged.values())
+
+
+def test_paged_engine_under_pool_pressure():
+    """An undersized page pool forces slots to stall and wait for recycled
+    pages; everything still drains and pages are fully recovered."""
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, params, max_seq=32, slots=3, block_size=8,
+                      prefill_buckets=(8, 16, 32), paged=True,
+                      num_blocks=4)                 # null + 3 usable pages
+    for p in ([1, 2, 3, 4, 5, 6], [7, 8, 9], [10, 11, 12, 13], [14, 2]):
+        eng.submit(p, max_new_tokens=4)
+    done = eng.run_until_drained()
+    assert len(done) == 4
+    assert all(len(r.out_tokens) == 4 for r in done)
+    assert eng.stats["stalled_ticks"] > 0           # pressure was real
+    assert eng.alloc.free_blocks == 3               # all pages recycled
+
+
+def test_budget_between_buckets_still_progresses():
+    """A token budget strictly between two bucket sizes chunks at the
+    largest affordable bucket instead of livelocking (regression)."""
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, params, max_seq=64, slots=2, block_size=8,
+                      prefill_buckets=(8, 32, 64), max_tokens_per_tick=18)
+    eng.submit(list(range(2, 42)), max_new_tokens=3)   # 40-token prompt
+    done = eng.run_until_drained(max_ticks=100)
+    assert len(done) == 1 and len(done[0].out_tokens) == 3
+
+
+def test_oversized_request_rejected_up_front():
+    """A request that could never fit the page pool is rejected at submit
+    instead of stalling the engine forever holding partial pages."""
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, params, max_seq=64, slots=2, block_size=8,
+                      paged=True, num_blocks=3)        # 2 usable pages
+    with pytest.raises(ValueError):
+        eng.submit(list(range(2, 42)), max_new_tokens=4)
+    eng.submit([1, 2, 3], max_new_tokens=4)            # 1-2 pages: fits
+    assert len(eng.run_until_drained()) == 1
+
+
+def test_cross_slot_allocation_deadlock_broken_by_preemption():
+    """Two requests that each fit the pool alone but deadlock together
+    (one mid-prefill holding pages, one decode-stalled) are untangled by
+    preempting the cheapest slot; both still complete (regression)."""
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, params, max_seq=128, slots=2, block_size=8,
+                      num_blocks=13, prefill_buckets=(32, 128),
+                      max_tokens_per_tick=66)
+    for _ in range(2):
+        eng.submit(list(range(1, 73)), max_new_tokens=4)   # 10 pages each
+    done = eng.run_until_drained()
+    assert len(done) == 2
+    assert all(len(r.out_tokens) == 4 for r in done)
+    assert eng.stats["preemptions"] >= 1
+    assert eng.alloc.free_blocks == 12
+
+
+def test_run_until_drained_strict_raises_when_stuck(monkeypatch):
+    """A wedged engine raises under strict drain instead of silently
+    returning a partial result set."""
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, params, max_seq=32, slots=1,
+                      prefill_buckets=(8, 16, 32))
+    eng.submit([1, 2, 3], max_new_tokens=4)
+    monkeypatch.setattr(eng, "step", lambda: [])        # engine never moves
+    with pytest.raises(RuntimeError, match="not drained"):
+        eng.run_until_drained(max_ticks=5)
+    assert eng.run_until_drained(max_ticks=5, strict=False) == []
+
+
+def test_submit_validation():
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, params, max_seq=32, slots=1)
+    with pytest.raises(ValueError):
+        eng.submit([])
+    with pytest.raises(ValueError):
+        eng.submit([cfg.vocab_size])                # out-of-vocab would NaN
+    with pytest.raises(ValueError):
+        eng.submit([-1])

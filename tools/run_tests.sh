@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the exact command the roadmap pins, runnable on a
+# bare CPU interpreter.  Collection must produce zero errors even without
+# hypothesis installed (property-test modules skip themselves).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
