@@ -1,16 +1,18 @@
 """Serving throughput: paged-KV continuous-batching engine vs. the dense
-[slots, max_seq] slab baseline on an identical synthetic request stream.
+[slots, max_seq] slab baseline, plus a shared-prefix workload that measures
+prefix caching (TTFT p50/p95, hit rate) with caching on vs off.
 
-Reports tokens/s, mean slot occupancy, KV-cache bytes, and the number of
-prefill traces (the seed engine re-jitted prefill on every admission).
-The stream mixes short and long prompts so chunked prefill and slot
-recycling are both exercised.
+Reports tokens/s, mean slot occupancy, KV-cache bytes, prefill traces, and
+page-gather volume, and writes everything machine-readable to
+``BENCH_serve.json`` so the perf trajectory is tracked across PRs.
 
   PYTHONPATH=src python -m benchmarks.serve_throughput [--slots 8]
+  PYTHONPATH=src python -m benchmarks.serve_throughput --smoke   # CI-sized
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -38,6 +40,21 @@ def _request_stream(rng, n_requests: int, max_seq: int, vocab: int):
     return reqs
 
 
+def _shared_prefix_stream(rng, n_requests: int, prefix_len: int,
+                          tail_len: int, vocab: int):
+    """N requests sharing one long system prompt + a short unique tail —
+    the fleet-serving shape where prefix caching collapses prefill cost."""
+    prefix = rng.integers(0, vocab, prefix_len).tolist()
+    # single-token completions: TTFT is about the *first* token, and decode
+    # ticks behind queued neighbours would only blur the prefill signal
+    return [(prefix + rng.integers(0, vocab, tail_len).tolist(),
+             dict(max_new_tokens=1)) for _ in range(n_requests)]
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
 def _drive(eng: ServeEngine, reqs) -> dict:
     for p, kw in reqs:
         eng.submit(p, **kw)
@@ -45,32 +62,46 @@ def _drive(eng: ServeEngine, reqs) -> dict:
     done = eng.run_until_drained()
     dt = time.perf_counter() - t0
     new_tokens = sum(len(r.out_tokens) for r in done)
+    ttfts = [r.ttft for r in done if r.ttft is not None]
     return {
-        "done": done, "dt": dt, "tok_s": new_tokens / dt,
+        "done": done, "dt": dt, "tok_s": new_tokens / dt, "ttfts": ttfts,
         "occupancy": eng.mean_occupancy,
         "kv_mb": eng.kv_cache_bytes() / 1e6,
         "prefill_traces": int(eng.stats["prefill_traces"]),
+        "prefill_tokens": int(eng.stats["prefill_tokens"]),
+        "prefix_hit_tokens": int(eng.stats["prefix_hit_tokens"]),
+        "prefix_hit_rate": eng.prefix_hit_rate,
+        "pages_shared": int(eng.stats["pages_shared"]),
+        "cow_copies": int(eng.stats["cow_copies"]),
+        "gather_pages_calls": int(eng.stats["gather_pages_calls"]),
+        "gather_page_volume": int(eng.stats["gather_page_volume"]),
+        "ttft_p50_ms": _pct(ttfts, 50) * 1e3,
+        "ttft_p95_ms": _pct(ttfts, 95) * 1e3,
         "tokens": {r.rid: tuple(r.out_tokens) for r in done},
     }
 
 
-def run(slots: int = 8, max_seq: int = 128, n_requests: int = 32,
-        seed: int = 0):
+def _jsonable(r: dict) -> dict:
+    return {k: v for k, v in r.items() if k not in ("done", "tokens", "ttfts")}
+
+
+def run_mixed(cfg, params, slots: int, max_seq: int, n_requests: int,
+              seed: int = 0) -> dict:
     header("serve throughput: paged vs dense engine")
-    cfg = reduced(get_config("stablelm-1.6b"))
-    params = M.init_params(cfg, jax.random.key(0), dtype=jnp.float32)
     reqs = _request_stream(np.random.default_rng(seed), n_requests, max_seq,
                            cfg.vocab_size)
     buckets = (16, 32, max_seq)
-
     mk = dict(max_seq=max_seq, slots=slots, prefill_buckets=buckets)
     res = {}
     for mode, paged in (("dense", False), ("paged", True)):
         eng = ServeEngine(cfg, params, paged=paged, block_size=16, **mk)
-        # warm every bucket's jit so compile time stays out of the timing
+        # warm every (chunk-bucket, block-table-bucket) jit so compile time
+        # stays out of the timing: one prompt per bucket plus a near-max one
+        # that exercises the largest table slice
         for b in buckets:
             eng.submit(list(range(1, min(b, max_seq // 2))),
                        max_new_tokens=2)
+        eng.submit(list(range(1, max_seq - 4)), max_new_tokens=2)
         eng.run_until_drained()
         eng.reset_stats()
         res[mode] = _drive(eng, reqs)
@@ -78,12 +109,83 @@ def run(slots: int = 8, max_seq: int = 128, n_requests: int = 32,
     for mode, r in res.items():
         emit(f"serve_{mode}_s{slots}", r["dt"] * 1e6 / max(1, len(r["done"])),
              f"tok_s={r['tok_s']:.1f};occupancy={r['occupancy']:.2f};"
-             f"kv_mb={r['kv_mb']:.2f};prefill_traces={r['prefill_traces']}")
+             f"kv_mb={r['kv_mb']:.2f};prefill_traces={r['prefill_traces']};"
+             f"gather_pages={r['gather_page_volume']}")
     speedup = res["paged"]["tok_s"] / res["dense"]["tok_s"]
     match = res["paged"]["tokens"] == res["dense"]["tokens"]
     emit(f"serve_paged_vs_dense_s{slots}", 0.0,
          f"speedup={speedup:.2f};outputs_match={match}")
-    return res
+    return {"dense": _jsonable(res["dense"]), "paged": _jsonable(res["paged"]),
+            "paged_speedup": speedup, "outputs_match": bool(match)}
+
+
+def run_shared_prefix(cfg, params, slots: int, max_seq: int,
+                      n_requests: int, seed: int = 0, passes: int = 3) -> dict:
+    """Prefix caching A/B on a common-system-prompt stream: ≥2x TTFT is the
+    acceptance bar, with greedy outputs token-identical on vs off."""
+    header("serve shared-prefix: prefix caching on vs off")
+    # prefill-dominated shape: a long common system prompt, a short unique
+    # tail, and short completions (the interactive-fleet TTFT regime).
+    # TTFT sits in the few-ms range on tiny configs, so the stream is timed
+    # over several passes and percentiles pool all of them.
+    sp_seq = max(256, max_seq)
+    prefix_len = 3 * sp_seq // 4
+    reqs = _shared_prefix_stream(np.random.default_rng(seed), n_requests,
+                                 prefix_len, 2, cfg.vocab_size)
+    buckets = (16, 32, sp_seq)
+    res = {}
+    for mode, cache in (("cache_off", False), ("cache_on", True)):
+        eng = ServeEngine(cfg, params, paged=True, block_size=16,
+                          max_seq=sp_seq, slots=slots,
+                          prefill_buckets=buckets, prefix_caching=cache)
+        # warmup pass over the same stream shape: compiles every
+        # (chunk-bucket, table-bucket) jit AND (cache_on) publishes the
+        # shared prefix — the timed passes are the steady-state hot server
+        for p, kw in reqs:
+            eng.submit(p, **kw)
+        eng.run_until_drained()
+        ttfts = []
+        for _ in range(passes):
+            eng.reset_stats()          # counters stay single-pass; only the
+            res[mode] = _drive(eng, reqs)  # pooled TTFTs span all passes
+            ttfts += res[mode]["ttfts"]
+        res[mode]["ttft_p50_ms"] = _pct(ttfts, 50) * 1e3
+        res[mode]["ttft_p95_ms"] = _pct(ttfts, 95) * 1e3
+
+    for mode, r in res.items():
+        emit(f"serve_prefix_{mode}_s{slots}", r["ttft_p50_ms"] * 1e3,
+             f"ttft_p50_ms={r['ttft_p50_ms']:.1f};"
+             f"ttft_p95_ms={r['ttft_p95_ms']:.1f};tok_s={r['tok_s']:.1f};"
+             f"hit_rate={r['prefix_hit_rate']:.2f};"
+             f"prefill_tokens={r['prefill_tokens']}")
+    ttft_speedup = (res["cache_off"]["ttft_p50_ms"]
+                    / max(res["cache_on"]["ttft_p50_ms"], 1e-9))
+    match = res["cache_on"]["tokens"] == res["cache_off"]["tokens"]
+    emit(f"serve_prefix_speedup_s{slots}", 0.0,
+         f"ttft_p50_speedup={ttft_speedup:.2f};outputs_match={match};"
+         f"hit_rate={res['cache_on']['prefix_hit_rate']:.2f}")
+    return {"cache_on": _jsonable(res["cache_on"]),
+            "cache_off": _jsonable(res["cache_off"]),
+            "ttft_p50_speedup": ttft_speedup, "outputs_match": bool(match)}
+
+
+def run(slots: int = 8, max_seq: int = 128, n_requests: int = 32,
+        seed: int = 0, out_json: str = "BENCH_serve.json"):
+    cfg = reduced(get_config("stablelm-1.6b"))
+    params = M.init_params(cfg, jax.random.key(0), dtype=jnp.float32)
+    results = {
+        "bench": "serve_throughput",
+        "config": {"arch": "stablelm-1.6b (reduced)", "slots": slots,
+                   "max_seq": max_seq, "n_requests": n_requests,
+                   "backend": jax.default_backend()},
+        "mixed": run_mixed(cfg, params, slots, max_seq, n_requests, seed),
+        "shared_prefix": run_shared_prefix(cfg, params, slots, max_seq,
+                                           n_requests, seed),
+    }
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {out_json}")
+    return results
 
 
 def main():
@@ -91,9 +193,16 @@ def main():
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (tiny model, few requests)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(slots=args.slots, max_seq=args.max_seq, n_requests=args.requests)
+    if args.smoke:
+        run(slots=2, max_seq=64, n_requests=8, out_json=args.out)
+    else:
+        run(slots=args.slots, max_seq=args.max_seq, n_requests=args.requests,
+            out_json=args.out)
 
 
 if __name__ == "__main__":

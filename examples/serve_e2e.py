@@ -61,7 +61,24 @@ def main():
     print(f"served {len(done)} requests / {total_new} tokens "
           f"in {dt:.2f}s  ({total_new / dt:.1f} tok/s on CPU; kv={mode}, "
           f"occupancy={eng.mean_occupancy:.2f})")
+    s = eng.stats
+    print(f"engine stats: prefix_hits={s['prefix_hits']:.0f} "
+          f"({s['prefix_hit_tokens']:.0f} tokens, "
+          f"hit_rate={eng.prefix_hit_rate:.2f}), "
+          f"pages alloc/free/shared={s['pages_allocated']:.0f}/"
+          f"{s['pages_freed']:.0f}/{s['pages_shared']:.0f}, "
+          f"cow={s['cow_copies']:.0f}, "
+          f"gather_volume={s['gather_page_volume']:.0f} pages")
     assert len(done) == len(prompts)
+
+    # -- prefix caching: resubmit the longest prompt — its full pages are
+    # still registered, so prefill restarts at the first uncached token ----
+    eng.submit(list(range(30)), max_new_tokens=8)
+    redo = eng.run_until_drained()
+    print(f"resubmitted 30-token prompt: prefix_hit_tokens="
+          f"{eng.stats['prefix_hit_tokens']:.0f}, "
+          f"ttft={redo[0].ttft * 1e3:.1f}ms")
+    assert eng.stats["prefix_hit_tokens"] > 0
 
     # -- paged vs dense cross-check (greedy requests only) ----------------
     eng_d = ServeEngine(cfg, state.params, max_seq=96, slots=4, seed=1,

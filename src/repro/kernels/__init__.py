@@ -3,6 +3,8 @@
 #   flash_attention   — prefill/train attention (SRAM-PIM-stacking lane)
 #   decode_attention  — flash-decoding GeMV lane (DRAM-PIM lane) + partials
 #                       for the NoC tree-softmax combine
+#   prefill_attention — paged-prefill chunk attention (scalar-prefetch page
+#                       gather in the index_map; same partials contract)
 #   rmsnorm / rope / swiglu — Curry-ALU-style fused non-linears
 #   matmul            — weight-stationary GEMM (SRAM-PIM semantics)
 #   rwkv_chunk / mamba_chunk — recurrent-state chunk scans (VMEM-resident state)

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels import flash_attention as _fa
 from repro.kernels import decode_attention as _da
+from repro.kernels import prefill_attention as _pf
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import rope as _rope
 from repro.kernels import swiglu as _sw
@@ -58,6 +59,12 @@ def _use_pallas() -> bool:
 
 def _interp() -> bool:
     return _MODE == "interpret" or (_MODE == "pallas" and jax.default_backend() != "tpu")
+
+
+def using_pallas() -> bool:
+    """Public probe: will dispatch take the Pallas/kernel path right now?
+    (Hosts use it to account work that only the fallback performs.)"""
+    return _use_pallas()
 
 
 # ---------------------------------------------------------------------------
@@ -135,8 +142,59 @@ def paged_decode_attention_partial(q, k_pages, v_pages, block_tables, *,
                                               kv_offset=kv_offset)
 
 
+# Trace-time gather accounting: ``gather_pages`` linearizes pages host-side
+# (the data movement the paged kernels avoid), so every call site that still
+# traces one is visible here.  ``pages`` counts block-table entries — the
+# number of page copies the traced program performs per execution.
+_GATHER_STATS = {"calls": 0, "pages": 0}
+
+
+def reset_gather_stats() -> None:
+    _GATHER_STATS["calls"] = 0
+    _GATHER_STATS["pages"] = 0
+
+
+def gather_stats() -> dict:
+    return dict(_GATHER_STATS)
+
+
 def gather_pages(pages, block_table):
+    n = block_table.shape[-1]
+    if block_table.ndim == 2:
+        n *= block_table.shape[0]
+    _GATHER_STATS["calls"] += 1
+    _GATHER_STATS["pages"] += int(n)
     return ref.gather_pages(pages, block_table)
+
+
+def paged_prefill_attention(q, k_pages, v_pages, block_table, *, q_offset,
+                            length, window=None):
+    """Prefill-chunk attention over paged KV (chunk K/V already scattered).
+
+    Kernel path: scalar-prefetch page gather inside the Pallas index_map —
+    no host-side linearization at all.  Fallback: gather exactly the pages
+    in ``block_table`` (callers pass a prefix-length-bucketed slice, so the
+    copy volume tracks the live prefix, not the pool)."""
+    if _use_pallas() and window is None:
+        return _pf.paged_prefill_attention(
+            q, k_pages, v_pages, block_table, q_offset=q_offset,
+            length=length, interpret=_interp())
+    k_lin = gather_pages(k_pages, block_table)[None]
+    v_lin = gather_pages(v_pages, block_table)[None]
+    return ref.flash_attention(q, k_lin, v_lin, causal=True,
+                               q_offset=q_offset,
+                               lengths=jnp.reshape(q_offset + length, (1,)),
+                               window=window)
+
+
+def paged_prefill_attention_partial(q, k_pages, v_pages, block_table, *,
+                                    q_offset, length):
+    if _use_pallas():
+        return _pf.paged_prefill_attention_partial(
+            q, k_pages, v_pages, block_table, q_offset=q_offset,
+            length=length, interpret=_interp())
+    return ref.paged_prefill_attention_partial(
+        q, k_pages, v_pages, block_table, q_offset=q_offset, length=length)
 
 
 def matmul(x, w, *, out_dtype=None, bm: int = 256, bn: int = 256,

@@ -1,0 +1,167 @@
+"""Paged prefill attention — Pallas TPU kernel (a [chunk, d] query tile vs.
+the paged KV cache, causal within the chunk).
+
+This is the prefill half of the paged serving path.  The decode kernel
+(``decode_attention._paged_kernel``) streams one query row past the pages;
+here a whole prefill *chunk* rides along: the chunk's K/V rows are first
+scattered into their pages (``models/layers.attention_prefill_paged``), then
+this kernel attends over pages ``[0, ceil((q_offset+length)/BS))`` with the
+block table resolved inside the BlockSpec ``index_map`` via scalar prefetch.
+The host never linearizes the page table (the old path gathered *all*
+``max_blocks`` pages per layer per chunk — O(pool) copies for O(cached)
+live tokens, the inter-bank shuffling overhead CompAir attacks).
+
+Work is bounded by the live prefix: grid steps past the last live page clamp
+their index map to the final live page (consecutive identical indices elide
+the DMA) and skip compute under ``pl.when``.
+
+The kernel keeps the decode kernel's ``(acc, m, l)`` partials contract, so
+``core.noc.tree_softmax_combine`` applies unchanged when the page pool is
+sequence-sharded.
+
+Grid: (KvH, n_pages) — last axis sequential, scratch accumulates.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_prefill_kernel(bt_ref, qlen_ref, q_ref, k_ref, v_ref,
+                          o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr, *,
+                          scale: float, block_s: int, group: int,
+                          return_partials: bool):
+    ibk = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(ibk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    total = qlen_ref[0]                  # q_offset + length (live KV rows)
+    qoff = qlen_ref[1]                   # first global position of the chunk
+    n_live = (total + block_s - 1) // block_s
+
+    @pl.when(ibk < n_live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                     # [C*G, D]
+        k = k_ref[0, 0].astype(jnp.float32)                  # [BS, D]
+        s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+        # row r of the tile is (chunk position r // G, query head r % G)
+        qpos = qoff + lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+        kpos = ibk * block_s + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = (kpos <= qpos) & (kpos < total)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + lax.dot_general(
+            p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ibk == nb - 1)
+    def _finalize():
+        if return_partials:
+            o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+            m_ref[0] = m_scr[...][:, 0].astype(m_ref.dtype)
+            l_ref[0] = l_scr[...][:, 0].astype(l_ref.dtype)
+        else:
+            l = jnp.maximum(l_scr[...], 1e-30)
+            o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def _paged_prefill(q, k_pages, v_pages, block_table, q_offset, length, *,
+                   return_partials: bool, interpret: bool):
+    b, c, h, d = q.shape
+    assert b == 1, "paged prefill is single-sequence (chunked serving)"
+    kvh, _, bs, _ = k_pages.shape
+    g = h // kvh
+    mb = block_table.shape[0]
+    # row-major (position, group) tile so qpos = row // g
+    qh = jnp.transpose(q.reshape(c, kvh, g, d), (1, 0, 2, 3))
+    qh = qh.reshape(kvh, c * g, d)
+    total = (q_offset + length).astype(jnp.int32)
+    qlen = jnp.stack([jnp.minimum(total, mb * bs),
+                      jnp.asarray(q_offset, jnp.int32)])
+
+    out_dt = jnp.float32 if return_partials else q.dtype
+    kernel = functools.partial(
+        _paged_prefill_kernel, scale=1.0 / math.sqrt(d), block_s=bs,
+        group=g, return_partials=return_partials)
+
+    def _page_idx(ih, ibk, bt, ql):
+        # clamp dead grid steps onto the last live page: the repeated index
+        # elides the DMA and pl.when skips the compute
+        n_live = jnp.maximum((ql[0] + bs - 1) // bs, 1)
+        return bt[jnp.minimum(ibk, n_live - 1)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,            # block_table, (total, q_offset)
+        grid=(kvh, mb),
+        in_specs=[
+            pl.BlockSpec((1, c * g, d), lambda ih, ibk, bt, ql: (ih, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda ih, ibk, bt, ql: (ih, _page_idx(ih, ibk, bt, ql), 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda ih, ibk, bt, ql: (ih, _page_idx(ih, ibk, bt, ql), 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c * g, d), lambda ih, ibk, bt, ql: (ih, 0, 0)),
+            pl.BlockSpec((1, c * g), lambda ih, ibk, bt, ql: (ih, 0)),
+            pl.BlockSpec((1, c * g), lambda ih, ibk, bt, ql: (ih, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((c * g, 1), jnp.float32),
+            pltpu.VMEM((c * g, 1), jnp.float32),
+            pltpu.VMEM((c * g, d), jnp.float32),
+        ],
+    )
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((kvh, c * g, d), out_dt),
+            jax.ShapeDtypeStruct((kvh, c * g), jnp.float32),
+            jax.ShapeDtypeStruct((kvh, c * g), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), qlen, qh, k_pages, v_pages)
+    out = jnp.transpose(out.reshape(kvh, c, g, d), (1, 0, 2, 3))
+    m = jnp.transpose(m.reshape(kvh, c, g), (1, 0, 2))
+    l = jnp.transpose(l.reshape(kvh, c, g), (1, 0, 2))
+    return (out.reshape(1, c, h, d), m.reshape(1, c, h), l.reshape(1, c, h))
+
+
+def paged_prefill_attention(q, k_pages, v_pages, block_table, *, q_offset,
+                            length, interpret: bool = False):
+    """q [1,C,H,D]; k_pages,v_pages [KvH,NB,BS,D]; block_table [MB] -> [1,C,H,D].
+
+    The chunk's own K/V must already be scattered into the pages; causal
+    masking is on global positions (``q_offset + row``), KV validity on
+    ``kpos < q_offset + length``."""
+    out, _, _ = _paged_prefill(q, k_pages, v_pages, block_table, q_offset,
+                               length, return_partials=False,
+                               interpret=interpret)
+    return out
+
+
+def paged_prefill_attention_partial(q, k_pages, v_pages, block_table, *,
+                                    q_offset, length, interpret: bool = False):
+    """Per-shard partials (acc f32 [1,C,H,D], m [1,C,H], l [1,C,H]) for the
+    NoC tree combine — same algebra as the decode kernels."""
+    return _paged_prefill(q, k_pages, v_pages, block_table, q_offset, length,
+                          return_partials=True, interpret=interpret)

@@ -288,6 +288,48 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, *,
 
 
 # ---------------------------------------------------------------------------
+# paged prefill attention (a [chunk] query tile vs. the paged KV cache)
+# ---------------------------------------------------------------------------
+
+def paged_prefill_attention_partial(q, k_pages, v_pages, block_table, *,
+                                    q_offset, length,
+                                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Prefill-chunk attention partials over a paged KV cache (oracle).
+
+    q [1, C, H, D] is the chunk at global positions [q_offset, q_offset+C);
+    k_pages, v_pages [KvH, NB, BS, D]; block_table [MB] int32 (the chunk's
+    own K/V must already be scattered into the pages).  Causal mask on
+    global positions, KV validity on ``kpos < q_offset + length``.
+    Returns (acc f32 [1,C,H,D], m [1,C,H], l [1,C,H]) — the same algebra
+    :func:`combine_partials` / ``core.noc.tree_softmax_combine`` consume.
+    """
+    _, c, h, d = q.shape
+    k_lin = gather_pages(k_pages, block_table)        # [MB*BS, KvH, D]
+    v_lin = gather_pages(v_pages, block_table)
+    sk = k_lin.shape[0]
+    kh = _expand_kv(k_lin[None], h)[0]                # [Sk, H, D]
+    vh = _expand_kv(v_lin[None], h)[0]
+    s = jnp.einsum("chd,khd->chk", q[0].astype(jnp.float32),
+                   kh.astype(jnp.float32)) / jnp.sqrt(jnp.float32(d))
+    qpos = q_offset + jnp.arange(c)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    valid = (kpos <= qpos) & (kpos < q_offset + length)
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("chk,khd->chd", p, vh.astype(jnp.float32))
+    return acc[None], m[None], l[None]
+
+
+def paged_prefill_attention(q, k_pages, v_pages, block_table, *,
+                            q_offset, length) -> jax.Array:
+    acc, m, l = paged_prefill_attention_partial(
+        q, k_pages, v_pages, block_table, q_offset=q_offset, length=length)
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # matmul (the "SRAM-PIM lane": weight-stationary tiled GEMM)
 # ---------------------------------------------------------------------------
 

@@ -35,6 +35,8 @@ def main():
                     help="physical page pool size (default: full capacity)")
     ap.add_argument("--token-budget", type=int, default=None,
                     help="max padded tokens (prefill+decode) per tick")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable shared-prompt-page prefix caching")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore trained params (repro.checkpoint layout)")
     args = ap.parse_args()
@@ -54,10 +56,12 @@ def main():
             print(f"[serve] restored step {step_no} from {args.ckpt_dir}")
 
     paged = None if not args.dense else False
+    prefix_caching = False if (args.no_prefix_cache or args.dense) else None
     eng = ServeEngine(cfg, params, max_seq=args.max_seq, slots=args.slots,
                       paged=paged, block_size=args.block_size,
                       num_blocks=args.num_blocks,
-                      max_tokens_per_tick=args.token_budget)
+                      max_tokens_per_tick=args.token_budget,
+                      prefix_caching=prefix_caching)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for i in range(args.requests):
@@ -76,7 +80,9 @@ def main():
           f"({total / dt:.1f} tok/s)  kv={mode} "
           f"({eng.kv_cache_bytes() / 1e6:.1f} MB), "
           f"occupancy={eng.mean_occupancy:.2f}, "
-          f"prefill_traces={eng.stats['prefill_traces']:.0f}")
+          f"prefill_traces={eng.stats['prefill_traces']:.0f}, "
+          f"prefix_hit_tokens={eng.stats['prefix_hit_tokens']:.0f}, "
+          f"gather_volume={eng.stats['gather_page_volume']:.0f}")
 
 
 if __name__ == "__main__":

@@ -259,10 +259,13 @@ def attention_prefill_paged(p, x, positions, cfg: ModelConfig, kp_all, vp_all,
     """Chunked prefill of ONE sequence (batch 1) against paged KV.
 
     x [1,C,d] is the chunk at global positions [q_offset, q_offset+C);
-    ``length`` (traced scalar) counts the valid rows of the chunk.  Attends
-    over the already-cached prefix (gathered from pages via ``block_table``
-    [MB]) plus the chunk itself, then scatters the chunk's K/V into pages.
-    Padding rows are redirected to the null page 0.
+    ``length`` (traced scalar) counts the valid rows of the chunk.  The
+    chunk's K/V are scattered into their pages first (padding rows redirect
+    to the null page 0), then attention runs *directly on the pages* via
+    ``ops.paged_prefill_attention`` — the block table is resolved inside
+    the Pallas index_map (scalar prefetch), so nothing is linearized on the
+    kernel path, and the fallback gathers only the ``block_table`` slice
+    the caller passes (prefix-length-bucketed, not the whole pool).
     Returns (y [1,C,d], kp_all, vp_all)."""
     _, c, _ = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -273,23 +276,6 @@ def attention_prefill_paged(p, x, positions, cfg: ModelConfig, kp_all, vp_all,
     q = ops.apply_rope(q, positions, theta=cfg.rope_theta)
     k = ops.apply_rope(k, positions, theta=cfg.rope_theta)
 
-    kp = lax.dynamic_index_in_dim(kp_all, layer_idx, 0, keepdims=False)
-    vp = lax.dynamic_index_in_dim(vp_all, layer_idx, 0, keepdims=False)
-    # linearize the cached prefix and append the chunk; the +C tail pad keeps
-    # the dynamic_update_slice in bounds for every q_offset <= MB*BS
-    k_lin = ops.gather_pages(kp, block_table[None])          # [1, MB*BS, KvH, hd]
-    v_lin = ops.gather_pages(vp, block_table[None])
-    zpad = jnp.zeros((1, c) + k_lin.shape[2:], k_lin.dtype)
-    k_lin = lax.dynamic_update_slice(
-        jnp.concatenate([k_lin, zpad], axis=1), k.astype(k_lin.dtype),
-        (0, q_offset, 0, 0))
-    v_lin = lax.dynamic_update_slice(
-        jnp.concatenate([v_lin, zpad], axis=1), v.astype(v_lin.dtype),
-        (0, q_offset, 0, 0))
-    o = ops.flash_attention(q, k_lin, v_lin, causal=True, q_offset=q_offset,
-                            lengths=(q_offset + length)[None], window=window)
-    y = linear(p["wo"], o.reshape(1, c, h * hd))
-
     # scatter the chunk K/V into pages; invalid rows -> null page 0
     t = jnp.arange(c)
     pos = q_offset + t
@@ -299,6 +285,13 @@ def attention_prefill_paged(p, x, positions, cfg: ModelConfig, kp_all, vp_all,
     off = pos % bs
     kp_all = kp_all.at[layer_idx, :, phys, off].set(k[0].astype(kp_all.dtype))
     vp_all = vp_all.at[layer_idx, :, phys, off].set(v[0].astype(vp_all.dtype))
+
+    kp = lax.dynamic_index_in_dim(kp_all, layer_idx, 0, keepdims=False)
+    vp = lax.dynamic_index_in_dim(vp_all, layer_idx, 0, keepdims=False)
+    o = ops.paged_prefill_attention(q, kp, vp, block_table,
+                                    q_offset=q_offset, length=length,
+                                    window=window)
+    y = linear(p["wo"], o.reshape(1, c, h * hd))
     return y, kp_all, vp_all
 
 

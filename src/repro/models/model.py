@@ -334,11 +334,15 @@ def prefill_paged(cfg: ModelConfig, params, state, *, tokens, length,
 
     tokens [1, C] (right-padded chunk); length (scalar int32) = valid rows;
     q_offset (scalar int32) = tokens already cached for this sequence;
-    block_table [MB] int32 physical page ids for the sequence's slot.
+    block_table [MB] int32 physical page ids for the sequence's slot — MB
+    may be a *prefix slice* of the slot's full table (the engine passes a
+    prefix-length-bucketed slice so attention work is bounded by the live
+    prefix, not the pool), as long as it covers ``q_offset + length``.
 
-    Chunks attend to the already-paged prefix plus themselves, so calling
-    this repeatedly with growing q_offset reproduces a monolithic prefill
-    exactly.  Returns (logits_at_chunk_end [1, V], state)."""
+    Chunks attend to the already-paged prefix plus themselves (via the
+    paged-prefill kernel — nothing is linearized on the TPU path), so
+    calling this repeatedly with growing q_offset reproduces a monolithic
+    prefill exactly.  Returns (logits_at_chunk_end [1, V], state)."""
     if cfg.family not in PAGED_FAMILIES:
         raise ValueError(f"prefill_paged: unsupported family {cfg.family!r}")
     x = layers.embed(params["embed"], tokens)
@@ -367,6 +371,16 @@ def prefill_paged(cfg: ModelConfig, params, state, *, tokens, length,
     state = {"attn": {"k_pages": kp, "v_pages": vp}}
     logits = _logits(cfg, params, _last_token(x, jnp.reshape(length, (1,))))
     return logits[:, 0], state
+
+
+def copy_kv_page(state, src, dst):
+    """Device-side physical-page copy across all layers/heads (copy-on-write
+    for prefix caching: a new request that matched a cached page chain up to
+    mid-page duplicates the trailing shared page before overwriting its
+    tail).  state holds pages [L, KvH, NB, BS, hd]; src/dst are page ids."""
+    kp, vp = state["attn"]["k_pages"], state["attn"]["v_pages"]
+    return {"attn": {"k_pages": kp.at[:, :, dst].set(kp[:, :, src]),
+                     "v_pages": vp.at[:, :, dst].set(vp[:, :, src])}}
 
 
 def decode_step_paged(cfg: ModelConfig, params, state, tokens, lengths,

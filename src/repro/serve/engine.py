@@ -22,15 +22,29 @@ standard production mechanisms:
   largest-bucket prefill per tick; pass a smaller ``max_tokens_per_tick``
   to force chunking and bound per-tick prefill latency for long prompts.
 
-Prefill functions are jit'd **once per bucket** and cached
-(``stats["prefill_traces"]`` counts actual traces; it stays flat across
-admissions).  Families without a growing KV cache (rwkv / ssm / hybrid)
-run the same scheduler over the dense state path (``paged=False``), which
-is also kept as an A/B baseline for ``benchmarks/serve_throughput.py``.
+* **Prefix caching** — full prompt pages are published under a chained
+  content hash; a new prompt's longest cached page-prefix is attached by
+  reference at admission (refcounted pages, copy-on-write when the match
+  ends mid-page) and its chunked prefill starts at the first uncached
+  token.  Cold cached pages are evicted LRU only under pool pressure.
+* **Paged prefill fast path** — each chunk's attention runs directly on
+  the pages (``ops.paged_prefill_attention``); the engine passes a
+  prefix-length-bucketed slice of the block table, so per-chunk work is
+  bounded by ``ceil(cached_len/BS)`` pages instead of the pool size.
+
+Prefill functions are jit'd **once per bucket** (x O(log MB) block-table
+buckets) and cached (``stats["prefill_traces"]`` counts actual traces; it
+stays flat across admissions).  Families without a growing KV cache
+(rwkv / ssm / hybrid) run the same scheduler over the dense state path
+(``paged=False``), which is also kept as an A/B baseline for
+``benchmarks/serve_throughput.py``.
 """
 from __future__ import annotations
 
+import hashlib
 import itertools
+import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -39,6 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops
 from repro.models import model as M
 
 
@@ -52,25 +67,93 @@ class Request:
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
     prefill_pos: int = 0                # tokens already prefilled (chunked)
+    cached_len: int = 0                 # prefix tokens served from cache
+    ttft: Optional[float] = None        # submit -> first token (seconds)
+    _t_submit: float = 0.0
+    _digests: List[bytes] = field(default_factory=list)  # per-full-page chain
+    _published: int = 0                 # this slot's pages already registered
+
+
+def _page_digests(prompt: np.ndarray, block_size: int, n_pages: int,
+                  ) -> List[bytes]:
+    """Chained (rolling) content hash per full prompt page: page i's digest
+    commits to every token in [0, (i+1)*BS), so equal digests <=> equal
+    page *prefix* — exactly the sharing condition for causal KV."""
+    digests, parent = [], b"\x00" * 16
+    for i in range(n_pages):
+        h = hashlib.blake2b(parent, digest_size=16)
+        h.update(np.ascontiguousarray(
+            prompt[i * block_size:(i + 1) * block_size], np.int32).tobytes())
+        parent = h.digest()
+        digests.append(parent)
+    return digests
 
 
 class BlockAllocator:
-    """Host-side physical-page pool + per-slot block tables.
+    """Host-side refcounted physical-page pool, per-slot block tables, and
+    the prefix-cache registry.
 
     Page 0 is reserved as the null sink (never handed out), so an all-zero
-    block-table row is always safe to pass to the device."""
+    block-table row is always safe to pass to the device.
+
+    Pages are refcounted so full prompt-prefix pages can be *shared* across
+    slots (vLLM-style prefix caching).  A page whose refcount drops to zero
+    is parked in an LRU instead of freed when it is registered in the hash
+    map — still matchable by future prompts, reclaimed (oldest first) only
+    when the free list runs dry."""
 
     def __init__(self, num_blocks: int, block_size: int, slots: int,
                  max_blocks_per_slot: int):
         self.block_size = block_size
         self.num_blocks = num_blocks
         self._free = list(range(num_blocks - 1, 0, -1))
+        self.refcount = np.zeros((num_blocks,), np.int32)
         self.table = np.zeros((slots, max_blocks_per_slot), np.int32)
         self.used = np.zeros((slots,), np.int32)
+        self._hash_to_page: Dict[bytes, int] = {}
+        self._page_hash: Dict[int, bytes] = {}     # registered pages only
+        self._lru: "OrderedDict[int, None]" = OrderedDict()  # refcount-0 cached
+        self.pages_allocated = 0
+        self.pages_freed = 0
+        self.pages_shared = 0
+        self.pages_evicted = 0
 
     @property
     def free_blocks(self) -> int:
-        return len(self._free)
+        """Pages grantable right now: truly free + reclaimable cached."""
+        return len(self._free) + len(self._lru)
+
+    @property
+    def cached_blocks(self) -> int:
+        return len(self._lru)
+
+    def reset_counters(self) -> None:
+        self.pages_allocated = self.pages_freed = 0
+        self.pages_shared = self.pages_evicted = 0
+
+    def _reclaim(self) -> Optional[int]:
+        if self._free:
+            return self._free.pop()
+        if self._lru:                      # evict the coldest cached page
+            page, _ = self._lru.popitem(last=False)
+            del self._hash_to_page[self._page_hash.pop(page)]
+            self.pages_evicted += 1
+            return page
+        return None
+
+    def alloc_page(self, slot: int) -> Optional[int]:
+        """Grant one exclusive page to ``slot`` (evicting cold cached pages
+        under pressure); None if every page is referenced."""
+        if self.used[slot] >= self.table.shape[1]:
+            return None
+        page = self._reclaim()
+        if page is None:
+            return None
+        self.refcount[page] = 1
+        self.table[slot, self.used[slot]] = page
+        self.used[slot] += 1
+        self.pages_allocated += 1
+        return page
 
     def ensure(self, slot: int, n_tokens: int) -> bool:
         """Grow ``slot``'s table to cover ``n_tokens``; False if the pool is
@@ -79,17 +162,53 @@ class BlockAllocator:
         if need > self.table.shape[1]:
             return False
         while self.used[slot] < need:
-            if not self._free:
+            if self.alloc_page(slot) is None:
                 return False
-            self.table[slot, self.used[slot]] = self._free.pop()
-            self.used[slot] += 1
+        return True
+
+    def share(self, slot: int, page: int) -> bool:
+        """Append a cache-hit page to ``slot``'s table (refcount bump; a
+        parked page is resurrected out of the LRU)."""
+        if self.used[slot] >= self.table.shape[1]:
+            return False
+        if self.refcount[page] == 0:
+            self._lru.pop(page, None)
+        self.refcount[page] += 1
+        self.table[slot, self.used[slot]] = page
+        self.used[slot] += 1
+        self.pages_shared += 1
         return True
 
     def release(self, slot: int) -> None:
         for i in range(int(self.used[slot])):
-            self._free.append(int(self.table[slot, i]))
+            self._unref(int(self.table[slot, i]))
         self.table[slot] = 0
         self.used[slot] = 0
+
+    def _unref(self, page: int) -> None:
+        if self.refcount[page] <= 0:
+            raise RuntimeError(f"double free of physical page {page}")
+        self.refcount[page] -= 1
+        if self.refcount[page] == 0:
+            self.pages_freed += 1
+            if page in self._page_hash:
+                self._lru[page] = None     # park: matchable until evicted
+            else:
+                self._free.append(page)
+
+    # -- prefix-cache registry -----------------------------------------
+    def register(self, page: int, digest: bytes) -> bool:
+        """Publish a completed full prompt page.  First writer wins: a
+        duplicate digest (two requests racing the same prompt) keeps the
+        original mapping and the newcomer's page stays private."""
+        if digest in self._hash_to_page or page in self._page_hash:
+            return False
+        self._hash_to_page[digest] = page
+        self._page_hash[page] = digest
+        return True
+
+    def lookup(self, digest: bytes) -> Optional[int]:
+        return self._hash_to_page.get(digest)
 
 
 class ServeEngine:
@@ -97,7 +216,8 @@ class ServeEngine:
                  slots: int = 8, seed: int = 0,
                  prefill_buckets=(32, 128, 512), paged: Optional[bool] = None,
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 max_tokens_per_tick: Optional[int] = None):
+                 max_tokens_per_tick: Optional[int] = None,
+                 prefix_caching: Optional[bool] = None):
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
@@ -107,6 +227,10 @@ class ServeEngine:
         self.paged = (cfg.family in M.PAGED_FAMILIES) if paged is None else paged
         if self.paged and cfg.family not in M.PAGED_FAMILIES:
             raise ValueError(f"paged KV unsupported for family {cfg.family!r}")
+        if prefix_caching and not self.paged:
+            raise ValueError("prefix_caching requires the paged KV cache")
+        self.prefix_caching = self.paged if prefix_caching is None \
+            else bool(prefix_caching)
 
         # prefill chunk buckets; always include max_seq so any admissible
         # prompt fits some bucket
@@ -142,9 +266,15 @@ class ServeEngine:
             "prefill_traces": 0, "decode_traces": 0, "ticks": 0,
             "prefill_tokens": 0, "decode_tokens": 0, "occupancy_sum": 0.0,
             "stalled_ticks": 0, "preemptions": 0,
+            # prefix caching + page-gather accounting (paged mode)
+            "prefix_hits": 0, "prefix_hit_tokens": 0, "cow_copies": 0,
+            "pages_allocated": 0, "pages_freed": 0, "pages_shared": 0,
+            "pages_evicted": 0,
+            "gather_pages_calls": 0, "gather_page_volume": 0,
         }
         self._prefill_fns: Dict[int, object] = {}
         self._decode = self._make_decode_fn()
+        self._copy_page = jax.jit(M.copy_kv_page) if self.paged else None
 
     # -- jit caches ----------------------------------------------------
     def _make_decode_fn(self):
@@ -198,6 +328,7 @@ class ServeEngine:
                 f"token ids must be in [0, {self.cfg.vocab_size}); got "
                 f"range [{prompt.min()}, {prompt.max()}]")
         req = Request(next(self._rid), prompt, **kw)
+        req._t_submit = time.perf_counter()
         if self.paged:
             # a request that cannot ever fit the pool would stall forever
             # holding its partial allocation (no preemption yet)
@@ -208,6 +339,13 @@ class ServeEngine:
                 raise ValueError(
                     f"request needs up to {pages} KV pages but the pool has "
                     f"only {usable}; raise num_blocks or shrink the request")
+            if self.prefix_caching:
+                # chained digest per full prompt page; the longest cached
+                # chain is matched (and its pages pinned) at admission time,
+                # so a hit can never dangle across an eviction while queued
+                req._digests = _page_digests(
+                    prompt, self.block_size,
+                    self._plen(req) // self.block_size)
         self.queue.append(req)
         return req.rid
 
@@ -230,15 +368,81 @@ class ServeEngine:
     # -- scheduling ----------------------------------------------------
     def _admit(self) -> None:
         """Move queued requests into free slots (no token cost; the prefill
-        work is budgeted separately in _prefill_tick)."""
+        work is budgeted separately in _prefill_tick).  With prefix caching
+        the prompt's longest cached page-prefix is attached here and the
+        chunked prefill starts at the first uncached token."""
         while self.queue:
             slot = self._free_slot()
             if slot is None:
                 return
             req = self.queue.pop(0)
             req.prefill_pos = 0
+            req.cached_len = 0
+            req._published = 0
             self.active[slot] = req
             self.lengths[slot] = 0
+            if self.paged and self.prefix_caching:
+                self._attach_prefix(slot, req)
+
+    def _attach_prefix(self, slot: int, req: Request) -> None:
+        """Pin the longest registered page chain matching ``req``'s prompt.
+
+        Full matched pages are shared by reference.  The match is capped at
+        ``plen - 1`` so at least one token is always recomputed (the final
+        logits must be produced by a prefill chunk); when that cap lands
+        mid-page, the trailing shared page is duplicated copy-on-write and
+        its tail re-written by the resuming prefill."""
+        plen = self._plen(req)
+        pages: List[int] = []
+        for dg in req._digests:
+            page = self.alloc.lookup(dg)
+            if page is None:
+                break
+            pages.append(page)
+        match = min(len(pages) * self.block_size, plen - 1)
+        if match <= 0:
+            return
+        n_full = match // self.block_size
+        for page in pages[:n_full]:
+            self.alloc.share(slot, page)
+        if match > n_full * self.block_size:
+            # the cap fell inside pages[n_full]: COW it so the rewrite of
+            # position ``match`` cannot corrupt other readers
+            dst = self.alloc.alloc_page(slot)
+            if dst is None:
+                match = n_full * self.block_size     # no room: aligned match
+            else:
+                self.state = self._copy_page(self.state,
+                                             jnp.int32(pages[n_full]),
+                                             jnp.int32(dst))
+                self.stats["cow_copies"] += 1
+        if match <= 0:
+            return
+        req.prefill_pos = match
+        req.cached_len = match
+        req._published = match // self.block_size
+        self.lengths[slot] = match
+        self.stats["prefix_hits"] += 1
+        self.stats["prefix_hit_tokens"] += match
+
+    def _publish_pages(self, slot: int, req: Request) -> None:
+        """Register the slot's freshly completed full prompt pages so later
+        prompts can share them (idempotent; duplicates are skipped)."""
+        n_done = min(req.prefill_pos, self._plen(req)) // self.block_size
+        while req._published < n_done:
+            i = req._published
+            self.alloc.register(int(self.alloc.table[slot, i]),
+                                req._digests[i])
+            req._published += 1
+
+    def _page_bucket(self, n_pages: int) -> int:
+        """Round a live page count up to the next power of two (capped at
+        the per-slot maximum) — bounds prefill jit specializations to
+        O(log max_blocks) block-table shapes."""
+        b = 1
+        while b < n_pages:
+            b *= 2
+        return min(b, self.blocks_per_slot)
 
     def _prefill_tick(self, budget: int, finished: List[Request]) -> int:
         """Advance pending prefills under ``budget`` padded tokens.  Paged
@@ -282,6 +486,8 @@ class ServeEngine:
                 self.stats["prefill_tokens"] += n
                 req.prefill_pos += n
                 self.lengths[slot] = req.prefill_pos
+                if self.prefix_caching:
+                    self._publish_pages(slot, req)
                 if req.prefill_pos >= plen:
                     self._finish_prefill(slot, req, logits, finished)
         return budget
@@ -292,6 +498,7 @@ class ServeEngine:
         on EOS / single-token requests."""
         first = self._sample(logits[0], req)
         req.out_tokens.append(int(first))
+        req.ttft = time.perf_counter() - req._t_submit
         hit_eos = req.eos_id is not None and first == req.eos_id
         if hit_eos or req.max_new_tokens <= 1:
             req.done = True
@@ -304,10 +511,23 @@ class ServeEngine:
         padded[:n] = req.prompt[req.prefill_pos:req.prefill_pos + n]
         fn = self._prefill_fn(bucket)
         if self.paged:
+            # pass only the live prefix of the block table (rounded up to a
+            # power-of-two bucket so jit specializations stay O(log MB)):
+            # per-chunk attention work is then bounded by the cached length,
+            # not the pool size — the old path handed the full MB row to a
+            # per-layer gather_pages, O(max_blocks) copies per chunk
+            n_live = -(-(req.prefill_pos + n) // self.block_size)
+            mb = self._page_bucket(n_live)
+            bt = np.zeros((mb,), np.int32)
+            u = min(int(self.alloc.used[slot]), mb)
+            bt[:u] = self.alloc.table[slot, :u]
+            if not ops.using_pallas():
+                # fallback linearizes k+v per layer per chunk (kernel: zero)
+                self.stats["gather_pages_calls"] += 2 * self.cfg.n_layers
+                self.stats["gather_page_volume"] += 2 * self.cfg.n_layers * mb
             logits, self.state = fn(
                 self.params, self.state, jnp.asarray(padded[None]),
-                jnp.int32(n), jnp.int32(req.prefill_pos),
-                jnp.asarray(self.alloc.table[slot].copy()))
+                jnp.int32(n), jnp.int32(req.prefill_pos), jnp.asarray(bt))
             return logits
         # dense: single-sequence prefill scattered into the slot's slab
         logits, one_state = fn(self.params, jnp.asarray(padded[None]),
@@ -381,6 +601,10 @@ class ServeEngine:
                         req.done = True
                         finished.append(req)
                         self._retire(i)
+        if self.paged:
+            for k in ("pages_allocated", "pages_freed", "pages_shared",
+                      "pages_evicted"):
+                self.stats[k] = getattr(self.alloc, k)
         made_progress = (self.stats["prefill_tokens"]
                          + self.stats["decode_tokens"] > progress0)
         if (self.paged and not made_progress and not finished
@@ -436,10 +660,19 @@ class ServeEngine:
 
     # -- introspection -------------------------------------------------
     def reset_stats(self) -> None:
-        """Zero the counters (jit caches are kept) — benchmarks call this
-        after a warmup drain so compile time stays out of the timed run."""
+        """Zero the counters (jit caches and the prefix-cache registry are
+        kept) — benchmarks call this after a warmup drain so compile time
+        stays out of the timed run."""
         for k in self.stats:
             self.stats[k] = 0
+        if self.paged:
+            self.alloc.reset_counters()
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of prefill-eligible prompt tokens served from cache."""
+        tot = self.stats["prefix_hit_tokens"] + self.stats["prefill_tokens"]
+        return self.stats["prefix_hit_tokens"] / tot if tot else 0.0
 
     @property
     def mean_occupancy(self) -> float:

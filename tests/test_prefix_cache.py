@@ -1,0 +1,214 @@
+"""Prefix caching + paged-prefill fast path: refcounted BlockAllocator
+(sharing, double-free, LRU eviction), copy-on-write on a mid-page match,
+token-identical outputs with caching on vs off, and the gather-volume bound
+(per-chunk attention work tracks the live prefix, not the pool size)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.kernels import ops
+from repro.models import model as M
+from repro.serve import ServeEngine
+from repro.serve.engine import BlockAllocator, _page_digests
+
+
+def _setup(arch="granite-3-2b"):
+    cfg = reduced(get_config(arch))
+    params = M.init_params(cfg, jax.random.key(0), dtype=jnp.float32)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+def test_allocator_share_and_release_while_shared():
+    alloc = BlockAllocator(num_blocks=8, block_size=4, slots=3,
+                           max_blocks_per_slot=4)
+    assert alloc.ensure(0, 8)                    # slot 0 owns 2 pages
+    p0 = int(alloc.table[0, 0])
+    assert alloc.share(1, p0) and alloc.share(2, p0)
+    assert alloc.refcount[p0] == 3
+    assert alloc.pages_shared == 2
+    alloc.release(0)                             # owner leaves first
+    assert alloc.refcount[p0] == 2               # survivors keep the page
+    assert p0 not in alloc._free
+    alloc.release(1)
+    alloc.release(2)
+    assert alloc.refcount[p0] == 0
+    assert p0 in alloc._free                     # unregistered -> truly free
+    assert alloc.free_blocks == 7
+
+
+def test_allocator_double_free_raises():
+    alloc = BlockAllocator(num_blocks=4, block_size=4, slots=2,
+                           max_blocks_per_slot=2)
+    assert alloc.ensure(0, 4)
+    page = int(alloc.table[0, 0])
+    alloc.release(0)
+    with pytest.raises(RuntimeError, match="double free"):
+        alloc._unref(page)
+
+
+def test_allocator_registered_pages_park_and_evict_lru():
+    alloc = BlockAllocator(num_blocks=4, block_size=2, slots=1,
+                           max_blocks_per_slot=3)
+    assert alloc.ensure(0, 6)                    # 3 pages
+    pages = [int(p) for p in alloc.table[0, :3]]
+    digs = _page_digests(np.arange(6, dtype=np.int32), 2, 3)
+    for p, d in zip(pages, digs):
+        assert alloc.register(p, d)
+    assert not alloc.register(pages[0], digs[1])   # page already published
+    alloc.release(0)
+    # registered pages park in the LRU (matchable), nothing truly free
+    assert alloc.cached_blocks == 3 and not alloc._free
+    assert alloc.free_blocks == 3                  # ...but all reclaimable
+    assert alloc.lookup(digs[1]) == pages[1]
+    # resurrect the middle page; then force eviction of the other two
+    assert alloc.share(0, alloc.lookup(digs[1]))
+    got = [alloc.alloc_page(0), alloc.alloc_page(0)]
+    assert set(got) == {pages[0], pages[2]}        # oldest-parked first
+    assert got[0] == pages[0]
+    assert alloc.pages_evicted == 2
+    assert alloc.lookup(digs[0]) is None           # evicted keys unregistered
+    assert alloc.lookup(digs[1]) == pages[1]       # resurrected key survives
+    assert alloc.alloc_page(0) is None             # slot table full (3/3)
+
+
+# ---------------------------------------------------------------------------
+# engine: prefix caching semantics
+# ---------------------------------------------------------------------------
+
+def test_prefix_cache_outputs_identical_on_vs_off():
+    """Shared-prefix stream: caching must change the work, not the tokens."""
+    cfg, params = _setup()
+    sys_p = list(range(2, 42))                   # 40-token shared prefix
+    prompts = [sys_p + [50 + i, 60 + i] for i in range(6)]
+
+    def drive(cache):
+        eng = ServeEngine(cfg, params, max_seq=64, slots=2, block_size=8,
+                          prefill_buckets=(8, 16, 32), prefix_caching=cache)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=4)
+        return ({r.rid: tuple(r.out_tokens) for r in eng.run_until_drained()},
+                dict(eng.stats), eng)
+
+    on, s_on, eng = drive(True)
+    off, s_off, _ = drive(False)
+    assert on == off                             # token-identical
+    assert s_on["prefix_hit_tokens"] >= 4 * 40   # later requests hit
+    assert s_off["prefix_hit_tokens"] == 0
+    assert s_on["prefill_tokens"] < s_off["prefill_tokens"] / 2
+    assert s_on["pages_shared"] >= 4 * 5
+    assert eng.prefix_hit_rate > 0.5
+    # every page recovered (cached pages count as reclaimable)
+    assert eng.alloc.free_blocks == eng.alloc.num_blocks - 1
+
+
+def test_prefix_cache_cow_on_partial_page():
+    """A prompt of exactly N full pages matches its own earlier run up to
+    plen-1 (mid-page): the trailing shared page is duplicated copy-on-write
+    and outputs stay identical to an uncached run."""
+    cfg, params = _setup()
+    p16 = list(range(3, 19))                     # 16 tokens = 2 full pages
+    eng = ServeEngine(cfg, params, max_seq=64, slots=2, block_size=8,
+                      prefill_buckets=(8, 16, 32))
+    eng.submit(p16, max_new_tokens=4)
+    first = eng.run_until_drained()[0].out_tokens
+    eng.submit(p16, max_new_tokens=4)
+    second = eng.run_until_drained()[0].out_tokens
+    assert eng.stats["cow_copies"] == 1
+    assert eng.stats["prefix_hit_tokens"] == 15  # plen-1 cap
+    assert first == second
+
+    cold = ServeEngine(cfg, params, max_seq=64, slots=2, block_size=8,
+                       prefill_buckets=(8, 16, 32), prefix_caching=False)
+    cold.submit(p16, max_new_tokens=4)
+    assert cold.run_until_drained()[0].out_tokens == second
+
+
+def test_prefix_cache_eviction_under_pool_pressure():
+    """Cached pages are evicted LRU when a later request needs the space;
+    everything still drains and the registry drops the evicted keys."""
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, params, max_seq=64, slots=1, block_size=8,
+                      prefill_buckets=(8, 16, 32), num_blocks=7)  # 6 usable
+    eng.submit(list(range(2, 34)), max_new_tokens=4)   # 32 tok: 4 full pages
+    eng.run_until_drained()
+    assert eng.alloc.cached_blocks == 4
+    eng.submit(list(range(40, 72)), max_new_tokens=4)  # disjoint 32-tok prompt
+    done = eng.run_until_drained()
+    assert len(done) == 1 and len(done[0].out_tokens) == 4
+    assert eng.stats["pages_evicted"] > 0
+    assert eng.alloc.free_blocks == 6
+
+
+def test_prefix_cache_reset_stats_keeps_registry():
+    cfg, params = _setup()
+    sys_p = list(range(2, 26))                   # 24 tokens = 3 full pages
+    eng = ServeEngine(cfg, params, max_seq=64, slots=1, block_size=8,
+                      prefill_buckets=(8, 16, 32))
+    eng.submit(sys_p + [50], max_new_tokens=3)
+    eng.run_until_drained()
+    eng.reset_stats()
+    assert eng.stats["pages_allocated"] == 0
+    eng.submit(sys_p + [60], max_new_tokens=3)
+    eng.run_until_drained()
+    assert eng.stats["prefix_hit_tokens"] == 24  # registry survived reset
+
+
+# ---------------------------------------------------------------------------
+# gather-volume bound (the perf_opt acceptance)
+# ---------------------------------------------------------------------------
+
+def test_gather_volume_independent_of_pool_size():
+    """Per-chunk attention work is bounded by the live prefix: the same
+    request stream through a 4x larger pool / 4x longer max_seq performs
+    the SAME page-gather volume (the old path linearized the full
+    ``max_blocks`` table per layer per chunk)."""
+    cfg, params = _setup()
+    prompts = [[3, 1, 4, 1, 5], list(range(2, 32)), [9, 9, 2, 7]]
+
+    def volume(max_seq, num_blocks):
+        eng = ServeEngine(cfg, params, max_seq=max_seq, slots=2,
+                          block_size=8, prefill_buckets=(8, 16, 32),
+                          num_blocks=num_blocks, prefix_caching=False)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=3)
+        eng.run_until_drained()
+        return eng.stats["gather_page_volume"], eng.stats["gather_pages_calls"]
+
+    small_v, small_c = volume(64, 20)
+    big_v, big_c = volume(256, 80)
+    assert small_v == big_v and small_c == big_c
+    # bound: <= 2 gathers/layer/chunk x pow2(ceil(len/BS)) pages, with at
+    # most ceil(plen/smallest_bucket) chunks per prompt
+    worst_pages = 2 * cfg.n_layers * sum(
+        -(-len(p) // 8) * 8 for p in prompts)    # pow2 round-up of <=4 pages
+    assert 0 < big_v <= worst_pages
+
+
+def test_kernel_path_traces_no_gather():
+    """On the Pallas path (interpret mode here) chunked prefill must not
+    trace a single host-side gather_pages: the block table is resolved in
+    the kernel's scalar-prefetch index_map."""
+    cfg, params = _setup()
+
+    def drive(mode):
+        ops.reset_gather_stats()
+        with ops.use_mode(mode):
+            eng = ServeEngine(cfg, params, max_seq=32, slots=1, block_size=8,
+                              prefill_buckets=(8, 16, 32))
+            eng.submit(list(range(2, 15)), max_new_tokens=3)
+            done = eng.run_until_drained()
+        return (tuple(done[0].out_tokens), ops.gather_stats(),
+                eng.stats["gather_pages_calls"])
+
+    toks_ref, g_ref, eng_ref = drive("ref")
+    assert g_ref["calls"] > 0 and eng_ref > 0
+    toks_k, g_kernel, eng_k = drive("interpret")
+    assert g_kernel["calls"] == 0                # acceptance: no gather
+    assert eng_k == 0
+    assert toks_k == toks_ref                    # same tokens either way

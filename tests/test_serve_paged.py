@@ -83,6 +83,81 @@ def test_paged_partials_contract(rng):
                                rtol=1e-5, atol=1e-5)
 
 
+def test_paged_prefill_kernel_matches_ref_oracle(rng):
+    """Pallas paged-prefill kernel (interpret) == ref oracle across chunk
+    offsets, partial chunks, and dead trailing pages — outputs AND the
+    (acc, m, l) partials contract."""
+    from repro.kernels import prefill_attention as pf
+    kvh, nb, bs, d, h, c = 2, 14, 8, 16, 6, 8
+    q = jnp.asarray(rng.normal(size=(1, c, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(kvh, nb, bs, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(kvh, nb, bs, d)), jnp.float32)
+    bt = jnp.asarray(rng.permutation(nb - 1)[:5] + 1, jnp.int32)
+    for qoff, ln in [(0, 8), (5, 8), (17, 3), (0, 1), (32, 8)]:
+        kw = dict(q_offset=jnp.int32(qoff), length=jnp.int32(ln))
+        want = ref.paged_prefill_attention(q, kp, vp, bt, **kw)
+        got = pf.paged_prefill_attention(q, kp, vp, bt, interpret=True, **kw)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5, err_msg=str(kw))
+        ref_p = ref.paged_prefill_attention_partial(q, kp, vp, bt, **kw)
+        ker_p = pf.paged_prefill_attention_partial(q, kp, vp, bt,
+                                                   interpret=True, **kw)
+        for a, b in zip(ref_p, ker_p):
+            np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                       rtol=1e-5, atol=1e-5, err_msg=str(kw))
+
+
+def test_paged_prefill_oracle_matches_linearized_flash(rng):
+    """The paged-prefill oracle agrees with gather-pages + flash attention
+    (the pre-kernel reference path) on the valid rows of the chunk."""
+    kvh, nb, bs, d, h, c = 2, 10, 8, 16, 4, 8
+    q = jnp.asarray(rng.normal(size=(1, c, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(kvh, nb, bs, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(kvh, nb, bs, d)), jnp.float32)
+    bt = jnp.asarray(rng.permutation(nb - 1)[:4] + 1, jnp.int32)
+    qoff, ln = 9, 5
+    want = ref.flash_attention(
+        q, ref.gather_pages(kp, bt)[None], ref.gather_pages(vp, bt)[None],
+        causal=True, q_offset=qoff, lengths=jnp.array([qoff + ln], jnp.int32))
+    got = ref.paged_prefill_attention(q, kp, vp, bt,
+                                      q_offset=jnp.int32(qoff),
+                                      length=jnp.int32(ln))
+    np.testing.assert_allclose(np.asarray(got)[0, :ln], np.asarray(want)[0, :ln],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_prefill_partials_combine_across_page_shards(rng):
+    """Splitting the page range in two and merging the chunks' (acc, m, l)
+    with combine_partials reproduces full paged-prefill attention — the
+    contract ``noc.tree_softmax_combine`` relies on for sharded pools."""
+    from repro.kernels import prefill_attention as pf
+    kvh, nb, bs, d, h, c = 2, 10, 8, 16, 4, 4
+    q = jnp.asarray(rng.normal(size=(1, c, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(kvh, nb, bs, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(kvh, nb, bs, d)), jnp.float32)
+    bt = jnp.asarray(rng.permutation(nb - 1)[:4] + 1, jnp.int32)
+    qoff, ln = 28, 4                       # chunk fills the last page
+    kw = dict(q_offset=jnp.int32(qoff), length=jnp.int32(ln))
+    want = ref.paged_prefill_attention(q, kp, vp, bt, **kw)
+    # shard: first two pages via a zero-query-offset call masked by length,
+    # last two via an offset call — (m, l) algebra must recombine exactly
+    k_lin = ref.gather_pages(kp, bt)
+    v_lin = ref.gather_pages(vp, bt)
+    qr = q.reshape(c, h, d)
+    p1 = ref.decode_attention_partial(
+        jnp.repeat(qr, 1, 0), k_lin[None][:, :2 * bs].repeat(c, 0),
+        v_lin[None][:, :2 * bs].repeat(c, 0),
+        lengths=jnp.minimum(qoff + jnp.arange(c) + 1, 2 * bs))
+    p2 = ref.decode_attention_partial(
+        qr, k_lin[None][:, 2 * bs:].repeat(c, 0),
+        v_lin[None][:, 2 * bs:].repeat(c, 0),
+        lengths=qoff + jnp.arange(c) + 1, kv_offset=2 * bs)
+    acc, m, l = ref.combine_partials(p1, p2)
+    merged = (acc / jnp.maximum(l, 1e-30)[..., None])[None]
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_chunked_prefill_paged_matches_dense_rollout():
     """Model-level: chunked prefill_paged + decode_step_paged reproduces
     the dense prefill + decode_step greedy rollout token-for-token."""
