@@ -8,6 +8,9 @@ page-gather volume, and writes everything machine-readable to
 
   PYTHONPATH=src python -m benchmarks.serve_throughput [--slots 8]
   PYTHONPATH=src python -m benchmarks.serve_throughput --smoke   # CI-sized
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+    PYTHONPATH=src python -m benchmarks.serve_throughput --smoke \\
+    --seq-shards 4            # sequence-sharded page pool vs 1 shard
 """
 from __future__ import annotations
 
@@ -71,8 +74,13 @@ def _drive(eng: ServeEngine, reqs) -> dict:
         "prefill_tokens": int(eng.stats["prefill_tokens"]),
         "prefix_hit_tokens": int(eng.stats["prefix_hit_tokens"]),
         "prefix_hit_rate": eng.prefix_hit_rate,
+        "preemptions": int(eng.stats["preemptions"]),
         "pages_shared": int(eng.stats["pages_shared"]),
         "cow_copies": int(eng.stats["cow_copies"]),
+        "noc_combines": int(eng.stats["noc_combines"]),
+        "noc_hops": int(eng.stats["noc_hops"]),
+        "noc_bytes": int(eng.stats["noc_bytes"]),
+        "noc_energy_pj": float(eng.stats["noc_energy_pj"]),
         "gather_pages_calls": int(eng.stats["gather_pages_calls"]),
         "gather_page_volume": int(eng.stats["gather_page_volume"]),
         "ttft_p50_ms": _pct(ttfts, 50) * 1e3,
@@ -169,19 +177,71 @@ def run_shared_prefix(cfg, params, slots: int, max_seq: int,
             "ttft_p50_speedup": ttft_speedup, "outputs_match": bool(match)}
 
 
+def run_sharded(cfg, params, slots: int, max_seq: int, n_requests: int,
+                seq_shards: int, seed: int = 0) -> dict:
+    """N-way sequence-sharded page pool vs 1 shard: same mixed + shared-
+    prefix streams, greedy outputs must be token-identical, and the sharded
+    engine reports its in-transit NoC combine traffic."""
+    header(f"serve sharded: seq_shards={seq_shards} vs 1 "
+           f"({jax.device_count()} devices)")
+    if jax.device_count() < seq_shards:
+        raise RuntimeError(
+            f"--seq-shards {seq_shards} needs that many devices; set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={seq_shards}")
+    rng = np.random.default_rng(seed)
+    mixed = _request_stream(rng, n_requests, max_seq, cfg.vocab_size)
+    shared = _shared_prefix_stream(rng, max(4, n_requests // 2),
+                                   3 * max_seq // 4, 2, cfg.vocab_size)
+    buckets = (16, 32, max_seq)
+    res = {}
+    for label, S in (("shard1", 1), (f"shard{seq_shards}", seq_shards)):
+        eng = ServeEngine(cfg, params, paged=True, block_size=16,
+                          max_seq=max_seq, slots=slots,
+                          prefill_buckets=buckets, seq_shards=S)
+        for b in buckets:                      # warm the per-bucket jits
+            eng.submit(list(range(1, min(b, max_seq // 2))), max_new_tokens=2)
+        eng.submit(list(range(1, max_seq - 4)), max_new_tokens=2)
+        eng.run_until_drained()
+        eng.reset_stats()
+        r = _drive(eng, mixed)
+        eng.reset_stats()          # counters are cumulative: isolate streams
+        r2 = _drive(eng, shared)
+        r["tokens"] = {**r["tokens"],
+                       **{f"sp{k}": v for k, v in r2["tokens"].items()}}
+        for k in ("noc_combines", "noc_hops", "noc_bytes", "noc_energy_pj"):
+            r[k] += r2[k]
+        res[label] = r
+    sharded = res[f"shard{seq_shards}"]
+    match = res["shard1"]["tokens"] == sharded["tokens"]
+    speedup = sharded["tok_s"] / res["shard1"]["tok_s"]
+    emit(f"serve_sharded_s{seq_shards}", 0.0,
+         f"outputs_match={match};tok_s_ratio={speedup:.2f};"
+         f"noc_hops={sharded['noc_hops']};"
+         f"noc_mb={sharded['noc_bytes'] / 1e6:.2f};"
+         f"noc_energy_uj={sharded['noc_energy_pj'] / 1e6:.2f}")
+    return {"seq_shards": seq_shards, "outputs_match": bool(match),
+            "tok_s_ratio": speedup, "shard1": _jsonable(res["shard1"]),
+            "sharded": _jsonable(sharded)}
+
+
 def run(slots: int = 8, max_seq: int = 128, n_requests: int = 32,
-        seed: int = 0, out_json: str = "BENCH_serve.json"):
+        seed: int = 0, out_json: str = "BENCH_serve.json",
+        seq_shards: int = 1):
     cfg = reduced(get_config("stablelm-1.6b"))
     params = M.init_params(cfg, jax.random.key(0), dtype=jnp.float32)
     results = {
         "bench": "serve_throughput",
         "config": {"arch": "stablelm-1.6b (reduced)", "slots": slots,
                    "max_seq": max_seq, "n_requests": n_requests,
+                   "seq_shards": seq_shards,
                    "backend": jax.default_backend()},
         "mixed": run_mixed(cfg, params, slots, max_seq, n_requests, seed),
         "shared_prefix": run_shared_prefix(cfg, params, slots, max_seq,
                                            n_requests, seed),
     }
+    if seq_shards > 1:
+        results["sharded"] = run_sharded(cfg, params, slots, max_seq,
+                                         n_requests, seq_shards, seed)
     with open(out_json, "w") as f:
         json.dump(results, f, indent=2)
     print(f"# wrote {out_json}")
@@ -194,15 +254,20 @@ def main():
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--seq-shards", type=int, default=1,
+                    help="also run the N-way sequence-sharded engine and "
+                         "verify token identity vs 1 shard (needs N devices "
+                         "— force with XLA_FLAGS on CPU)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run (tiny model, few requests)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.smoke:
-        run(slots=2, max_seq=64, n_requests=8, out_json=args.out)
+        run(slots=2, max_seq=64, n_requests=8, out_json=args.out,
+            seq_shards=args.seq_shards)
     else:
         run(slots=args.slots, max_seq=args.max_seq, n_requests=args.requests,
-            out_json=args.out)
+            out_json=args.out, seq_shards=args.seq_shards)
 
 
 if __name__ == "__main__":

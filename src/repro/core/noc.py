@@ -131,6 +131,34 @@ def tree_softmax_combine(acc, m, l, axis_name: str):
     return acc / jnp.maximum(l, 1e-30)[..., None]
 
 
+# hop/energy accounting for the serve path -------------------------------
+#
+# ``tree_softmax_combine`` runs inside jit'd shard_map bodies, so the host
+# cannot count flits at execution time; instead the serving engine calls
+# this cost model once per dispatched combine and accumulates the totals in
+# its stats.  Constants mirror ``pimsim.params`` (NoCParams: 0.1 pJ/bit for
+# an on-chip link+router traversal) so serve-path numbers are comparable
+# with the pimsim figures.
+
+E_HOP_PJ_PER_BIT = 0.1
+
+
+def softmax_combine_cost(rows: int, heads: int, head_dim: int,
+                         n_shards: int) -> dict:
+    """Traffic/energy of ONE tree_softmax_combine over ``n_shards``.
+
+    The butterfly moves the full (acc f32 [rows, heads, head_dim],
+    m [rows, heads], l [rows, heads]) payload per hop, log2(n) hops, every
+    node active — per-device bytes therefore hops * payload.  Returns
+    ``{"hops", "bytes", "energy_pj"}`` (bytes/energy are per device)."""
+    assert _is_pow2(n_shards), n_shards
+    hops = max(n_shards - 1, 0).bit_length()         # log2 for pow2 n
+    payload = rows * heads * (head_dim + 2) * 4      # acc + m + l, fp32
+    total = hops * payload
+    return {"hops": hops, "bytes": total,
+            "energy_pj": total * 8 * E_HOP_PJ_PER_BIT}
+
+
 def distributed_softmax(x, axis_name: str):
     """Softmax over a feature axis sharded across ``axis_name`` (e.g. the
     vocab-sharded LM head).  max and sum statistics ride the butterfly."""

@@ -146,7 +146,8 @@ def decode_attention_partial(q, k, v, *, lengths=None, kv_offset: int = 0,
 
 def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
                   m_scr, l_scr, acc_scr, *, scale: float, block_s: int,
-                  kv_offset: int, return_partials: bool):
+                  kv_offset: int, return_partials: bool,
+                  skip_null: bool = False):
     ib = pl.program_id(0)
     ibk = pl.program_id(2)
     nb = pl.num_programs(2)
@@ -157,22 +158,30 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0, 0].astype(jnp.float32)                      # [G, D]
-    k = k_ref[0, 0].astype(jnp.float32)                      # [BS, D]
-    s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                        preferred_element_type=jnp.float32) * scale  # [G, BS]
-    kpos = kv_offset + ibk * block_s + lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    valid = kpos < len_ref[ib]
-    s = jnp.where(valid, s, NEG_INF)
-    m_prev = m_scr[...]
-    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
-    p = jnp.exp(s - m_new)
-    corr = jnp.exp(m_prev - m_new)
-    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
-    acc_scr[...] = acc_scr[...] * corr + lax.dot_general(
-        p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    m_scr[...] = m_new
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                  # [G, D]
+        k = k_ref[0, 0].astype(jnp.float32)                  # [BS, D]
+        s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # [G, BS]
+        kpos = kv_offset + ibk * block_s + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = kpos < len_ref[ib]
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + lax.dot_general(
+            p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    if skip_null:
+        # shard-local table: entry 0 = a page another shard owns (or dead
+        # tail) — elide its compute entirely; it must not touch (m, l, acc)
+        pl.when(bt_ref[ib, ibk] != 0)(_compute)
+    else:
+        _compute()
 
     @pl.when(ibk == nb - 1)
     def _finalize():
@@ -186,7 +195,8 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 
 
 def _paged_decode(q, k_pages, v_pages, block_tables, lengths, *,
-                  kv_offset: int, return_partials: bool, interpret: bool):
+                  kv_offset: int, return_partials: bool, interpret: bool,
+                  skip_null: bool = False):
     b, h, d = q.shape
     kvh, _, bs, _ = k_pages.shape
     g = h // kvh
@@ -199,7 +209,8 @@ def _paged_decode(q, k_pages, v_pages, block_tables, lengths, *,
     out_dt = jnp.float32 if return_partials else q.dtype
     kernel = functools.partial(
         _paged_kernel, scale=1.0 / math.sqrt(d), block_s=bs,
-        kv_offset=kv_offset, return_partials=return_partials)
+        kv_offset=kv_offset, return_partials=return_partials,
+        skip_null=skip_null)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,            # block_tables, lengths
@@ -246,8 +257,13 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, *, lengths=None,
 
 def paged_decode_attention_partial(q, k_pages, v_pages, block_tables, *,
                                    lengths=None, kv_offset: int = 0,
+                                   skip_null: bool = False,
                                    interpret: bool = False):
-    """Per-shard paged partials (acc f32, m, l) for the NoC tree combine."""
+    """Per-shard paged partials (acc f32, m, l) for the NoC tree combine.
+
+    ``skip_null``: zero table entries skip compute (consecutive zeros also
+    collapse their null-page DMAs, since the block index repeats) — the
+    shard-local-table contract for sequence-sharded page pools."""
     return _paged_decode(q, k_pages, v_pages, block_tables, lengths,
                          kv_offset=kv_offset, return_partials=True,
-                         interpret=interpret)
+                         interpret=interpret, skip_null=skip_null)

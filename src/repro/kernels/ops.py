@@ -132,14 +132,16 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, *, lengths=None):
 
 
 def paged_decode_attention_partial(q, k_pages, v_pages, block_tables, *,
-                                   lengths=None, kv_offset: int = 0):
+                                   lengths=None, kv_offset: int = 0,
+                                   skip_null: bool = False):
     if _use_pallas():
         return _da.paged_decode_attention_partial(
             q, k_pages, v_pages, block_tables, lengths=lengths,
-            kv_offset=kv_offset, interpret=_interp())
+            kv_offset=kv_offset, skip_null=skip_null, interpret=_interp())
     return ref.paged_decode_attention_partial(q, k_pages, v_pages,
                                               block_tables, lengths=lengths,
-                                              kv_offset=kv_offset)
+                                              kv_offset=kv_offset,
+                                              skip_null=skip_null)
 
 
 # Trace-time gather accounting: ``gather_pages`` linearizes pages host-side
@@ -188,13 +190,14 @@ def paged_prefill_attention(q, k_pages, v_pages, block_table, *, q_offset,
 
 
 def paged_prefill_attention_partial(q, k_pages, v_pages, block_table, *,
-                                    q_offset, length):
+                                    q_offset, length, skip_null: bool = False):
     if _use_pallas():
         return _pf.paged_prefill_attention_partial(
             q, k_pages, v_pages, block_table, q_offset=q_offset,
-            length=length, interpret=_interp())
+            length=length, skip_null=skip_null, interpret=_interp())
     return ref.paged_prefill_attention_partial(
-        q, k_pages, v_pages, block_table, q_offset=q_offset, length=length)
+        q, k_pages, v_pages, block_table, q_offset=q_offset, length=length,
+        skip_null=skip_null)
 
 
 def matmul(x, w, *, out_dtype=None, bm: int = 256, bn: int = 256,

@@ -38,7 +38,7 @@ NEG_INF = -1e30
 def _paged_prefill_kernel(bt_ref, qlen_ref, q_ref, k_ref, v_ref,
                           o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr, *,
                           scale: float, block_s: int, group: int,
-                          return_partials: bool):
+                          return_partials: bool, skip_null: bool = False):
     ibk = pl.program_id(1)
     nb = pl.num_programs(1)
 
@@ -52,7 +52,13 @@ def _paged_prefill_kernel(bt_ref, qlen_ref, q_ref, k_ref, v_ref,
     qoff = qlen_ref[1]                   # first global position of the chunk
     n_live = (total + block_s - 1) // block_s
 
-    @pl.when(ibk < n_live)
+    live = ibk < n_live
+    if skip_null:
+        # shard-local table: a zero entry inside the live prefix is a page
+        # another shard of the sequence-sharded pool owns — skip it too
+        live &= bt_ref[ibk] != 0
+
+    @pl.when(live)
     def _compute():
         q = q_ref[0].astype(jnp.float32)                     # [C*G, D]
         k = k_ref[0, 0].astype(jnp.float32)                  # [BS, D]
@@ -85,7 +91,8 @@ def _paged_prefill_kernel(bt_ref, qlen_ref, q_ref, k_ref, v_ref,
 
 
 def _paged_prefill(q, k_pages, v_pages, block_table, q_offset, length, *,
-                   return_partials: bool, interpret: bool):
+                   return_partials: bool, interpret: bool,
+                   skip_null: bool = False):
     b, c, h, d = q.shape
     assert b == 1, "paged prefill is single-sequence (chunked serving)"
     kvh, _, bs, _ = k_pages.shape
@@ -101,7 +108,7 @@ def _paged_prefill(q, k_pages, v_pages, block_table, q_offset, length, *,
     out_dt = jnp.float32 if return_partials else q.dtype
     kernel = functools.partial(
         _paged_prefill_kernel, scale=1.0 / math.sqrt(d), block_s=bs,
-        group=g, return_partials=return_partials)
+        group=g, return_partials=return_partials, skip_null=skip_null)
 
     def _page_idx(ih, ibk, bt, ql):
         # clamp dead grid steps onto the last live page: the repeated index
@@ -160,8 +167,11 @@ def paged_prefill_attention(q, k_pages, v_pages, block_table, *, q_offset,
 
 
 def paged_prefill_attention_partial(q, k_pages, v_pages, block_table, *,
-                                    q_offset, length, interpret: bool = False):
+                                    q_offset, length, skip_null: bool = False,
+                                    interpret: bool = False):
     """Per-shard partials (acc f32 [1,C,H,D], m [1,C,H], l [1,C,H]) for the
-    NoC tree combine — same algebra as the decode kernels."""
+    NoC tree combine — same algebra as the decode kernels.  ``skip_null``
+    elides zero table entries (the shard-local-table contract)."""
     return _paged_prefill(q, k_pages, v_pages, block_table, q_offset, length,
-                          return_partials=True, interpret=interpret)
+                          return_partials=True, interpret=interpret,
+                          skip_null=skip_null)

@@ -182,12 +182,15 @@ def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
 
 def decode_attention_partial(q, k, v, *, lengths: Optional[jax.Array] = None,
                              kv_offset: int = 0,
+                             kv_valid: Optional[jax.Array] = None,
                              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Single-token attention partials over a (possibly sharded) KV slab.
 
     q [B, H, D]; k, v [B, Sk, KvH, D]  ->  (acc [B,H,D] f32, m [B,H], l [B,H]).
     The (acc, m, l) triple is what CompAir's reduce tree combines across
     banks; here it is combined across devices by ``core.noc.tree_softmax_combine``.
+    ``kv_valid`` [B, Sk] bool additionally masks positions (sharded page
+    pools pass it to exclude pages another shard owns).
     """
     b, h, d = q.shape
     sk, kvh = k.shape[1], k.shape[2]
@@ -205,6 +208,8 @@ def decode_attention_partial(q, k, v, *, lengths: Optional[jax.Array] = None,
         if lengths is not None:
             valid = kpos[None, :] < lengths[:, None]
             s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        if kv_valid is not None:
+            s = jnp.where(kv_valid[:, None, None, :], s, NEG_INF)
         m = s.max(axis=-1)
         p = jnp.exp(s - m[..., None])
         l = p.sum(axis=-1)
@@ -217,6 +222,8 @@ def decode_attention_partial(q, k, v, *, lengths: Optional[jax.Array] = None,
     if lengths is not None:
         valid = kpos[None, :] < lengths[:, None]
         s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    if kv_valid is not None:
+        s = jnp.where(kv_valid[:, None, None, :], s, NEG_INF)
     m = s.max(axis=-1)
     p = jnp.exp(s - m[..., None])
     l = p.sum(axis=-1)
@@ -264,7 +271,7 @@ def gather_pages(pages: jax.Array, block_table: jax.Array) -> jax.Array:
 
 def paged_decode_attention_partial(q, k_pages, v_pages, block_tables, *,
                                    lengths: Optional[jax.Array] = None,
-                                   kv_offset: int = 0,
+                                   kv_offset: int = 0, skip_null: bool = False,
                                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Flash-decoding partials over a *paged* KV cache.
 
@@ -273,11 +280,20 @@ def paged_decode_attention_partial(q, k_pages, v_pages, block_tables, *,
     (acc f32, m, l) triple as :func:`decode_attention_partial`, so
     ``core.noc.tree_softmax_combine`` / :func:`combine_partials` apply
     unchanged to paged shards.
+
+    With ``skip_null`` a table entry of 0 contributes nothing even inside
+    the live range — the contract for *shard-local* tables, where logical
+    blocks owned by another shard of a sequence-sharded page pool are
+    mapped to the local null page.
     """
     k_lin = gather_pages(k_pages, block_tables)
     v_lin = gather_pages(v_pages, block_tables)
+    kv_valid = None
+    if skip_null:
+        bt = block_tables if block_tables.ndim == 2 else block_tables[None]
+        kv_valid = jnp.repeat(bt != 0, k_pages.shape[2], axis=-1)  # [B, MB*BS]
     return decode_attention_partial(q, k_lin, v_lin, lengths=lengths,
-                                    kv_offset=kv_offset)
+                                    kv_offset=kv_offset, kv_valid=kv_valid)
 
 
 def paged_decode_attention(q, k_pages, v_pages, block_tables, *,
@@ -292,7 +308,7 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, *,
 # ---------------------------------------------------------------------------
 
 def paged_prefill_attention_partial(q, k_pages, v_pages, block_table, *,
-                                    q_offset, length,
+                                    q_offset, length, skip_null: bool = False,
                                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Prefill-chunk attention partials over a paged KV cache (oracle).
 
@@ -302,8 +318,11 @@ def paged_prefill_attention_partial(q, k_pages, v_pages, block_table, *,
     global positions, KV validity on ``kpos < q_offset + length``.
     Returns (acc f32 [1,C,H,D], m [1,C,H], l [1,C,H]) — the same algebra
     :func:`combine_partials` / ``core.noc.tree_softmax_combine`` consume.
+    ``skip_null`` excludes zero table entries (shard-local tables map
+    foreign pages of a sequence-sharded pool to the local null page).
     """
     _, c, h, d = q.shape
+    bs = k_pages.shape[2]
     k_lin = gather_pages(k_pages, block_table)        # [MB*BS, KvH, D]
     v_lin = gather_pages(v_pages, block_table)
     sk = k_lin.shape[0]
@@ -314,6 +333,8 @@ def paged_prefill_attention_partial(q, k_pages, v_pages, block_table, *,
     qpos = q_offset + jnp.arange(c)[:, None]
     kpos = jnp.arange(sk)[None, :]
     valid = (kpos <= qpos) & (kpos < q_offset + length)
+    if skip_null:
+        valid &= jnp.repeat(block_table != 0, bs)[None, :]
     s = jnp.where(valid[:, None, :], s, NEG_INF)
     m = s.max(axis=-1)
     p = jnp.exp(s - m[..., None])

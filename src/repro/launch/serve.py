@@ -37,6 +37,10 @@ def main():
                     help="max padded tokens (prefill+decode) per tick")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable shared-prompt-page prefix caching")
+    ap.add_argument("--seq-shards", type=int, default=1,
+                    help="sequence-shard the page pool over N devices on a "
+                         "'seq' mesh axis (paged families only; force host "
+                         "devices with XLA_FLAGS on CPU)")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore trained params (repro.checkpoint layout)")
     args = ap.parse_args()
@@ -61,7 +65,8 @@ def main():
                       paged=paged, block_size=args.block_size,
                       num_blocks=args.num_blocks,
                       max_tokens_per_tick=args.token_budget,
-                      prefix_caching=prefix_caching)
+                      prefix_caching=prefix_caching,
+                      seq_shards=args.seq_shards)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for i in range(args.requests):
@@ -76,13 +81,21 @@ def main():
         print(f"[serve] req {r.rid}: {len(r.prompt)} prompt -> "
               f"{r.out_tokens[:8]}{'...' if len(r.out_tokens) > 8 else ''}")
     mode = "paged" if eng.paged else "dense"
+    if eng.seq_shards > 1:
+        mode += f"/seq{eng.seq_shards}"
     print(f"[serve] {len(done)} requests, {total} tokens, {dt:.2f}s "
           f"({total / dt:.1f} tok/s)  kv={mode} "
           f"({eng.kv_cache_bytes() / 1e6:.1f} MB), "
           f"occupancy={eng.mean_occupancy:.2f}, "
           f"prefill_traces={eng.stats['prefill_traces']:.0f}, "
           f"prefix_hit_tokens={eng.stats['prefix_hit_tokens']:.0f}, "
+          f"preemptions={eng.stats['preemptions']:.0f}, "
           f"gather_volume={eng.stats['gather_page_volume']:.0f}")
+    if eng.seq_shards > 1:
+        print(f"[serve] noc: combines={eng.stats['noc_combines']:.0f}, "
+              f"hops={eng.stats['noc_hops']:.0f}, "
+              f"bytes={eng.stats['noc_bytes'] / 1e6:.2f}MB, "
+              f"energy={eng.stats['noc_energy_pj'] / 1e6:.2f}uJ")
 
 
 if __name__ == "__main__":

@@ -223,14 +223,22 @@ def paged_kv_cache_init(cfg: ModelConfig, num_blocks: int, block_size: int,
 
 
 def attention_decode_paged(p, x, cfg: ModelConfig, kp_all, vp_all,
-                           layer_idx, lengths, block_tables, *, window=None):
+                           layer_idx, lengths, block_tables, *, window=None,
+                           seq_axis=None):
     """One-token decode against a paged KV cache.
 
     x [B,1,d]; kp_all/vp_all [L, KvH, NB, BS, Dh]; layer_idx scalar int32;
     lengths [B] = tokens already cached; block_tables [B, MB] int32.
     The new K/V row is scattered into the page holding position ``lengths``
     (retired slots carry an all-zero table row, so they write the null page).
-    Returns (y [B,1,d], kp_all, vp_all)."""
+    Returns (y [B,1,d], kp_all, vp_all).
+
+    With ``seq_axis`` set this runs inside ``shard_map`` over a
+    sequence-sharded page pool: ``kp_all/vp_all`` are the *local* page
+    shard, ``block_tables`` is the shard-local table (foreign pages -> 0,
+    so the scatter lands in the local null page and attention skips them),
+    and the per-shard (acc, m, l) partials ride
+    ``core.noc.tree_softmax_combine`` — the paper's in-transit reduction."""
     b = x.shape[0]
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     bs = kp_all.shape[3]
@@ -247,15 +255,22 @@ def attention_decode_paged(p, x, cfg: ModelConfig, kp_all, vp_all,
     vp_all = vp_all.at[layer_idx, :, phys, off].set(v[:, 0].astype(vp_all.dtype))
     kp = lax.dynamic_index_in_dim(kp_all, layer_idx, 0, keepdims=False)
     vp = lax.dynamic_index_in_dim(vp_all, layer_idx, 0, keepdims=False)
-    o = ops.paged_decode_attention(q[:, 0], kp, vp, block_tables,
-                                   lengths=lengths + 1)
+    if seq_axis is None:
+        o = ops.paged_decode_attention(q[:, 0], kp, vp, block_tables,
+                                       lengths=lengths + 1)
+    else:
+        from repro.core import noc
+        acc, m, l = ops.paged_decode_attention_partial(
+            q[:, 0], kp, vp, block_tables, lengths=lengths + 1,
+            skip_null=True)
+        o = noc.tree_softmax_combine(acc, m, l, seq_axis).astype(x.dtype)
     y = linear(p["wo"], o.reshape(b, h * hd))
     return y.reshape(b, 1, -1), kp_all, vp_all
 
 
 def attention_prefill_paged(p, x, positions, cfg: ModelConfig, kp_all, vp_all,
                             layer_idx, block_table, q_offset, length, *,
-                            window=None):
+                            window=None, seq_axis=None):
     """Chunked prefill of ONE sequence (batch 1) against paged KV.
 
     x [1,C,d] is the chunk at global positions [q_offset, q_offset+C);
@@ -266,7 +281,14 @@ def attention_prefill_paged(p, x, positions, cfg: ModelConfig, kp_all, vp_all,
     the Pallas index_map (scalar prefetch), so nothing is linearized on the
     kernel path, and the fallback gathers only the ``block_table`` slice
     the caller passes (prefix-length-bucketed, not the whole pool).
-    Returns (y [1,C,d], kp_all, vp_all)."""
+    Returns (y [1,C,d], kp_all, vp_all).
+
+    With ``seq_axis`` set (inside ``shard_map`` over a sequence-sharded
+    page pool) ``block_table`` is the shard-local slice — foreign pages
+    are 0, so their K/V scatter hits the local null page and attention
+    skips them — and per-shard (acc, m, l) prefill partials merge via
+    ``core.noc.tree_softmax_combine``, causal masking staying on global
+    positions."""
     _, c, _ = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     bs = kp_all.shape[3]
@@ -288,9 +310,19 @@ def attention_prefill_paged(p, x, positions, cfg: ModelConfig, kp_all, vp_all,
 
     kp = lax.dynamic_index_in_dim(kp_all, layer_idx, 0, keepdims=False)
     vp = lax.dynamic_index_in_dim(vp_all, layer_idx, 0, keepdims=False)
-    o = ops.paged_prefill_attention(q, kp, vp, block_table,
-                                    q_offset=q_offset, length=length,
-                                    window=window)
+    if seq_axis is None:
+        o = ops.paged_prefill_attention(q, kp, vp, block_table,
+                                        q_offset=q_offset, length=length,
+                                        window=window)
+    else:
+        if window is not None:
+            raise NotImplementedError(
+                "windowed attention over a sequence-sharded page pool")
+        from repro.core import noc
+        acc, m, l = ops.paged_prefill_attention_partial(
+            q, kp, vp, block_table, q_offset=q_offset, length=length,
+            skip_null=True)
+        o = noc.tree_softmax_combine(acc, m, l, seq_axis).astype(x.dtype)
     y = linear(p["wo"], o.reshape(1, c, h * hd))
     return y, kp_all, vp_all
 

@@ -329,7 +329,8 @@ def _last_token(x, lengths):
 
 
 def prefill_paged(cfg: ModelConfig, params, state, *, tokens, length,
-                  q_offset, block_table, attn_window: Optional[int] = None):
+                  q_offset, block_table, attn_window: Optional[int] = None,
+                  seq_axis: Optional[str] = None):
     """One *chunk* of a single-sequence prefill into the paged KV cache.
 
     tokens [1, C] (right-padded chunk); length (scalar int32) = valid rows;
@@ -342,7 +343,12 @@ def prefill_paged(cfg: ModelConfig, params, state, *, tokens, length,
     Chunks attend to the already-paged prefix plus themselves (via the
     paged-prefill kernel — nothing is linearized on the TPU path), so
     calling this repeatedly with growing q_offset reproduces a monolithic
-    prefill exactly.  Returns (logits_at_chunk_end [1, V], state)."""
+    prefill exactly.  Returns (logits_at_chunk_end [1, V], state).
+
+    ``seq_axis``: run as one shard of a sequence-sharded page pool (inside
+    ``shard_map``) — ``state`` is the local page shard, ``block_table`` the
+    shard-local table, and attention partials combine over the named axis
+    via ``core.noc.tree_softmax_combine``."""
     if cfg.family not in PAGED_FAMILIES:
         raise ValueError(f"prefill_paged: unsupported family {cfg.family!r}")
     x = layers.embed(params["embed"], tokens)
@@ -356,7 +362,7 @@ def prefill_paged(cfg: ModelConfig, params, state, *, tokens, length,
         h = layers.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
         y, kp_all, vp_all = layers.attention_prefill_paged(
             lp["attn"], h, positions, cfg, kp_all, vp_all, li, block_table,
-            q_offset, length, window=attn_window)
+            q_offset, length, window=attn_window, seq_axis=seq_axis)
         xc = xc + y
         h2 = layers.rmsnorm(lp["ln2"], xc, cfg.norm_eps)
         if cfg.family == "moe":
@@ -384,13 +390,19 @@ def copy_kv_page(state, src, dst):
 
 
 def decode_step_paged(cfg: ModelConfig, params, state, tokens, lengths,
-                      block_tables, *, attn_window: Optional[int] = None):
+                      block_tables, *, attn_window: Optional[int] = None,
+                      seq_axis: Optional[str] = None):
     """Batched one-token decode over the paged KV cache.
 
     tokens [B] int32; lengths [B] = cache fill level; block_tables [B, MB].
     Same contract as :func:`decode_step` (returns (logits [B, V], state));
     the KV row for position ``lengths`` is scattered into pages and the
-    paged flash-decoding kernel gathers via the block table."""
+    paged flash-decoding kernel gathers via the block table.
+
+    ``seq_axis``: run as one shard of a sequence-sharded page pool (inside
+    ``shard_map``); ``block_tables`` is then shard-local (foreign pages ->
+    null page 0) and per-shard partials merge over the named axis via
+    ``core.noc.tree_softmax_combine``."""
     if cfg.family not in PAGED_FAMILIES:
         raise ValueError(f"decode_step_paged: unsupported family {cfg.family!r}")
     x = layers.embed(params["embed"], tokens[:, None])
@@ -401,7 +413,7 @@ def decode_step_paged(cfg: ModelConfig, params, state, tokens, lengths,
         h = layers.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
         y, kp_all, vp_all = layers.attention_decode_paged(
             lp["attn"], h, cfg, kp_all, vp_all, li, lengths, block_tables,
-            window=attn_window)
+            window=attn_window, seq_axis=seq_axis)
         xc = xc + y
         h2 = layers.rmsnorm(lp["ln2"], xc, cfg.norm_eps)
         if cfg.family == "moe":

@@ -31,6 +31,15 @@ standard production mechanisms:
   the pages (``ops.paged_prefill_attention``); the engine passes a
   prefix-length-bucketed slice of the block table, so per-chunk work is
   bounded by ``ceil(cached_len/BS)`` pages instead of the pool size.
+* **Sequence-sharded page pool** (``seq_shards=N``) — the physical pool is
+  split over an N-device ``seq`` mesh axis; ``BlockAllocator`` places a
+  slot's pages round-robin across shards (fill-local under pressure), and
+  decode/prefill dispatch wraps the paged kernels in ``compat.shard_map``:
+  each shard attends only its local pages (foreign entries map to its
+  null page and are skipped) and emits ``(acc, m, l)`` partials that
+  ``core.noc.tree_softmax_combine`` merges in transit over the ``seq``
+  axis — the paper's NoC-ALU softmax reduction, with hop/energy totals in
+  ``stats["noc_*"]``.  Greedy outputs are token-identical to 1 shard.
 
 Prefill functions are jit'd **once per bucket** (x O(log MB) block-table
 buckets) and cached (``stats["prefill_traces"]`` counts actual traces; it
@@ -52,7 +61,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.configs.base import ModelConfig
+from repro.core import noc
 from repro.kernels import ops
 from repro.models import model as M
 
@@ -100,13 +111,36 @@ class BlockAllocator:
     slots (vLLM-style prefix caching).  A page whose refcount drops to zero
     is parked in an LRU instead of freed when it is registered in the hash
     map — still matchable by future prompts, reclaimed (oldest first) only
-    when the free list runs dry."""
+    when the free list runs dry.
+
+    With ``num_shards > 1`` the pool is *sequence-sharded*: shard ``s``
+    owns global page ids ``[s*nb_local, (s+1)*nb_local)`` and reserves its
+    local page 0 (global ``s*nb_local``) as that shard's null sink.  A
+    slot's logical block ``j`` prefers shard ``j % num_shards``
+    (round-robin, so one sequence's KV spreads across every shard's
+    bandwidth lane), falling back to any shard with a free page
+    (fill-local).  The prefix-cache registry keys on content digests,
+    which are shard-agnostic — a cached chain attaches by reference no
+    matter which shards hold its pages."""
 
     def __init__(self, num_blocks: int, block_size: int, slots: int,
-                 max_blocks_per_slot: int):
+                 max_blocks_per_slot: int, num_shards: int = 1):
+        if num_blocks % num_shards:
+            raise ValueError(f"num_blocks={num_blocks} not divisible by "
+                             f"num_shards={num_shards}")
         self.block_size = block_size
         self.num_blocks = num_blocks
-        self._free = list(range(num_blocks - 1, 0, -1))
+        self.num_shards = num_shards
+        self.nb_local = num_blocks // num_shards
+        if self.nb_local < 2:
+            raise ValueError("each shard needs >= 1 usable page beyond its "
+                             f"null page (nb_local={self.nb_local})")
+        # per-shard free lists, popped lowest-id first (shard-0/S=1 order is
+        # identical to the unsharded allocator: 1, 2, 3, ...)
+        self._free_by_shard = [
+            list(range(s * self.nb_local + self.nb_local - 1,
+                       s * self.nb_local, -1))
+            for s in range(num_shards)]
         self.refcount = np.zeros((num_blocks,), np.int32)
         self.table = np.zeros((slots, max_blocks_per_slot), np.int32)
         self.used = np.zeros((slots,), np.int32)
@@ -119,21 +153,50 @@ class BlockAllocator:
         self.pages_evicted = 0
 
     @property
+    def _free(self) -> List[int]:
+        """Flat read-only view of the per-shard free lists."""
+        return [p for fl in self._free_by_shard for p in fl]
+
+    @property
     def free_blocks(self) -> int:
         """Pages grantable right now: truly free + reclaimable cached."""
-        return len(self._free) + len(self._lru)
+        return sum(len(fl) for fl in self._free_by_shard) + len(self._lru)
+
+    @property
+    def usable_blocks(self) -> int:
+        """Pool capacity minus the per-shard null pages."""
+        return self.num_blocks - self.num_shards
 
     @property
     def cached_blocks(self) -> int:
         return len(self._lru)
 
+    def owner(self, page: int) -> int:
+        return page // self.nb_local
+
+    def shard_local(self, table: np.ndarray) -> np.ndarray:
+        """Global-id block table [..., MB] -> per-shard local tables
+        [S, ..., MB]: entries owned by shard ``s`` keep their local index
+        in ``s``'s row; everything else maps to that shard's null page 0
+        (the device-side skip/scatter-sink contract).  S=1 returns the
+        table unchanged under a leading unit axis."""
+        t = np.asarray(table, np.int64)
+        owner = t // self.nb_local
+        local = (t % self.nb_local).astype(np.int32)
+        out = np.zeros((self.num_shards,) + t.shape, np.int32)
+        for s in range(self.num_shards):
+            np.copyto(out[s], local, where=owner == s)
+        return out
+
     def reset_counters(self) -> None:
         self.pages_allocated = self.pages_freed = 0
         self.pages_shared = self.pages_evicted = 0
 
-    def _reclaim(self) -> Optional[int]:
-        if self._free:
-            return self._free.pop()
+    def _reclaim(self, preferred: int = 0) -> Optional[int]:
+        for i in range(self.num_shards):
+            fl = self._free_by_shard[(preferred + i) % self.num_shards]
+            if fl:
+                return fl.pop()
         if self._lru:                      # evict the coldest cached page
             page, _ = self._lru.popitem(last=False)
             del self._hash_to_page[self._page_hash.pop(page)]
@@ -143,10 +206,12 @@ class BlockAllocator:
 
     def alloc_page(self, slot: int) -> Optional[int]:
         """Grant one exclusive page to ``slot`` (evicting cold cached pages
-        under pressure); None if every page is referenced."""
+        under pressure); None if every page is referenced.  The slot's next
+        logical block prefers its round-robin shard, so a sequence's pages
+        spread across the sharded pool."""
         if self.used[slot] >= self.table.shape[1]:
             return None
-        page = self._reclaim()
+        page = self._reclaim(int(self.used[slot]) % self.num_shards)
         if page is None:
             return None
         self.refcount[page] = 1
@@ -194,7 +259,7 @@ class BlockAllocator:
             if page in self._page_hash:
                 self._lru[page] = None     # park: matchable until evicted
             else:
-                self._free.append(page)
+                self._free_by_shard[self.owner(page)].append(page)
 
     # -- prefix-cache registry -----------------------------------------
     def register(self, page: int, digest: bytes) -> bool:
@@ -217,7 +282,8 @@ class ServeEngine:
                  prefill_buckets=(32, 128, 512), paged: Optional[bool] = None,
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  max_tokens_per_tick: Optional[int] = None,
-                 prefix_caching: Optional[bool] = None):
+                 prefix_caching: Optional[bool] = None,
+                 seq_shards: int = 1):
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
@@ -231,6 +297,25 @@ class ServeEngine:
             raise ValueError("prefix_caching requires the paged KV cache")
         self.prefix_caching = self.paged if prefix_caching is None \
             else bool(prefix_caching)
+
+        self.seq_shards = int(seq_shards)
+        if self.seq_shards < 1 or (self.seq_shards & (self.seq_shards - 1)):
+            raise ValueError(
+                f"seq_shards must be a power of two, got {seq_shards} "
+                "(the NoC butterfly combine is a recursive-doubling tree)")
+        if self.seq_shards > 1:
+            if not self.paged:
+                raise ValueError("seq_shards > 1 requires the paged KV cache")
+            ndev = jax.device_count()
+            if ndev < self.seq_shards:
+                raise ValueError(
+                    f"seq_shards={self.seq_shards} needs that many devices "
+                    f"but only {ndev} are visible — set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count="
+                    f"{self.seq_shards} before importing jax, or shard less")
+            self.mesh = compat.make_mesh((self.seq_shards,), ("seq",))
+        else:
+            self.mesh = None
 
         # prefill chunk buckets; always include max_seq so any admissible
         # prompt fits some bucket
@@ -247,10 +332,16 @@ class ServeEngine:
         if self.paged:
             self.block_size = block_size
             self.blocks_per_slot = -(-max_seq // block_size)
+            S = self.seq_shards
             if num_blocks is None:
-                num_blocks = 1 + slots * self.blocks_per_slot  # +1: null page
+                # +1 null page per shard; usable capacity is identical for
+                # every shard count (slots * blocks_per_slot)
+                num_blocks = S + slots * self.blocks_per_slot
+                num_blocks = S * (-(-num_blocks // S))
+            elif num_blocks % S:
+                num_blocks = S * (-(-num_blocks // S))   # round up to shards
             self.alloc = BlockAllocator(num_blocks, block_size, slots,
-                                        self.blocks_per_slot)
+                                        self.blocks_per_slot, num_shards=S)
             self.state = M.init_paged_decode_state(cfg, num_blocks, block_size,
                                                    dtype=self.dtype)
         else:
@@ -271,16 +362,45 @@ class ServeEngine:
             "pages_allocated": 0, "pages_freed": 0, "pages_shared": 0,
             "pages_evicted": 0,
             "gather_pages_calls": 0, "gather_page_volume": 0,
+            # in-transit NoC combine accounting (sequence-sharded serving):
+            # one tree_softmax_combine per layer per dispatched decode tick /
+            # prefill chunk, costed by core.noc.softmax_combine_cost
+            "noc_combines": 0, "noc_hops": 0, "noc_bytes": 0,
+            "noc_energy_pj": 0.0,
         }
         self._prefill_fns: Dict[int, object] = {}
         self._decode = self._make_decode_fn()
         self._copy_page = jax.jit(M.copy_kv_page) if self.paged else None
 
     # -- jit caches ----------------------------------------------------
+    def _state_partition_specs(self):
+        """shard_map specs for the paged state: pages sharded over the
+        ``seq`` axis (axis 2 of [L, KvH, NB, BS, hd])."""
+        from jax.sharding import PartitionSpec as P
+        p = P(None, None, "seq")
+        return {"attn": {"k_pages": p, "v_pages": p}}
+
     def _make_decode_fn(self):
         cfg = self.cfg
 
-        if self.paged:
+        if self.paged and self.seq_shards > 1:
+            from jax.sharding import PartitionSpec as P
+            sspec = self._state_partition_specs()
+
+            def body(params, state, toks, lens, tables_local):
+                # tables_local arrives [1, B, MB] (this shard's slice)
+                return M.decode_step_paged(cfg, params, state, toks, lens,
+                                           tables_local[0], seq_axis="seq")
+
+            smapped = compat.shard_map(
+                body, mesh=self.mesh,
+                in_specs=(P(), sspec, P(), P(), P("seq")),
+                out_specs=(P(), sspec), check_vma=False)
+
+            def f(params, state, toks, lens, tables):
+                self.stats["decode_traces"] += 1
+                return smapped(params, state, toks, lens, tables)
+        elif self.paged:
             def f(params, state, toks, lens, tables):
                 self.stats["decode_traces"] += 1
                 return M.decode_step_paged(cfg, params, state, toks, lens,
@@ -300,7 +420,25 @@ class ServeEngine:
             return fn
         cfg, dtype, max_seq = self.cfg, self.dtype, self.max_seq
 
-        if self.paged:
+        if self.paged and self.seq_shards > 1:
+            from jax.sharding import PartitionSpec as P
+            sspec = self._state_partition_specs()
+
+            def body(params, state, toks, length, q_offset, bt_local):
+                return M.prefill_paged(cfg, params, state, tokens=toks,
+                                       length=length, q_offset=q_offset,
+                                       block_table=bt_local[0],
+                                       seq_axis="seq")
+
+            smapped = compat.shard_map(
+                body, mesh=self.mesh,
+                in_specs=(P(), sspec, P(), P(), P(), P("seq")),
+                out_specs=(P(), sspec), check_vma=False)
+
+            def f(params, state, toks, length, q_offset, bt_row):
+                self.stats["prefill_traces"] += 1
+                return smapped(params, state, toks, length, q_offset, bt_row)
+        elif self.paged:
             def f(params, state, toks, length, q_offset, bt_row):
                 self.stats["prefill_traces"] += 1
                 return M.prefill_paged(cfg, params, state, tokens=toks,
@@ -334,7 +472,7 @@ class ServeEngine:
             # holding its partial allocation (no preemption yet)
             pages = -(-min(self._plen(req) + req.max_new_tokens,
                            self.max_seq) // self.block_size)
-            usable = self.alloc.num_blocks - 1
+            usable = self.alloc.usable_blocks
             if pages > usable:
                 raise ValueError(
                     f"request needs up to {pages} KV pages but the pool has "
@@ -521,10 +659,16 @@ class ServeEngine:
             bt = np.zeros((mb,), np.int32)
             u = min(int(self.alloc.used[slot]), mb)
             bt[:u] = self.alloc.table[slot, :u]
+            S = self.seq_shards
+            if S > 1:
+                bt = self.alloc.shard_local(bt)       # [S, mb] local tables
+                self._account_noc_combine(rows=bucket)
             if not ops.using_pallas():
-                # fallback linearizes k+v per layer per chunk (kernel: zero)
-                self.stats["gather_pages_calls"] += 2 * self.cfg.n_layers
-                self.stats["gather_page_volume"] += 2 * self.cfg.n_layers * mb
+                # fallback linearizes k+v per layer per chunk per shard
+                # (kernel: zero)
+                self.stats["gather_pages_calls"] += 2 * self.cfg.n_layers * S
+                self.stats["gather_page_volume"] += (2 * self.cfg.n_layers
+                                                     * mb * S)
             logits, self.state = fn(
                 self.params, self.state, jnp.asarray(padded[None]),
                 jnp.int32(n), jnp.int32(req.prefill_pos), jnp.asarray(bt))
@@ -534,6 +678,18 @@ class ServeEngine:
                                jnp.array([n], jnp.int32))
         self.state = _scatter_slot(self.state, one_state, slot)
         return logits
+
+    def _account_noc_combine(self, rows: int) -> None:
+        """Accumulate the in-transit combine traffic one sharded dispatch
+        performs: one tree_softmax_combine per layer, ``rows`` query rows
+        each (slots for decode, the chunk bucket for prefill)."""
+        cfg = self.cfg
+        c = noc.softmax_combine_cost(rows, cfg.n_heads, cfg.hd,
+                                     self.seq_shards)
+        self.stats["noc_combines"] += cfg.n_layers
+        self.stats["noc_hops"] += cfg.n_layers * c["hops"]
+        self.stats["noc_bytes"] += cfg.n_layers * c["bytes"]
+        self.stats["noc_energy_pj"] += cfg.n_layers * c["energy_pj"]
 
     def _sample(self, logits, req: Request) -> int:
         logits = logits.reshape(-1)
@@ -583,9 +739,16 @@ class ServeEngine:
                     toks[i] = self.active[i].out_tokens[-1]
                 # .copy(): jnp.asarray zero-copy-aliases numpy buffers on
                 # CPU, and lengths/table are mutated below while the async
-                # dispatch may still be reading them
-                tables = (jnp.asarray(self.alloc.table.copy()) if self.paged
-                          else None)
+                # dispatch may still be reading them (shard_local already
+                # builds a fresh array)
+                if not self.paged:
+                    tables = None
+                elif self.seq_shards > 1:
+                    tables = jnp.asarray(
+                        self.alloc.shard_local(self.alloc.table))
+                    self._account_noc_combine(rows=self.slots)
+                else:
+                    tables = jnp.asarray(self.alloc.table.copy())
                 logits, self.state = self._decode(
                     self.params, self.state, jnp.asarray(toks),
                     jnp.asarray(self.lengths.copy()), tables)
@@ -655,7 +818,8 @@ class ServeEngine:
             raise RuntimeError(
                 f"engine not drained after {max_ticks} ticks "
                 f"(queued={len(self.queue)}, active rids={live}, "
-                f"stalled_ticks={self.stats['stalled_ticks']:.0f})")
+                f"stalled_ticks={self.stats['stalled_ticks']:.0f}, "
+                f"preemptions={self.stats['preemptions']:.0f})")
         return done
 
     # -- introspection -------------------------------------------------

@@ -39,6 +39,13 @@ except ImportError:
     sys.modules["hypothesis.strategies"] = _st
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "multidevice: needs several jax devices (CI runs these with "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,78 @@
+"""Trajectory gate for the serve benchmark: compare the current
+BENCH_serve.json against the previous run's artifact and fail on a >20%
+regression of the headline serving metrics (paged decode tok/s up, prefix
+TTFT p50 down).
+
+  python tools/check_bench_trajectory.py PREV.json CURRENT.json [--tol 0.20]
+
+Skips gracefully (exit 0 with a notice) when the previous artifact is
+missing or unreadable — the first run of a branch has nothing to compare
+against.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _get(d: dict, *path):
+    for k in path:
+        if not isinstance(d, dict) or k not in d:
+            return None
+        d = d[k]
+    return d
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("prev")
+    ap.add_argument("current")
+    ap.add_argument("--tol", type=float, default=0.20,
+                    help="allowed fractional regression (default 20%)")
+    args = ap.parse_args()
+
+    try:
+        with open(args.prev) as f:
+            prev = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"[trajectory] no previous benchmark to compare ({e}); skipping")
+        return 0
+    try:
+        with open(args.current) as f:
+            cur = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"[trajectory] current benchmark unreadable: {e}")
+        return 1
+
+    # (name, json path, higher_is_better)
+    metrics = [
+        ("paged decode tok/s", ("mixed", "paged", "tok_s"), True),
+        ("prefix-cache TTFT p50 ms",
+         ("shared_prefix", "cache_on", "ttft_p50_ms"), False),
+    ]
+    failures = []
+    for name, path, up in metrics:
+        p, c = _get(prev, *path), _get(cur, *path)
+        if p is None or c is None or not p:
+            print(f"[trajectory] {name}: missing in prev/current; skipping")
+            continue
+        ratio = c / p
+        worse = (ratio < 1 - args.tol) if up else (ratio > 1 + args.tol)
+        arrow = ("same" if ratio == 1
+                 else "better" if (ratio > 1) == up else "worse")
+        print(f"[trajectory] {name}: prev={p:.3f} cur={c:.3f} "
+              f"({ratio:.2f}x, {arrow})")
+        if worse:
+            failures.append(f"{name} regressed {ratio:.2f}x vs previous run "
+                            f"(tolerance {args.tol:.0%})")
+    if failures:
+        for msg in failures:
+            print(f"[trajectory] FAIL: {msg}")
+        return 1
+    print("[trajectory] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
