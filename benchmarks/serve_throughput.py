@@ -75,6 +75,11 @@ def _drive(eng: ServeEngine, reqs) -> dict:
         "prefix_hit_tokens": int(eng.stats["prefix_hit_tokens"]),
         "prefix_hit_rate": eng.prefix_hit_rate,
         "preemptions": int(eng.stats["preemptions"]),
+        "preempt_swaps": int(eng.stats["preempt_swaps"]),
+        "preempt_recomputes": int(eng.stats["preempt_recomputes"]),
+        "swap_bytes": int(eng.stats["swap_bytes"]),
+        "preempted_tokens": int(eng.stats["preempted_tokens"]),
+        "restored_tokens": int(eng.stats["restored_tokens"]),
         "pages_shared": int(eng.stats["pages_shared"]),
         "cow_copies": int(eng.stats["cow_copies"]),
         "noc_combines": int(eng.stats["noc_combines"]),
@@ -224,6 +229,64 @@ def run_sharded(cfg, params, slots: int, max_seq: int, n_requests: int,
             "sharded": _jsonable(sharded)}
 
 
+def run_preempted(cfg, params, max_seq: int, seq_shards: int = 1,
+                  seed: int = 0) -> dict:
+    """Oversubscribed page pool: progress-preserving preemption A/B.
+
+    Long-decode requests that each fit the pool alone but deadlock together
+    force swap/recompute preemptions.  Reports goodput (completed tokens/s)
+    and the restored-token ratio (progress preserved / progress preempted),
+    and asserts greedy outputs stay token-identical to an unpressured run
+    for BOTH policies — preempted requests resume, never replay."""
+    header(f"serve preemption: oversubscribed pool, swap vs recompute "
+           f"(seq_shards={seq_shards})")
+    bs = 8
+    plen = max(8, max_seq // 5)
+    mnt = min(40, max_seq - plen - 2)
+    pages = -(-(plen + mnt) // bs)
+    # usable pool ~1.4x one request: each fits alone, two deadlock mid-decode
+    pressured_blocks = 1 + (7 * pages) // 5
+    rng = np.random.default_rng(seed)
+    reqs = [(rng.integers(0, cfg.vocab_size, plen).tolist(),
+             dict(max_new_tokens=mnt)) for _ in range(4)]
+    buckets = (16, 32, max_seq)
+    mk = dict(max_seq=max_seq, slots=2, block_size=bs,
+              prefill_buckets=buckets)
+
+    def _engine(**extra):
+        eng = ServeEngine(cfg, params, paged=True, **mk, **extra)
+        eng.submit(list(range(1, plen + 1)), max_new_tokens=2)  # warm jits
+        eng.run_until_drained()
+        eng.reset_stats()
+        return eng
+
+    res = {}
+    base = _drive(_engine(), reqs)             # full pool: no pressure
+    assert base["preemptions"] == 0, base
+    for policy in ("swap", "recompute"):
+        eng = _engine(num_blocks=pressured_blocks, preempt_policy=policy,
+                      seq_shards=seq_shards)
+        r = _drive(eng, reqs)
+        r["outputs_match"] = r["tokens"] == base["tokens"]
+        r["goodput_tok_s"] = r["tok_s"]
+        r["restored_ratio"] = (r["restored_tokens"]
+                               / max(1, r["preempted_tokens"]))
+        assert r["outputs_match"], (
+            f"preempt_policy={policy}: pressured outputs diverged")
+        assert r["preemptions"] >= 1, f"{policy}: pool never pressured"
+        res[policy] = r
+        emit(f"serve_preempt_{policy}_s{seq_shards}", 0.0,
+             f"goodput_tok_s={r['goodput_tok_s']:.1f};"
+             f"preemptions={r['preemptions']};"
+             f"restored_ratio={r['restored_ratio']:.2f};"
+             f"swap_bytes={r['swap_bytes']};outputs_match=True")
+    return {"seq_shards": seq_shards, "base_tok_s": base["tok_s"],
+            "pressured_blocks": pressured_blocks,
+            "outputs_match": True,
+            "swap": _jsonable(res["swap"]),
+            "recompute": _jsonable(res["recompute"])}
+
+
 def run(slots: int = 8, max_seq: int = 128, n_requests: int = 32,
         seed: int = 0, out_json: str = "BENCH_serve.json",
         seq_shards: int = 1):
@@ -238,10 +301,13 @@ def run(slots: int = 8, max_seq: int = 128, n_requests: int = 32,
         "mixed": run_mixed(cfg, params, slots, max_seq, n_requests, seed),
         "shared_prefix": run_shared_prefix(cfg, params, slots, max_seq,
                                            n_requests, seed),
+        "preempted": run_preempted(cfg, params, max_seq, seed=seed),
     }
     if seq_shards > 1:
         results["sharded"] = run_sharded(cfg, params, slots, max_seq,
                                          n_requests, seq_shards, seed)
+        results["preempted_sharded"] = run_preempted(
+            cfg, params, max_seq, seq_shards=seq_shards, seed=seed)
     with open(out_json, "w") as f:
         json.dump(results, f, indent=2)
     print(f"# wrote {out_json}")

@@ -69,6 +69,13 @@ def main():
           f"{s['pages_freed']:.0f}/{s['pages_shared']:.0f}, "
           f"cow={s['cow_copies']:.0f}, "
           f"gather_volume={s['gather_page_volume']:.0f} pages")
+    print(f"preemption stats: {s['preemptions']:.0f} total "
+          f"(swap={s['preempt_swaps']:.0f}, "
+          f"recompute={s['preempt_recomputes']:.0f}), "
+          f"swap_bytes={s['swap_bytes']:.0f}, "
+          f"restored_tokens={s['restored_tokens']:.0f}/"
+          f"{s['preempted_tokens']:.0f} preempted "
+          f"(policy={eng.preempt_policy})")
     assert len(done) == len(prompts)
 
     # -- prefix caching: resubmit the longest prompt — its full pages are

@@ -25,6 +25,7 @@ from jax import lax
 
 from repro import compat
 from repro.kernels import ref
+from repro.pimsim import params as _pimparams
 
 Combiner = Callable  # (tree, tree) -> tree
 
@@ -157,6 +158,62 @@ def softmax_combine_cost(rows: int, heads: int, head_dim: int,
     total = hops * payload
     return {"hops": hops, "bytes": total,
             "energy_pj": total * 8 * E_HOP_PJ_PER_BIT}
+
+
+# swap-vs-recompute preemption cost model --------------------------------
+#
+# Under page-pool pressure the serving engine must evict a victim's KV
+# state; heterogeneous-PIM schedulers (HPIM, Sangam) model the same binary
+# choice this decides: park the state in a slower tier (bytes over the
+# host link, paid twice — out now, back at restore) or drop it and re-run
+# prefill in the fast tier (FLOPs).  Constants mirror ``pimsim.params``:
+# the swap link is the CXL point-to-point hop a CXL-attached pool would
+# traverse, the recompute rate is the SRAM-PIM compute lane (prefill is
+# GEMM-shaped work and lands there).  Module-level so tests and operators
+# can re-point them at measured hardware.
+
+_CXL = _pimparams.Cxl()
+_SRAM = _pimparams.SramPim()
+_DRAM = _pimparams.DramPim()
+
+SWAP_LINK_BYTES_PER_S = _CXL.p2p_bw
+SWAP_E_PJ_PER_BIT = _CXL.e_pj_per_bit
+RECOMPUTE_FLOPS_PER_S = _SRAM.bank_flops() * _DRAM.banks
+RECOMPUTE_E_PJ_PER_FLOP = _SRAM.e_mac_pj / 2.0   # one MAC = two FLOPs
+
+
+def swap_cost(n_pages: int, page_bytes: int) -> dict:
+    """Round-trip cost of parking ``n_pages`` KV pages host-side.
+
+    ``page_bytes`` counts K **and** V for one page; the factor 2 is the two
+    link traversals (swap-out now, swap-in at restore).  Returns
+    ``{"bytes", "seconds", "energy_pj"}``."""
+    b = 2 * n_pages * page_bytes
+    return {"bytes": b, "seconds": b / SWAP_LINK_BYTES_PER_S,
+            "energy_pj": b * 8 * SWAP_E_PJ_PER_BIT}
+
+
+def recompute_cost(tokens: int, flops_per_token: float) -> dict:
+    """Cost of re-running prefill over ``tokens`` dropped KV tokens.
+
+    An upper bound: prefix-cache hits at re-admission can re-attach pages
+    by reference and skip part of the replay.  Returns
+    ``{"flops", "seconds", "energy_pj"}``."""
+    f = tokens * flops_per_token
+    return {"flops": f, "seconds": f / RECOMPUTE_FLOPS_PER_S,
+            "energy_pj": f * RECOMPUTE_E_PJ_PER_FLOP}
+
+
+def preempt_decision(n_pages: int, page_bytes: int, tokens: int,
+                     flops_per_token: float) -> str:
+    """Pick the cheaper eviction arm for one victim: ``"swap"`` when moving
+    the KV bytes over the link costs less time than re-running the prefill
+    FLOPs, else ``"recompute"``.  Big models (high FLOPs/token vs bytes/
+    token) swap; tiny models recompute — the crossover the HPIM/Sangam
+    schedulers exploit."""
+    s = swap_cost(n_pages, page_bytes)["seconds"]
+    r = recompute_cost(tokens, flops_per_token)["seconds"]
+    return "swap" if s <= r else "recompute"
 
 
 def distributed_softmax(x, axis_name: str):

@@ -10,6 +10,26 @@ device runs this kernel over its slab and returns (acc, m, l) partials;
 ``core.noc.tree_softmax_combine`` merges them over the mesh — the paper's
 Fig. 10 in-transit Softmax reduction.
 
+Contract (shared with ``prefill_attention.py``; quoted by docs/kernels.md):
+
+* **Partials algebra.**  ``*_partial`` variants return un-normalized
+  ``(acc f32 [..., D], m [...], l [...])`` online-softmax state per query
+  row: ``m`` the running max, ``l`` the running exp-sum, ``acc`` the
+  exp-weighted V sum.  Two partials over disjoint KV ranges combine
+  associatively via ``ref.combine_partials``; normalizing is
+  ``acc / max(l, eps)``.  A row that saw no valid KV degrades to
+  ``(acc=0, m=NEG_INF, l=0)``, which combines to zero weight.
+* **Paged addressing.**  The paged kernels never see a linearized cache:
+  the block table rides scalar prefetch and is resolved inside the
+  BlockSpec ``index_map``, so the DMA engine gathers (head, page) tiles
+  directly.  Dead grid steps clamp their index to the last live page —
+  consecutive identical indices elide the DMA — and skip compute.
+* **``skip_null``.**  Off (default): a zero table entry is ordinary page
+  0 (unsharded semantics).  On (the sequence-sharded shard-local-table
+  contract): a zero entry marks a page some other shard owns — compute
+  is skipped entirely, so foreign pages contribute nothing even inside
+  the live range and an all-foreign row yields the zero-weight partial.
+
 Grid: (B, KvH, n_seq_blocks) — last axis sequential, scratch accumulates.
 """
 from __future__ import annotations

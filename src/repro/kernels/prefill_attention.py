@@ -15,9 +15,27 @@ Work is bounded by the live prefix: grid steps past the last live page clamp
 their index map to the final live page (consecutive identical indices elide
 the DMA) and skip compute under ``pl.when``.
 
-The kernel keeps the decode kernel's ``(acc, m, l)`` partials contract, so
-``core.noc.tree_softmax_combine`` applies unchanged when the page pool is
-sequence-sharded.
+The kernel keeps the decode kernel's ``(acc, m, l)`` partials contract
+(see ``decode_attention.py``'s module docstring for the full statement:
+partials algebra, paged index-map addressing, and the ``skip_null``
+shard-local-table flag), so ``core.noc.tree_softmax_combine`` applies
+unchanged when the page pool is sequence-sharded.  Prefill-specific
+points of that contract:
+
+* Causal masking is on **global** positions (``q_offset + row``), KV
+  validity on ``kpos < q_offset + length`` — chunked calls with growing
+  ``q_offset`` reproduce a monolithic prefill exactly.
+* The query tile is row-major ``(position, group)``: tile row ``r`` is
+  chunk position ``r // G``, query head ``r % G``, so per-row masks read
+  straight off an iota.
+* ``block_table`` may be a prefix *slice* of the slot's table (the engine
+  passes a power-of-two bucket covering the live prefix); work is bounded
+  by ``ceil((q_offset + length) / BS)`` pages, never the pool size.
+
+Testing recipe: every kernel here runs under ``interpret=True`` on CPU
+against the dense oracles in ``kernels/ref.py`` (gather pages, run the
+linear-cache reference, compare to fp32 tolerance) — see
+``tests/test_serve_paged.py`` and docs/kernels.md.
 
 Grid: (KvH, n_pages) — last axis sequential, scratch accumulates.
 """

@@ -41,6 +41,15 @@ def main():
                     help="sequence-shard the page pool over N devices on a "
                          "'seq' mesh axis (paged families only; force host "
                          "devices with XLA_FLAGS on CPU)")
+    ap.add_argument("--preempt-policy", default="auto",
+                    choices=["swap", "recompute", "auto"],
+                    help="how preemption victims keep their progress: swap "
+                         "pages to the host arena, drop + recompute via the "
+                         "prefix cache, or pick per victim from the "
+                         "link-bytes-vs-prefill-FLOPs cost model")
+    ap.add_argument("--swap-pages", type=int, default=None,
+                    help="host swap-arena capacity in pages (default: one "
+                         "full pool's worth)")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore trained params (repro.checkpoint layout)")
     args = ap.parse_args()
@@ -66,7 +75,9 @@ def main():
                       num_blocks=args.num_blocks,
                       max_tokens_per_tick=args.token_budget,
                       prefix_caching=prefix_caching,
-                      seq_shards=args.seq_shards)
+                      seq_shards=args.seq_shards,
+                      preempt_policy=args.preempt_policy,
+                      swap_pages=args.swap_pages)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for i in range(args.requests):
@@ -89,7 +100,12 @@ def main():
           f"occupancy={eng.mean_occupancy:.2f}, "
           f"prefill_traces={eng.stats['prefill_traces']:.0f}, "
           f"prefix_hit_tokens={eng.stats['prefix_hit_tokens']:.0f}, "
-          f"preemptions={eng.stats['preemptions']:.0f}, "
+          f"preemptions={eng.stats['preemptions']:.0f} "
+          f"(swap={eng.stats['preempt_swaps']:.0f}/"
+          f"recompute={eng.stats['preempt_recomputes']:.0f}, "
+          f"restored={eng.stats['restored_tokens']:.0f} of "
+          f"{eng.stats['preempted_tokens']:.0f} preempted tokens, "
+          f"swap_bytes={eng.stats['swap_bytes']:.0f}), "
           f"gather_volume={eng.stats['gather_page_volume']:.0f}")
     if eng.seq_shards > 1:
         print(f"[serve] noc: combines={eng.stats['noc_combines']:.0f}, "

@@ -389,6 +389,35 @@ def copy_kv_page(state, src, dst):
                      "v_pages": vp.at[:, :, dst].set(vp[:, :, src])}}
 
 
+def extract_kv_pages(state, pages):
+    """Gather physical KV pages by id — the device->host half of a page
+    swap (progress-preserving preemption parks a victim's live pages in the
+    host ``serve/swap.py`` arena).
+
+    ``pages`` [P] int32 global page ids; returns ``(k, v)`` each
+    ``[L, KvH, P, BS, hd]``.  Callers pad ``pages`` to a power-of-two
+    bucket (extra entries repeat the null page 0) so the jitted gather
+    specializes to O(log max_pages) shapes; padded rows are discarded
+    host-side.  With a sequence-sharded pool the engine batches one call
+    per shard, so each gather touches a single shard's pages."""
+    kp, vp = state["attn"]["k_pages"], state["attn"]["v_pages"]
+    return kp[:, :, pages], vp[:, :, pages]
+
+
+def insert_kv_pages(state, pages, k, v):
+    """Scatter swapped-out KV pages back into the pool — the host->device
+    half of a page swap (restore at re-admission).
+
+    ``pages`` [P] int32 global destination ids; ``k``/``v``
+    ``[L, KvH, P, BS, hd]`` as produced by :func:`extract_kv_pages`.
+    Padding entries may target page 0: that is the null sink, so the extra
+    writes are harmless (duplicate indices resolve last-write-wins, which
+    only ever races on the null page)."""
+    kp, vp = state["attn"]["k_pages"], state["attn"]["v_pages"]
+    return {"attn": {"k_pages": kp.at[:, :, pages].set(k.astype(kp.dtype)),
+                     "v_pages": vp.at[:, :, pages].set(v.astype(vp.dtype))}}
+
+
 def decode_step_paged(cfg: ModelConfig, params, state, tokens, lengths,
                       block_tables, *, attn_window: Optional[int] = None,
                       seq_axis: Optional[str] = None):

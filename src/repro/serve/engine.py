@@ -31,6 +31,17 @@ standard production mechanisms:
   the pages (``ops.paged_prefill_attention``); the engine passes a
   prefix-length-bucketed slice of the block table, so per-chunk work is
   bounded by ``ceil(cached_len/BS)`` pages instead of the pool size.
+* **Progress-preserving preemption** — allocation deadlocks under page-pool
+  pressure are broken by evicting the slot with the least live KV, but its
+  progress *survives*: pages are either **swapped** to a host-side arena
+  (``serve/swap.py``) and copied back verbatim at restore, or **dropped and
+  recomputed** — full pages republished through the prefix cache (the
+  digest chain extends over decoded tokens) and the remainder re-prefilled
+  from ``prompt + out_tokens``.  ``preempt_policy={"swap","recompute",
+  "auto"}``; ``auto`` weighs link bytes against prefill FLOPs per victim
+  (``core.noc.preempt_decision``).  Preempted requests re-admit with
+  priority over new work; no decoded token is ever replayed or re-sampled,
+  so greedy outputs are token-identical to an unpressured run.
 * **Sequence-sharded page pool** (``seq_shards=N``) — the physical pool is
   split over an N-device ``seq`` mesh axis; ``BlockAllocator`` places a
   slot's pages round-robin across shards (fill-local under pressure), and
@@ -70,6 +81,15 @@ from repro.models import model as M
 
 @dataclass
 class Request:
+    """One in-flight generation request (engine-internal mutable record).
+
+    ``out_tokens`` grows by sampling; ``prefill_pos`` tracks chunked-prefill
+    progress; the ``resume_*`` fields carry preserved progress across a
+    preemption (see :meth:`ServeEngine.step`'s deadlock breaking): after a
+    preempt, ``resume_len`` is the number of KV tokens (prompt *and*
+    decoded) that must be restored — by swap-in or recompute — before
+    decode can continue, and ``_resume_tokens`` is that token sequence
+    (``prompt[:plen] + out_tokens[:-1]`` truncated to ``resume_len``)."""
     rid: int
     prompt: np.ndarray                  # [len] int32
     max_new_tokens: int = 32
@@ -80,9 +100,20 @@ class Request:
     prefill_pos: int = 0                # tokens already prefilled (chunked)
     cached_len: int = 0                 # prefix tokens served from cache
     ttft: Optional[float] = None        # submit -> first token (seconds)
+    resume_len: int = 0                 # preempted: KV tokens to restore
+    _preempted_live: int = 0            # KV tokens live at last eviction
     _t_submit: float = 0.0
     _digests: List[bytes] = field(default_factory=list)  # per-full-page chain
     _published: int = 0                 # this slot's pages already registered
+    _resume_tokens: Optional[np.ndarray] = None  # [resume_len] int32
+    _swap: Optional[object] = None      # swap.SwapHandle while parked
+
+
+def _next_pow2(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
 
 
 def _page_digests(prompt: np.ndarray, block_size: int, n_pages: int,
@@ -245,7 +276,12 @@ class BlockAllocator:
         return True
 
     def release(self, slot: int) -> None:
-        for i in range(int(self.used[slot])):
+        """Drop every page reference the slot holds (tail block first, so
+        registered pages park in the LRU tail-before-head and pool pressure
+        evicts a cached chain's *suffix* first — a chain missing its head
+        page can never be matched again, a chain missing its tail still
+        serves a shorter prefix)."""
+        for i in reversed(range(int(self.used[slot]))):
             self._unref(int(self.table[slot, i]))
         self.table[slot] = 0
         self.used[slot] = 0
@@ -283,7 +319,45 @@ class ServeEngine:
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  max_tokens_per_tick: Optional[int] = None,
                  prefix_caching: Optional[bool] = None,
-                 seq_shards: int = 1):
+                 seq_shards: int = 1, preempt_policy: str = "auto",
+                 swap_pages: Optional[int] = None):
+        """Stand up a serving engine over ``params``.
+
+        Args:
+          cfg: model architecture (``repro.configs``); attention families
+            (``dense``/``moe``) default to the paged KV cache.
+          params: parameter pytree (its leaf dtype sets the KV dtype).
+          max_seq: per-sequence cap, prompt + generated tokens.
+          slots: concurrent sequences in the batched decode.
+          seed: RNG seed for temperature sampling.
+          prefill_buckets: chunk sizes for chunked prefill; each bucket is
+            jit-compiled once and cached (``max_seq`` is always included).
+          paged: force the paged KV cache on/off (default: on for paged
+            families, off otherwise — the dense A/B baseline).
+          block_size: tokens per KV page.
+          num_blocks: physical page-pool size (default: full capacity,
+            ``slots * ceil(max_seq/block_size)`` + null pages).  Smaller
+            pools oversubscribe — the engine then stalls, preempts, and
+            restores under pressure rather than failing.
+          max_tokens_per_tick: padded-token budget per tick shared by
+            decode (reserved first) and chunked prefill.
+          prefix_caching: share full prompt pages across requests via a
+            chained content hash (default: on when paged).
+          seq_shards: sequence-shard the page pool over an N-device
+            ``seq`` mesh axis (power of two); per-shard attention partials
+            merge in transit via ``core.noc.tree_softmax_combine``.
+          preempt_policy: how a preemption victim's KV progress is
+            preserved — ``"swap"`` parks live pages in the host arena
+            (``serve/swap.py``), ``"recompute"`` drops them and replays
+            prefill over prompt + decoded tokens at restore (prefix-cache
+            hits skip most of the replay), ``"auto"`` (default) picks per
+            victim via ``core.noc.preempt_decision`` (link bytes vs
+            prefill FLOPs).  Greedy outputs are token-identical to an
+            unpressured run under every policy.
+          swap_pages: host swap-arena capacity in pages (default: one full
+            pool's worth).  A full arena degrades ``swap`` to
+            ``recompute`` for that victim instead of failing.
+        """
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
@@ -329,6 +403,12 @@ class ServeEngine:
                 f"afford the smallest prefill bucket "
                 f"({self.prefill_buckets[0]}); no request could ever start")
 
+        if preempt_policy not in ("swap", "recompute", "auto"):
+            raise ValueError(
+                f"preempt_policy must be 'swap', 'recompute' or 'auto', "
+                f"got {preempt_policy!r}")
+        self.preempt_policy = preempt_policy
+
         if self.paged:
             self.block_size = block_size
             self.blocks_per_slot = -(-max_seq // block_size)
@@ -351,12 +431,26 @@ class ServeEngine:
         self.lengths = np.zeros((slots,), np.int32)
         self.active: List[Optional[Request]] = [None] * slots
         self.queue: List[Request] = []
+        # preempted requests await re-admission here with *priority* over
+        # new submissions (no starvation: a victim can never be queue-jumped
+        # by fresh work competing for the pages it was evicted to free)
+        self.restore_queue: List[Request] = []
+        self.swap_pages = (swap_pages if swap_pages is not None
+                           else (slots * self.blocks_per_slot
+                                 if self.paged else 0))
+        self._arena = None              # serve.swap.SwapArena, lazily built
         self._rid = itertools.count()
         self._tick = 0
         self.stats: Dict[str, float] = {
             "prefill_traces": 0, "decode_traces": 0, "ticks": 0,
             "prefill_tokens": 0, "decode_tokens": 0, "occupancy_sum": 0.0,
             "stalled_ticks": 0, "preemptions": 0,
+            # progress-preserving preemption: every preemption is a swap or
+            # a recompute (restart-preemptions are gone); preempted_tokens
+            # counts KV tokens live at eviction, restored_tokens the part
+            # re-attached without replay (swap-in or prefix-cache hit)
+            "preempt_swaps": 0, "preempt_recomputes": 0, "swap_bytes": 0,
+            "preempted_tokens": 0, "restored_tokens": 0,
             # prefix caching + page-gather accounting (paged mode)
             "prefix_hits": 0, "prefix_hit_tokens": 0, "cow_copies": 0,
             "pages_allocated": 0, "pages_freed": 0, "pages_shared": 0,
@@ -371,6 +465,12 @@ class ServeEngine:
         self._prefill_fns: Dict[int, object] = {}
         self._decode = self._make_decode_fn()
         self._copy_page = jax.jit(M.copy_kv_page) if self.paged else None
+        # page-swap device halves; page-id args are padded to power-of-two
+        # buckets so each jit specializes O(log max_pages) times
+        self._extract_pages = jax.jit(M.extract_kv_pages) if self.paged \
+            else None
+        self._insert_pages = jax.jit(M.insert_kv_pages) if self.paged \
+            else None
 
     # -- jit caches ----------------------------------------------------
     def _state_partition_specs(self):
@@ -455,6 +555,16 @@ class ServeEngine:
 
     # -- submission ----------------------------------------------------
     def submit(self, prompt, **kw) -> int:
+        """Queue one generation request; returns its request id.
+
+        ``prompt`` is a sequence of token ids in ``[0, vocab_size)``;
+        keyword args fill the :class:`Request` fields (``max_new_tokens``,
+        ``temperature``, ``eos_id``).  Validation is up-front and loud:
+        empty or out-of-vocab prompts raise (out-of-vocab ids would embed
+        as NaN and poison recycled pages), as does a request that could
+        never fit the page pool even alone (it would stall the engine
+        forever).  With prefix caching on, the chained page digests are
+        computed here so admission can pin the longest cached prefix."""
         prompt = np.asarray(prompt, np.int32)
         if prompt.size == 0:
             raise ValueError("empty prompt")
@@ -468,8 +578,8 @@ class ServeEngine:
         req = Request(next(self._rid), prompt, **kw)
         req._t_submit = time.perf_counter()
         if self.paged:
-            # a request that cannot ever fit the pool would stall forever
-            # holding its partial allocation (no preemption yet)
+            # a request that cannot ever fit the pool alone would cycle
+            # through preemption forever — reject it loudly up front
             pages = -(-min(self._plen(req) + req.max_new_tokens,
                            self.max_seq) // self.block_size)
             usable = self.alloc.usable_blocks
@@ -503,12 +613,39 @@ class ServeEngine:
         return max(1, min(len(req.prompt),
                           self.max_seq - req.max_new_tokens - 1))
 
+    def _prefill_target(self, req: Request) -> int:
+        """Tokens that must be in the KV cache before ``req`` can decode.
+        Normally the clamped prompt length; for a decode-phase preemption
+        victim it is ``resume_len`` (prompt + already-decoded tokens)."""
+        if req.out_tokens and req.resume_len:
+            return req.resume_len
+        return self._plen(req)
+
+    def _prefill_source(self, req: Request) -> np.ndarray:
+        """Token sequence chunked prefill reads from: the prompt, or for a
+        decode-phase restore the preserved ``prompt + out_tokens[:-1]``."""
+        if req.out_tokens and req.resume_len:
+            return req._resume_tokens
+        return req.prompt
+
     # -- scheduling ----------------------------------------------------
     def _admit(self) -> None:
         """Move queued requests into free slots (no token cost; the prefill
-        work is budgeted separately in _prefill_tick).  With prefix caching
+        work is budgeted separately in _prefill_tick).
+
+        Preempted requests re-admit FIRST, and a restore that cannot be
+        placed yet (swap-in waiting for enough free pages) blocks new
+        admissions behind it — fresh work must not grab the pages a victim
+        was evicted to free, or the victim starves.  With prefix caching
         the prompt's longest cached page-prefix is attached here and the
         chunked prefill starts at the first uncached token."""
+        while self.restore_queue:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            if not self._restore(slot, self.restore_queue[0]):
+                return                  # head-of-line waits for pages
+            self.restore_queue.pop(0)
         while self.queue:
             slot = self._free_slot()
             if slot is None:
@@ -563,10 +700,141 @@ class ServeEngine:
         self.stats["prefix_hits"] += 1
         self.stats["prefix_hit_tokens"] += match
 
+    def _restore(self, slot: int, req: Request) -> bool:
+        """Re-admit a preempted request into ``slot``, re-attaching its
+        preserved progress; False if it cannot be placed yet (swap-in
+        short of free pages — the caller retries next tick).
+
+        Swap victims get their exact pages copied back from the host arena
+        (all-or-nothing, so a half-restored slot can never join a
+        deadlock).  Recompute victims re-enter like a fresh admission
+        except (a) the cached chain re-attached may extend over *decoded*
+        pages (published at preemption), and (b) any remaining gap is
+        re-prefilled from ``prompt + out_tokens`` — so decode resumes at
+        the preempted position either way, never replaying a sampled
+        token."""
+        if req._swap is not None:
+            return self._restore_swapped(slot, req)
+        self.active[slot] = req
+        self.lengths[slot] = 0
+        req.prefill_pos = 0
+        req.cached_len = 0
+        req._published = 0
+        if self.prefix_caching:
+            hit0 = self.stats["prefix_hit_tokens"]
+            if req.out_tokens:
+                self._attach_resume(slot, req)
+            else:
+                self._attach_prefix(slot, req)
+            # "restored" = preserved progress that skipped replay, capped
+            # at what THIS victim actually held at eviction — an attach can
+            # exceed that via pages other requests published (an ordinary
+            # prefix hit, not preservation), and a zero-progress victim
+            # restores nothing; keeps restored_tokens <= preempted_tokens
+            self.stats["restored_tokens"] += min(
+                self.stats["prefix_hit_tokens"] - hit0,
+                req._preempted_live)
+        return True
+
+    def _attach_resume(self, slot: int, req: Request) -> None:
+        """Pin the cached page chain of a decode-phase preemption victim.
+
+        Unlike :meth:`_attach_prefix` the chain may cover decoded-token
+        pages and there is no ``plen - 1`` cap — the victim's next logits
+        come from feeding ``out_tokens[-1]`` through decode, not from a
+        prefill chunk — and only *full* pages were published at preemption,
+        so the match is always page-aligned (no COW)."""
+        attached = 0
+        for dg in req._digests[:req.resume_len // self.block_size]:
+            page = self.alloc.lookup(dg)
+            if page is None or not self.alloc.share(slot, page):
+                break
+            attached += 1
+        match = attached * self.block_size
+        req.prefill_pos = match
+        req.cached_len = match
+        req._published = attached
+        self.lengths[slot] = match
+        if match:
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_hit_tokens"] += match
+
+    def _restore_swapped(self, slot: int, req: Request) -> bool:
+        """Swap-in: allocate fresh device pages for every parked page and
+        copy the arena contents back (per-shard batched).  All-or-nothing;
+        False when the pool cannot grant the full set yet."""
+        need = req._swap.n_pages
+        # demand headroom for the next token (decode or resume-prefill)
+        # too: restoring into an instant page stall would only re-enter
+        # the preemption loop
+        if self.alloc.free_blocks < max(
+                need, -(-(req._swap.tokens + 1) // self.block_size)):
+            return False
+        self.active[slot] = req
+        pages: List[int] = []
+        for _ in range(need):
+            page = self.alloc.alloc_page(slot)
+            if page is None:            # raced below free_blocks: roll back
+                self.alloc.release(slot)
+                self.active[slot] = None
+                return False
+            pages.append(page)
+        k, v = self._arena.read(req._swap.slots)
+        for sh, idx in self._by_shard(pages):
+            ids = self._pad_pow2([pages[i] for i in idx])
+            self.state = self._insert_pages(
+                self.state, jnp.asarray(ids),
+                jnp.asarray(self._pad_pages(np.moveaxis(k[idx], 0, 2))),
+                jnp.asarray(self._pad_pages(np.moveaxis(v[idx], 0, 2))))
+        self.stats["swap_bytes"] += need * self._arena.page_bytes
+        self.stats["restored_tokens"] += req._swap.tokens
+        # the parked pages cover [0, tokens); any gap up to the resume
+        # target (possible after a mid-restore re-preemption) is
+        # re-prefilled from _resume_tokens like the recompute arm
+        req.prefill_pos = req._swap.tokens
+        req.cached_len = req._swap.tokens
+        self._arena.free(req._swap)
+        req._swap = None
+        # the restored rows 0..need-1 hold the same content the digests
+        # commit to, so publishing may resume where it left off
+        req._published = min(req._published, need)
+        self.lengths[slot] = req.prefill_pos
+        return True
+
+    def _by_shard(self, pages: List[int]):
+        """Group positions of ``pages`` by owning shard (swap copies are
+        batched per shard so each touches one shard's pool slice)."""
+        groups: Dict[int, List[int]] = {}
+        for i, p in enumerate(pages):
+            groups.setdefault(self.alloc.owner(p), []).append(i)
+        return sorted(groups.items())
+
+    @staticmethod
+    def _pad_pow2(ids: List[int]) -> np.ndarray:
+        """Pad a page-id list to the next power of two with the null page 0
+        (gathers of it are discarded; scatters to it are harmless)."""
+        out = np.zeros((_next_pow2(len(ids)),), np.int32)
+        out[:len(ids)] = ids
+        return out
+
+    @staticmethod
+    def _pad_pages(kv: np.ndarray) -> np.ndarray:
+        """Zero-pad the page axis (2) of ``[L, KvH, P, BS, hd]`` to pow2 to
+        match :meth:`_pad_pow2`'s id padding."""
+        p = kv.shape[2]
+        b = _next_pow2(p)
+        if b == p:
+            return kv
+        pad = [(0, 0)] * kv.ndim
+        pad[2] = (0, b - p)
+        return np.pad(kv, pad)
+
     def _publish_pages(self, slot: int, req: Request) -> None:
         """Register the slot's freshly completed full prompt pages so later
-        prompts can share them (idempotent; duplicates are skipped)."""
-        n_done = min(req.prefill_pos, self._plen(req)) // self.block_size
+        prompts can share them (idempotent; duplicates are skipped).  After
+        a recompute-preemption the digest chain extends over decoded-token
+        pages, so replayed pages republish too."""
+        n_done = min(req.prefill_pos // self.block_size, len(req._digests))
         while req._published < n_done:
             i = req._published
             self.alloc.register(int(self.alloc.table[slot, i]),
@@ -577,10 +845,7 @@ class ServeEngine:
         """Round a live page count up to the next power of two (capped at
         the per-slot maximum) — bounds prefill jit specializations to
         O(log max_blocks) block-table shapes."""
-        b = 1
-        while b < n_pages:
-            b *= 2
-        return min(b, self.blocks_per_slot)
+        return min(_next_pow2(n_pages), self.blocks_per_slot)
 
     def _prefill_tick(self, budget: int, finished: List[Request]) -> int:
         """Advance pending prefills under ``budget`` padded tokens.  Paged
@@ -589,7 +854,8 @@ class ServeEngine:
         rate (one monolithic prefill per tick — the A/B baseline).
         Returns the unspent budget."""
         pending = [(slot, req) for slot, req in enumerate(self.active)
-                   if req is not None and req.prefill_pos < self._plen(req)]
+                   if req is not None
+                   and req.prefill_pos < self._prefill_target(req)]
         if not self.paged:
             for slot, req in pending[:1]:
                 plen = self._plen(req)
@@ -601,7 +867,7 @@ class ServeEngine:
                 self._finish_prefill(slot, req, logits, finished)
             return budget
         for slot, req in pending:
-            plen = self._plen(req)
+            plen = self._prefill_target(req)
             while req.prefill_pos < plen:
                 remaining = plen - req.prefill_pos
                 bucket = self._bucket(min(remaining, max(budget, 1)))
@@ -626,7 +892,10 @@ class ServeEngine:
                 self.lengths[slot] = req.prefill_pos
                 if self.prefix_caching:
                     self._publish_pages(slot, req)
-                if req.prefill_pos >= plen:
+                # a decode-phase restore that just completed discards the
+                # chunk's logits: the next decode feeds out_tokens[-1]
+                # (a sampled token is never re-sampled)
+                if req.prefill_pos >= plen and not req.out_tokens:
                     self._finish_prefill(slot, req, logits, finished)
         return budget
 
@@ -646,7 +915,8 @@ class ServeEngine:
     def _run_prefill_chunk(self, slot: int, req: Request, bucket: int,
                            n: int):
         padded = np.zeros((bucket,), np.int32)
-        padded[:n] = req.prompt[req.prefill_pos:req.prefill_pos + n]
+        src = self._prefill_source(req)
+        padded[:n] = src[req.prefill_pos:req.prefill_pos + n]
         fn = self._prefill_fn(bucket)
         if self.paged:
             # pass only the live prefix of the block table (rounded up to a
@@ -700,18 +970,40 @@ class ServeEngine:
 
     # -- engine tick ---------------------------------------------------
     def _decode_ready(self, slot: int) -> bool:
+        """Decode may run only once the FULL prefill target is cached —
+        for a restore victim that is ``resume_len`` (prompt + decoded
+        tokens), not just the prompt: decoding while the resume prefill is
+        still mid-gap would feed ``out_tokens[-1]`` at the wrong KV
+        position."""
         req = self.active[slot]
-        return (req is not None and req.out_tokens
-                and req.prefill_pos >= self._plen(req))
+        return bool(req is not None and req.out_tokens
+                    and req.prefill_pos >= self._prefill_target(req))
 
     def step(self) -> List[Request]:
-        """One engine tick: admit + chunk-prefill under the token budget,
-        one batched decode over all ready slots, retire finished requests.
-        Returns the requests completed this tick."""
+        """One engine tick; returns the requests completed this tick.
+
+        Order within a tick: (1) admit — restores first, then new requests
+        — into free slots; (2) reserve decode tokens *and* pages for every
+        decode-ready slot (decode is never starved by prefill); (3) advance
+        chunked prefills under the remaining token budget; (4) one batched
+        decode over all runnable slots; (5) retire finished requests,
+        recycling their slot and pages.  If the tick made no progress and
+        at least one slot stalled on pages, the allocation deadlock is
+        broken by preempting the slot with the least live KV — its progress
+        is preserved (swap or recompute, per ``preempt_policy``) and it
+        re-admits with priority."""
         self._tick += 1
         self.stats["ticks"] += 1
         progress0 = self.stats["prefill_tokens"] + self.stats["decode_tokens"]
         stall0 = self.stats["stalled_ticks"]
+        # already-active decode slots reserve their next page BEFORE any
+        # restore or admission can take it: a swap-in that consumed exactly
+        # the pages its own preemption freed would re-starve the survivors
+        # and ping-pong the pool forever
+        if self.paged:
+            for i in range(self.slots):
+                if self._decode_ready(i):
+                    self.alloc.ensure(i, self.lengths[i] + 1)
         self._admit()
         finished: List[Request] = []
         decode_slots = [i for i in range(self.slots) if self._decode_ready(i)]
@@ -779,23 +1071,144 @@ class ServeEngine:
 
     def _preempt_for_deadlock(self) -> None:
         """Two+ partially-allocated slots can wait on each other's pages
-        (each request fits the pool alone, together they don't).  Release
-        the cheapest-to-restart slot and requeue its request so the others
-        can run; it restarts from scratch later (greedy output unchanged;
-        temperature requests re-roll).  Real preemption/eviction that
-        saves progress is future work (see ROADMAP)."""
+        (each request fits the pool alone, together they don't).  Preempt
+        the slot with the least live KV so the others can run — its
+        progress is *preserved* (swapped to the host arena or recomputed
+        at restore, see :meth:`_preempt`), so greedy outputs are unchanged
+        and no decoded token is ever replayed."""
         victims = [i for i, r in enumerate(self.active)
                    if r is not None and self.alloc.used[i] > 0]
         if len(victims) < 2:
             return
         slot = min(victims, key=lambda i: (len(self.active[i].out_tokens),
                                            self.active[i].prefill_pos))
+        self._preempt(slot)
+
+    def _preempt(self, slot: int) -> None:
+        """Evict ``slot`` while preserving its generation progress.
+
+        The victim's live KV tokens (``lengths[slot]`` = prompt prefilled
+        so far + decoded tokens minus the unprocessed last sample) go down
+        one of two arms, chosen by ``preempt_policy``:
+
+        * **swap** — pages copied device -> host into the arena; released
+          device pages become grantable immediately; restore copies them
+          back verbatim.
+        * **recompute** — pages dropped (full ones republished under the
+          chained digest first, so the prefix cache can hand them back by
+          reference), and the token suffix is re-prefilled at restore from
+          ``_resume_tokens`` — decode progress survives as *tokens*, not
+          bytes.
+
+        ``auto`` asks ``core.noc.preempt_decision`` per victim: link bytes
+        to move vs prefill FLOPs to replay.  Either way the request lands
+        in ``restore_queue`` with priority over new admissions."""
         req = self.active[slot]
-        req.prefill_pos = 0
-        req.out_tokens = []
-        self._retire(slot)
-        self.queue.insert(0, req)
+        L = int(self.lengths[slot])    # KV rows live right now
         self.stats["preemptions"] += 1
+        self.stats["preempted_tokens"] += L
+        req._preempted_live = L
+        if L == 0:                      # nothing cached yet: plain requeue
+            req.prefill_pos = 0
+            self._retire(slot)
+            self.restore_queue.append(req)
+            return
+        plen = self._plen(req)
+        if req.out_tokens:
+            # resume target: every decoded token except the still-unfed
+            # last sample must be back in KV before decode continues.  L
+            # can sit BELOW this (a victim preempted again mid-restore) —
+            # the gap is covered by _resume_tokens either way.
+            target = plen + len(req.out_tokens) - 1
+            kv_seq = np.concatenate([
+                req.prompt[:plen].astype(np.int32),
+                np.asarray(req.out_tokens[:-1], np.int32)])
+        else:
+            target = 0                  # plain prompt prefill resumes it
+            kv_seq = req.prompt[:plen].astype(np.int32)
+        policy = self._preempt_choice(req, L)
+        if policy == "swap" and not self._swap_out(slot, L):
+            policy = "recompute"        # arena full: degrade, never fail
+        if policy == "swap":
+            self.stats["preempt_swaps"] += 1
+        else:
+            self.stats["preempt_recomputes"] += 1
+            if self.prefix_caching:
+                self._extend_digests(req, kv_seq)
+                self._publish_resume_pages(slot, req, L)
+        req.resume_len = target
+        req._resume_tokens = kv_seq
+        req.prefill_pos = 0
+        self._retire(slot)
+        self.restore_queue.append(req)
+
+    def _preempt_choice(self, req: Request, live_tokens: int) -> str:
+        if self.preempt_policy != "auto":
+            return self.preempt_policy
+        n_pages = -(-live_tokens // self.block_size)
+        return noc.preempt_decision(
+            n_pages, self._page_kv_bytes(), live_tokens,
+            flops_per_token=2.0 * self.cfg.param_count(active_only=True))
+
+    def _page_shape(self):
+        """Per-page array shape ``(L, KvH, BS, hd)`` — the ONE definition
+        shared by the swap arena and the cost model, so priced and
+        accounted swap bytes can never drift apart."""
+        cfg = self.cfg
+        return (cfg.n_layers, cfg.n_kv_heads, self.block_size, cfg.hd)
+
+    def _page_kv_bytes(self) -> int:
+        """Bytes of one physical page across all layers, K and V."""
+        n = 1
+        for d in self._page_shape():
+            n *= d
+        return 2 * n * jnp.dtype(self.dtype).itemsize
+
+    def _swap_out(self, slot: int, live_tokens: int) -> bool:
+        """Copy the victim's live pages into the host arena (per-shard
+        batched); False when the arena cannot hold them all."""
+        from repro.serve import swap
+        n_pages = -(-live_tokens // self.block_size)
+        if self._arena is None:
+            if self.swap_pages < 1:
+                return False
+            self._arena = swap.SwapArena(self.swap_pages, self._page_shape(),
+                                         jnp.dtype(self.dtype))
+        handle = self._arena.alloc(n_pages)
+        if handle is None:
+            return False
+        handle.tokens = live_tokens
+        pages = [int(p) for p in self.alloc.table[slot, :n_pages]]
+        for sh, idx in self._by_shard(pages):
+            ids = self._pad_pow2([pages[i] for i in idx])
+            k, v = self._extract_pages(self.state, jnp.asarray(ids))
+            k = np.moveaxis(np.asarray(k), 2, 0)[:len(idx)]
+            v = np.moveaxis(np.asarray(v), 2, 0)[:len(idx)]
+            self._arena.write([handle.slots[i] for i in idx], k, v)
+        self.stats["swap_bytes"] += n_pages * self._arena.page_bytes
+        self.active[slot]._swap = handle
+        return True
+
+    def _extend_digests(self, req: Request, kv_seq: np.ndarray) -> None:
+        """Grow the chained page-digest list over decoded-token pages so
+        the decode suffix can be republished (and later re-matched) by the
+        prefix cache.  Page ``i`` still commits to every token in
+        ``[0, (i+1)*BS)`` — recomputed through :func:`_page_digests` (the
+        ONE chain implementation, shared with submit) so resume keys can
+        never drift from admission keys."""
+        bs = self.block_size
+        n_full = len(kv_seq) // bs
+        if n_full > len(req._digests):
+            req._digests = _page_digests(kv_seq, bs, n_full)
+
+    def _publish_resume_pages(self, slot: int, req: Request,
+                              live_tokens: int) -> None:
+        """Register every full live page (prompt AND decoded) before the
+        drop, so restore can re-attach them by reference if they survive
+        in the LRU (eviction only reclaims them under real pressure)."""
+        for i in range(live_tokens // self.block_size):
+            self.alloc.register(int(self.alloc.table[slot, i]),
+                                req._digests[i])
 
     def _retire(self, slot: int) -> None:
         self.active[slot] = None
@@ -805,21 +1218,32 @@ class ServeEngine:
 
     def run_until_drained(self, max_ticks: int = 10_000,
                           strict: bool = True) -> List[Request]:
-        """Step until queue and slots are empty.  With ``strict`` (default)
-        an engine that cannot drain within ``max_ticks`` raises instead of
-        silently returning a partial result set."""
+        """Step until the queues (including preempted requests awaiting
+        restore) and slots are all empty; returns every finished request.
+        With ``strict`` (default) an engine that cannot drain within
+        ``max_ticks`` raises instead of silently returning a partial
+        result set — the error distinguishes swap from recompute
+        preemptions (restart-preemptions no longer exist) so a wedged
+        pool-pressure workload is diagnosable from the message alone."""
         done: List[Request] = []
         for _ in range(max_ticks):
             done.extend(self.step())
-            if not self.queue and all(r is None for r in self.active):
+            if (not self.queue and not self.restore_queue
+                    and all(r is None for r in self.active)):
                 return done
         if strict:
             live = [r.rid for r in self.active if r is not None]
             raise RuntimeError(
                 f"engine not drained after {max_ticks} ticks "
-                f"(queued={len(self.queue)}, active rids={live}, "
+                f"(queued={len(self.queue)}, "
+                f"awaiting_restore={len(self.restore_queue)}, "
+                f"active rids={live}, "
                 f"stalled_ticks={self.stats['stalled_ticks']:.0f}, "
-                f"preemptions={self.stats['preemptions']:.0f})")
+                f"preemptions={self.stats['preemptions']:.0f}, "
+                f"preempt_swaps={self.stats['preempt_swaps']:.0f}, "
+                f"preempt_recomputes="
+                f"{self.stats['preempt_recomputes']:.0f}, "
+                f"restored_tokens={self.stats['restored_tokens']:.0f})")
         return done
 
     # -- introspection -------------------------------------------------

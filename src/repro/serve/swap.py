@@ -1,0 +1,99 @@
+"""Host-side KV page arena for progress-preserving preemption.
+
+When the engine preempts a victim under page-pool pressure and the cost
+model picks **swap** (see ``core.noc.preempt_decision``), the victim's live
+KV pages are copied device -> host into this arena and the device pages are
+released; at re-admission the arena contents are copied back into freshly
+allocated device pages and decode resumes exactly where it stopped.  This
+is the "keep state in the slower tier" arm of the HPIM / Sangam trade-off —
+CompAir's premise of spending link bytes instead of recompute FLOPs.
+
+The arena is a *pinned* preallocated numpy buffer (one contiguous slab per
+K and V), not a dict of per-victim arrays: swap-out must never allocate on
+the critical path, and a bounded arena gives the engine a natural fallback
+(arena full -> degrade to the recompute policy, never fail).
+
+Layout: arena slot ``i`` holds one physical page ``[L, KvH, BS, hd]`` — the
+page axis of the device pool ``[L, KvH, NB, BS, hd]`` moved outermost so a
+victim's pages are written/read with one contiguous fancy-index per shard
+(``models/model.py::extract_kv_pages`` / ``insert_kv_pages`` are the device
+halves; the engine batches both per shard when the pool is
+sequence-sharded, so each copy touches a single shard's pages).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class SwapHandle:
+    """One preempted request's parked pages.
+
+    ``slots[i]`` is the arena slot holding the victim's *logical* block
+    ``i`` — restore re-allocates device pages in the same logical order, so
+    the mapping survives the round trip even when the new physical pages
+    land on different shards than the originals.  ``tokens`` counts the KV
+    rows the parked pages cover (= the victim's live length at eviction;
+    a victim preempted again mid-restore may cover fewer tokens than its
+    full resume target — the gap is re-prefilled after swap-in)."""
+    slots: List[int] = field(default_factory=list)
+    tokens: int = 0
+
+    @property
+    def n_pages(self) -> int:
+        return len(self.slots)
+
+
+class SwapArena:
+    """Fixed-capacity host arena of KV pages (the swap tier).
+
+    ``capacity`` pages of ``page_shape = (L, KvH, BS, hd)`` each, for K and
+    V.  ``alloc`` is all-or-nothing: a victim either parks every live page
+    or none (a half-swapped victim could neither resume nor free its device
+    pages).  The engine treats ``alloc() -> None`` as "arena full" and
+    falls back to the recompute policy for that victim.
+    """
+
+    def __init__(self, capacity: int, page_shape: Tuple[int, ...], dtype):
+        if capacity < 1:
+            raise ValueError(f"swap arena needs capacity >= 1, got {capacity}")
+        self.capacity = capacity
+        self.page_shape = tuple(page_shape)
+        self._k = np.zeros((capacity,) + self.page_shape, dtype)
+        self._v = np.zeros_like(self._k)
+        self._free = list(range(capacity - 1, -1, -1))  # pop lowest-id first
+
+    @property
+    def page_bytes(self) -> int:
+        """Bytes of ONE page counting both K and V."""
+        return 2 * self._k[0].nbytes
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.capacity - len(self._free)
+
+    def alloc(self, n_pages: int) -> Optional[SwapHandle]:
+        """Reserve ``n_pages`` arena slots, or None if they don't all fit."""
+        if n_pages < 1 or n_pages > len(self._free):
+            return None
+        return SwapHandle([self._free.pop() for _ in range(n_pages)])
+
+    def write(self, slots: List[int], k: np.ndarray, v: np.ndarray) -> None:
+        """Park pages: k/v are ``[n, L, KvH, BS, hd]`` (page axis leading)."""
+        self._k[slots] = k
+        self._v[slots] = v
+
+    def read(self, slots: List[int]) -> Tuple[np.ndarray, np.ndarray]:
+        """Page data for ``slots``, page axis leading (restore direction)."""
+        return self._k[slots], self._v[slots]
+
+    def free(self, handle: SwapHandle) -> None:
+        self._free.extend(handle.slots)
+        handle.slots = []

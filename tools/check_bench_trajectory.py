@@ -50,6 +50,8 @@ def main() -> int:
         ("paged decode tok/s", ("mixed", "paged", "tok_s"), True),
         ("prefix-cache TTFT p50 ms",
          ("shared_prefix", "cache_on", "ttft_p50_ms"), False),
+        ("oversubscribed goodput (swap) tok/s",
+         ("preempted", "swap", "goodput_tok_s"), True),
     ]
     failures = []
     for name, path, up in metrics:

@@ -1,0 +1,112 @@
+#!/usr/bin/env python
+"""Docs gate: markdown link/anchor checker + doctest runner.
+
+Checks, over ``README.md``, ``ROADMAP.md``, and ``docs/**/*.md``:
+
+1. every inline relative link ``[text](target)`` resolves to a file or
+   directory in the repo (http(s)/mailto links are skipped — CI must not
+   flake on the network);
+2. every ``#anchor`` (own-file or cross-file) matches a heading in the
+   target file, using GitHub's slug rules (lowercase, punctuation
+   stripped, spaces -> hyphens);
+3. every fenced ``>>>`` doctest example in ``docs/**`` passes
+   (``python -m doctest`` semantics via ``doctest.testfile``).
+
+Exit status is non-zero on any failure; run it as CI does:
+
+    PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import doctest
+import glob
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# inline link, with or without a quoted title: [text](target "title")
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(\s*<?([^)\s>]+)>?"
+                     r"(?:\s+\"[^\"]*\")?\s*\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.S)
+
+
+def _files():
+    out = [os.path.join(REPO, "README.md"), os.path.join(REPO, "ROADMAP.md")]
+    out += sorted(glob.glob(os.path.join(REPO, "docs", "**", "*.md"),
+                            recursive=True))
+    return [f for f in out if os.path.exists(f)]
+
+
+def _slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markup-ish punctuation, lowercase,
+    spaces to hyphens."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def _anchors(path: str) -> set:
+    with open(path, encoding="utf-8") as f:
+        text = CODE_FENCE_RE.sub("", f.read())
+    return {_slug(m.group(1)) for m in HEADING_RE.finditer(text)}
+
+
+def check_links() -> list:
+    errors = []
+    for path in _files():
+        rel = os.path.relpath(path, REPO)
+        with open(path, encoding="utf-8") as f:
+            text = CODE_FENCE_RE.sub("", f.read())
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            file_part, _, anchor = target.partition("#")
+            if file_part:
+                dest = os.path.normpath(
+                    os.path.join(os.path.dirname(path), file_part))
+                if not os.path.exists(dest):
+                    errors.append(f"{rel}: broken link -> {target}")
+                    continue
+            else:
+                dest = path                      # bare in-file anchor
+            if anchor:
+                if not dest.endswith(".md") or not os.path.isfile(dest):
+                    errors.append(f"{rel}: anchor on non-markdown target "
+                                  f"-> {target}")
+                elif anchor not in _anchors(dest):
+                    errors.append(f"{rel}: missing anchor -> {target}")
+    return errors
+
+
+def run_doctests() -> list:
+    errors = []
+    for path in sorted(glob.glob(os.path.join(REPO, "docs", "**", "*.md"),
+                                 recursive=True)):
+        rel = os.path.relpath(path, REPO)
+        res = doctest.testfile(path, module_relative=False, verbose=False,
+                               optionflags=doctest.NORMALIZE_WHITESPACE)
+        print(f"doctest {rel}: {res.attempted} examples, "
+              f"{res.failed} failed")
+        if res.failed:
+            errors.append(f"{rel}: {res.failed} doctest failure(s)")
+    return errors
+
+
+def main() -> int:
+    files = _files()
+    print(f"checking {len(files)} markdown files")
+    errors = check_links()
+    errors += run_doctests()
+    for e in errors:
+        print(f"FAIL: {e}", file=sys.stderr)
+    if not errors:
+        print("docs OK: all links resolve, all doctests pass")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
