@@ -229,6 +229,62 @@ def run_sharded(cfg, params, slots: int, max_seq: int, n_requests: int,
             "sharded": _jsonable(sharded)}
 
 
+def run_family(arch: str, slots: int, max_seq: int, n_requests: int,
+               seed: int = 0) -> dict:
+    """Family serving leg: the CacheSpec runner engine (paged where the
+    family has attention KV, slot-state continuous batching otherwise)
+    vs the dense ``prefill`` + ``decode_step`` reference — greedy token
+    identity asserted, family tok/s reported.  The CI smoke runs this
+    with ``--arch zamba2-7b`` (hybrid: paged shared-attention KV + Mamba2
+    slot state)."""
+    header(f"serve family leg: {arch}")
+    cfg = reduced(get_config(arch))
+    params = M.init_params(cfg, jax.random.key(0), dtype=jnp.float32)
+    rng = np.random.default_rng(seed)
+    reqs = [(rng.integers(0, cfg.vocab_size,
+                          int(rng.integers(2, max_seq // 4))).tolist(),
+             dict(max_new_tokens=8)) for _ in range(n_requests)]
+    buckets = (16, 32, max_seq)
+    eng = ServeEngine(cfg, params, max_seq=max_seq, slots=slots,
+                      block_size=16, prefill_buckets=buckets)
+    for b in buckets:                          # warm the per-bucket jits
+        eng.submit(list(range(1, min(b, max_seq // 2))), max_new_tokens=2)
+    eng.run_until_drained()
+    eng.reset_stats()
+    r = _drive(eng, reqs)
+
+    # greedy reference: one exact (length-masked) prefill + decode_step
+    prefill_ref = jax.jit(lambda ps, toks, ln: M.prefill(
+        cfg, ps, M.init_decode_state(cfg, 1, max_seq, dtype=jnp.float32),
+        tokens=toks, lengths=ln))
+    decode_ref = jax.jit(lambda ps, st, tk, ln: M.decode_step(
+        cfg, ps, st, tk, ln))
+    match = True
+    for (p, kw), (rid, out) in zip(reqs, sorted(r["tokens"].items())):
+        padded = np.zeros((1, max_seq), np.int32)
+        padded[0, :len(p)] = p
+        lg, st = prefill_ref(params, jnp.asarray(padded),
+                             jnp.asarray([len(p)], jnp.int32))
+        want = [int(jnp.argmax(lg[0] if lg.ndim == 2 else lg[0, 0]))]
+        ln = len(p)
+        for _ in range(kw["max_new_tokens"] - 1):
+            lg, st = decode_ref(params, st,
+                                jnp.asarray([want[-1]], jnp.int32),
+                                jnp.asarray([ln], jnp.int32))
+            ln += 1
+            want.append(int(jnp.argmax(lg[0])))
+        match = match and (tuple(want) == tuple(out))
+    assert match, f"{arch}: engine tokens != dense decode_step reference"
+    emit(f"serve_family_{arch}_s{slots}", 0.0,
+         f"tok_s={r['tok_s']:.1f};occupancy={r['occupancy']:.2f};"
+         f"paged={int(eng.paged)};slot_state={int(eng.has_slot_state)};"
+         f"outputs_match={match}")
+    return {"arch": arch, "tok_s": r["tok_s"], "outputs_match": bool(match),
+            "paged": bool(eng.paged), "slot_state": bool(eng.has_slot_state),
+            **{k: r[k] for k in ("occupancy", "kv_mb", "prefill_traces",
+                                 "prefill_tokens", "preemptions")}}
+
+
 def run_preempted(cfg, params, max_seq: int, seq_shards: int = 1,
                   seed: int = 0) -> dict:
     """Oversubscribed page pool: progress-preserving preemption A/B.
@@ -289,19 +345,20 @@ def run_preempted(cfg, params, max_seq: int, seq_shards: int = 1,
 
 def run(slots: int = 8, max_seq: int = 128, n_requests: int = 32,
         seed: int = 0, out_json: str = "BENCH_serve.json",
-        seq_shards: int = 1):
+        seq_shards: int = 1, family_arch: str = "zamba2-7b"):
     cfg = reduced(get_config("stablelm-1.6b"))
     params = M.init_params(cfg, jax.random.key(0), dtype=jnp.float32)
     results = {
         "bench": "serve_throughput",
         "config": {"arch": "stablelm-1.6b (reduced)", "slots": slots,
                    "max_seq": max_seq, "n_requests": n_requests,
-                   "seq_shards": seq_shards,
+                   "seq_shards": seq_shards, "family_arch": family_arch,
                    "backend": jax.default_backend()},
         "mixed": run_mixed(cfg, params, slots, max_seq, n_requests, seed),
         "shared_prefix": run_shared_prefix(cfg, params, slots, max_seq,
                                            n_requests, seed),
         "preempted": run_preempted(cfg, params, max_seq, seed=seed),
+        "family": run_family(family_arch, slots, max_seq, n_requests, seed),
     }
     if seq_shards > 1:
         results["sharded"] = run_sharded(cfg, params, slots, max_seq,
@@ -324,16 +381,22 @@ def main():
                     help="also run the N-way sequence-sharded engine and "
                          "verify token identity vs 1 shard (needs N devices "
                          "— force with XLA_FLAGS on CPU)")
+    ap.add_argument("--arch", default="zamba2-7b",
+                    help="family serving leg: run this arch (reduced) "
+                         "through the CacheSpec runner engine, assert "
+                         "token identity vs the dense decode_step "
+                         "reference, and report its tok/s")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run (tiny model, few requests)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.smoke:
         run(slots=2, max_seq=64, n_requests=8, out_json=args.out,
-            seq_shards=args.seq_shards)
+            seq_shards=args.seq_shards, family_arch=args.arch)
     else:
         run(slots=args.slots, max_seq=args.max_seq, n_requests=args.requests,
-            out_json=args.out, seq_shards=args.seq_shards)
+            out_json=args.out, seq_shards=args.seq_shards,
+            family_arch=args.arch)
 
 
 if __name__ == "__main__":

@@ -182,13 +182,15 @@ RECOMPUTE_FLOPS_PER_S = _SRAM.bank_flops() * _DRAM.banks
 RECOMPUTE_E_PJ_PER_FLOP = _SRAM.e_mac_pj / 2.0   # one MAC = two FLOPs
 
 
-def swap_cost(n_pages: int, page_bytes: int) -> dict:
+def swap_cost(n_pages: int, page_bytes: int, state_bytes: int = 0) -> dict:
     """Round-trip cost of parking ``n_pages`` KV pages host-side.
 
-    ``page_bytes`` counts K **and** V for one page; the factor 2 is the two
-    link traversals (swap-out now, swap-in at restore).  Returns
+    ``page_bytes`` counts K **and** V for one page; ``state_bytes`` adds a
+    family's fixed-size recurrent slot state (hybrid Mamba2 conv/SSM —
+    rides the same link both ways); the factor 2 is the two link
+    traversals (swap-out now, swap-in at restore).  Returns
     ``{"bytes", "seconds", "energy_pj"}``."""
-    b = 2 * n_pages * page_bytes
+    b = 2 * (n_pages * page_bytes + state_bytes)
     return {"bytes": b, "seconds": b / SWAP_LINK_BYTES_PER_S,
             "energy_pj": b * 8 * SWAP_E_PJ_PER_BIT}
 
@@ -205,13 +207,14 @@ def recompute_cost(tokens: int, flops_per_token: float) -> dict:
 
 
 def preempt_decision(n_pages: int, page_bytes: int, tokens: int,
-                     flops_per_token: float) -> str:
+                     flops_per_token: float, state_bytes: int = 0) -> str:
     """Pick the cheaper eviction arm for one victim: ``"swap"`` when moving
-    the KV bytes over the link costs less time than re-running the prefill
-    FLOPs, else ``"recompute"``.  Big models (high FLOPs/token vs bytes/
-    token) swap; tiny models recompute — the crossover the HPIM/Sangam
-    schedulers exploit."""
-    s = swap_cost(n_pages, page_bytes)["seconds"]
+    the KV bytes (pages plus any fixed-size recurrent ``state_bytes``)
+    over the link costs less time than re-running the prefill FLOPs, else
+    ``"recompute"``.  Big models (high FLOPs/token vs bytes/token) swap;
+    tiny models recompute — the crossover the HPIM/Sangam schedulers
+    exploit."""
+    s = swap_cost(n_pages, page_bytes, state_bytes)["seconds"]
     r = recompute_cost(tokens, flops_per_token)["seconds"]
     return "swap" if s <= r else "recompute"
 

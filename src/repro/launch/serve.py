@@ -4,8 +4,11 @@ for an arch and run a synthetic request stream.
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \\
       --reduced --requests 8
 
-``--dense`` forces the dense ``[slots, max_seq]`` KV slab (the A/B
-baseline); by default attention families run paged.
+All four families serve through the CacheSpec runner by default:
+dense/moe paged, hybrid (``--arch zamba2-7b``) paged shared-attention KV
+plus Mamba2 slot state, ssm/rwkv slot-state-only continuous batching.
+``--dense`` forces the legacy dense ``[slots, max_seq]`` slab (the A/B
+baseline).
 """
 import argparse
 import time
@@ -91,7 +94,10 @@ def main():
     for r in sorted(done, key=lambda r: r.rid)[:5]:
         print(f"[serve] req {r.rid}: {len(r.prompt)} prompt -> "
               f"{r.out_tokens[:8]}{'...' if len(r.out_tokens) > 8 else ''}")
-    mode = "paged" if eng.paged else "dense"
+    mode = ("paged" if eng.paged
+            else "dense" if eng.dense_baseline else "slot-state")
+    if eng.has_slot_state and eng.paged:
+        mode += "+slot-state"              # hybrid: paged shared-attn KV too
     if eng.seq_shards > 1:
         mode += f"/seq{eng.seq_shards}"
     print(f"[serve] {len(done)} requests, {total} tokens, {dt:.2f}s "

@@ -1,5 +1,6 @@
-from repro.models import layers, model, moe, rwkv, ssm, frontends  # noqa: F401
+from repro.models import layers, model, moe, runner, rwkv, ssm, frontends  # noqa: F401
 from repro.models.model import (  # noqa: F401
     init_params, init_params_shaped, forward, init_decode_state,
     prefill, decode_step,
 )
+from repro.models.runner import CacheSpec, ModelRunner, cache_spec  # noqa: F401

@@ -8,10 +8,22 @@ for actual arrays (a fixed random projection of token ids, deterministic).
 """
 from __future__ import annotations
 
+import zlib
+
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+
+
+def embedding_seed(cfg: ModelConfig) -> int:
+    """Stable per-arch RNG seed for the synthetic frontend table.
+
+    ``zlib.crc32`` is deterministic across processes and Python versions —
+    the previous ``abs(hash(name))`` was salted per process by
+    PYTHONHASHSEED, so "deterministic" embeddings silently differed across
+    the subprocess-parity tests."""
+    return zlib.crc32(cfg.name.encode("utf-8")) % (2 ** 31)
 
 
 def frontend_kind(cfg: ModelConfig) -> str:
@@ -26,8 +38,8 @@ def embedding_spec(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):
 def synthetic_embeddings(cfg: ModelConfig, tokens: jax.Array,
                          dtype=jnp.bfloat16) -> jax.Array:
     """Deterministic stand-in for EnCodec frames / ViT patches: embed token
-    ids through a fixed random table (seeded by arch name)."""
-    seed = abs(hash(cfg.name)) % (2 ** 31)
-    table = jax.random.normal(jax.random.key(seed),
+    ids through a fixed random table (seeded by arch name, stable across
+    processes — see :func:`embedding_seed`)."""
+    table = jax.random.normal(jax.random.key(embedding_seed(cfg)),
                               (cfg.vocab_size, cfg.d_model), jnp.float32)
     return jnp.take(table, tokens, axis=0).astype(dtype) * cfg.d_model ** -0.5

@@ -218,14 +218,57 @@ def init_paged_decode_state(cfg: ModelConfig, num_blocks: int,
                             block_size: int, dtype=jnp.bfloat16):
     """Paged KV cache: physical pages [L, KvH, NB, BS, hd] shared by all
     slots, addressed through per-slot block tables (page 0 = null sink).
-    Only families with a growing KV cache page; rwkv/ssm state is O(1) per
-    sequence and the hybrid shared-attention cache stays dense for now."""
+    Only families whose *every* mixing layer grows a KV cache; the serving
+    engine's family-agnostic state (hybrid paged shared-attention KV +
+    fixed-size slot state) is built by :func:`init_serve_state`."""
     if cfg.family not in PAGED_FAMILIES:
         raise ValueError(
             f"paged decode state requires family in {PAGED_FAMILIES}, "
             f"got {cfg.family!r}")
     return {"attn": layers.paged_kv_cache_init(cfg, num_blocks, block_size,
                                                dtype, n_slots=cfg.n_layers)}
+
+
+def init_serve_state(cfg: ModelConfig, slots: int, num_blocks: int,
+                     block_size: int, dtype=jnp.bfloat16):
+    """Serving-cache state for any family: the union of *paged* components
+    (attention KV pages shared by all slots through block tables) and
+    *fixed-size slot state* (recurrent state batched over ``slots``).
+
+    dense/moe: pages ``[L, KvH, NB, BS, hd]`` only.
+    hybrid: pages ``[G, KvH, NB, BS, hd]`` for the shared attention block's
+    G applications (one block table per sequence serves all applications,
+    exactly as one table serves all L layers of a transformer) + the Mamba2
+    conv/SSM slot state.
+    ssm (mamba / rwkv): slot state only — ``num_blocks``/``block_size`` are
+    ignored.
+
+    The per-family layout is described by ``models.runner.cache_spec``; the
+    engine only ever manipulates this state through that contract."""
+    if cfg.family in ("dense", "moe"):
+        return {"attn": layers.paged_kv_cache_init(cfg, num_blocks,
+                                                   block_size, dtype,
+                                                   n_slots=cfg.n_layers)}
+    if cfg.rwkv:
+        tm_shift, wkv, cm_shift = rwkv.rwkv_state_init(cfg, slots,
+                                                       cfg.n_layers, dtype)
+        return {"tm_shift": tm_shift, "wkv": wkv, "cm_shift": cm_shift}
+    if cfg.family == "ssm":
+        conv, h = ssm.mamba_state_init(cfg, slots, cfg.n_layers, dtype)
+        return {"conv": conv, "ssm": h}
+    # hybrid: paged shared-attention KV + grouped/tail mamba slot state
+    g, k, tail = hybrid_layout(cfg)
+    conv_g, h_g = ssm.mamba_state_init(cfg, slots, g * k, dtype)
+    conv_t, h_t = ssm.mamba_state_init(cfg, slots, max(tail, 1), dtype)
+    return {
+        "conv_g": jax.tree.map(lambda a: a.reshape((g, k) + a.shape[1:]),
+                               conv_g),
+        "ssm_g": jax.tree.map(lambda a: a.reshape((g, k) + a.shape[1:]),
+                              h_g),
+        "conv_t": conv_t, "ssm_t": h_t,
+        "attn": layers.paged_kv_cache_init(cfg, num_blocks, block_size,
+                                           dtype, n_slots=g),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -263,10 +306,13 @@ def prefill(cfg: ModelConfig, params, state, *, tokens=None, embeds=None,
         def body(xc, xs):
             lp, _, _, _ = xs
             h = layers.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
-            y, (tm_shift, wkv) = rwkv.time_mix(lp["tm"], h, cfg, return_state=True)
+            y, (tm_shift, wkv) = rwkv.time_mix(lp["tm"], h, cfg,
+                                               length=lengths,
+                                               return_state=True)
             xc = xc + y
             h2 = layers.rmsnorm(lp["ln2"], xc, cfg.norm_eps)
-            y2, cm_shift = rwkv.channel_mix(lp["cm"], h2, return_state=True)
+            y2, cm_shift = rwkv.channel_mix(lp["cm"], h2, length=lengths,
+                                            return_state=True)
             return hint(xc + y2, "activation"), (tm_shift, wkv, cm_shift)
 
         x, (tm_shift, wkv, cm_shift) = lax.scan(
@@ -277,7 +323,8 @@ def prefill(cfg: ModelConfig, params, state, *, tokens=None, embeds=None,
         def body(xc, xs):
             lp, _, _ = xs
             h = layers.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
-            y, (conv, hf) = ssm.mamba_apply(lp["mamba"], h, cfg, return_state=True)
+            y, (conv, hf) = ssm.mamba_apply(lp["mamba"], h, cfg,
+                                            length=lengths, return_state=True)
             return hint(xc + y, "activation"), (conv, hf)
 
         x, (conv, hf) = lax.scan(body, x, (params["layers"], state["conv"],
@@ -290,7 +337,8 @@ def prefill(cfg: ModelConfig, params, state, *, tokens=None, embeds=None,
         def mamba_body(xc, xs):
             lp, _, _ = xs
             h = layers.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
-            y, (conv, hf) = ssm.mamba_apply(lp["mamba"], h, cfg, return_state=True)
+            y, (conv, hf) = ssm.mamba_apply(lp["mamba"], h, cfg,
+                                            length=lengths, return_state=True)
             return hint(xc + y, "activation"), (conv, hf)
 
         def group_body(xc, xs):
@@ -383,9 +431,11 @@ def copy_kv_page(state, src, dst):
     """Device-side physical-page copy across all layers/heads (copy-on-write
     for prefix caching: a new request that matched a cached page chain up to
     mid-page duplicates the trailing shared page before overwriting its
-    tail).  state holds pages [L, KvH, NB, BS, hd]; src/dst are page ids."""
+    tail).  state holds pages [L, KvH, NB, BS, hd]; src/dst are page ids.
+    Non-paged state entries (a hybrid's slot state) pass through."""
     kp, vp = state["attn"]["k_pages"], state["attn"]["v_pages"]
-    return {"attn": {"k_pages": kp.at[:, :, dst].set(kp[:, :, src]),
+    return {**state,
+            "attn": {"k_pages": kp.at[:, :, dst].set(kp[:, :, src]),
                      "v_pages": vp.at[:, :, dst].set(vp[:, :, src])}}
 
 
@@ -412,9 +462,11 @@ def insert_kv_pages(state, pages, k, v):
     ``[L, KvH, P, BS, hd]`` as produced by :func:`extract_kv_pages`.
     Padding entries may target page 0: that is the null sink, so the extra
     writes are harmless (duplicate indices resolve last-write-wins, which
-    only ever races on the null page)."""
+    only ever races on the null page).  Non-paged state entries (a hybrid's
+    slot state) pass through."""
     kp, vp = state["attn"]["k_pages"], state["attn"]["v_pages"]
-    return {"attn": {"k_pages": kp.at[:, :, pages].set(k.astype(kp.dtype)),
+    return {**state,
+            "attn": {"k_pages": kp.at[:, :, pages].set(k.astype(kp.dtype)),
                      "v_pages": vp.at[:, :, pages].set(v.astype(vp.dtype))}}
 
 
@@ -456,6 +508,193 @@ def decode_step_paged(cfg: ModelConfig, params, state, tokens, lengths,
         (params["layers"], jnp.arange(cfg.n_layers)))
     state = {"attn": {"k_pages": kp, "v_pages": vp}}
     return _logits(cfg, params, x)[:, 0], state
+
+
+# ---------------------------------------------------------------------------
+# family-agnostic serving entry points (the CacheSpec contract's compute
+# half — models.runner.ModelRunner wraps these; the engine never dispatches
+# on cfg.family itself)
+# ---------------------------------------------------------------------------
+
+def _slot_slice(a, slot, axis: int):
+    """One slot's state rows, keeping the (size-1) batch axis."""
+    return lax.dynamic_slice_in_dim(a, slot, 1, axis=axis)
+
+
+def _slot_put(a, update, slot, axis: int):
+    return lax.dynamic_update_slice_in_dim(a, update.astype(a.dtype), slot,
+                                           axis=axis)
+
+
+def serve_prefill_chunk(cfg: ModelConfig, params, state, *, tokens, length,
+                        q_offset, block_table, slot,
+                        attn_window: Optional[int] = None,
+                        seq_axis: Optional[str] = None):
+    """One chunk of a single-sequence prefill against the serve state.
+
+    tokens [1, C] (right-padded); length (scalar int32) = valid rows;
+    q_offset (scalar int32) = tokens of this sequence already cached;
+    block_table [MB] int32 (or None for families with no paged component);
+    slot (scalar int32) = the engine slot whose fixed-size recurrent state
+    this chunk reads and advances (ignored by pure-attention families —
+    their whole cache is paged).
+
+    Padding rows are state-neutral (``length`` masking in ssm/rwkv) and
+    attention chunks attend to the already-paged prefix, so calling this
+    repeatedly with growing ``q_offset`` reproduces an unpadded monolithic
+    prefill.  Returns ``(logits_at_chunk_end [1, V], state)``."""
+    if cfg.family in PAGED_FAMILIES:
+        return prefill_paged(cfg, params, state, tokens=tokens, length=length,
+                             q_offset=q_offset, block_table=block_table,
+                             attn_window=attn_window, seq_axis=seq_axis)
+    x = layers.embed(params["embed"], tokens)
+    x = hint(x, "activation")
+    if cfg.rwkv:
+        tms = _slot_slice(state["tm_shift"], slot, 1)       # [L,1,1,d]
+        wkv = _slot_slice(state["wkv"], slot, 1)
+        cms = _slot_slice(state["cm_shift"], slot, 1)
+
+        def body(xc, xs):
+            lp, tm0, wkv0, cm0 = xs
+            h = layers.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
+            y, (tm1, wkv1) = rwkv.time_mix(lp["tm"], h, cfg, shift_state=tm0,
+                                           wkv_state=wkv0, length=length,
+                                           return_state=True)
+            xc = xc + y
+            h2 = layers.rmsnorm(lp["ln2"], xc, cfg.norm_eps)
+            y2, cm1 = rwkv.channel_mix(lp["cm"], h2, shift_state=cm0,
+                                       length=length, return_state=True)
+            return hint(xc + y2, "activation"), (tm1, wkv1, cm1)
+
+        x, (tms, wkv, cms) = lax.scan(body, x, (params["layers"], tms, wkv,
+                                                cms))
+        state = {"tm_shift": _slot_put(state["tm_shift"], tms, slot, 1),
+                 "wkv": _slot_put(state["wkv"], wkv, slot, 1),
+                 "cm_shift": _slot_put(state["cm_shift"], cms, slot, 1)}
+    elif cfg.family == "ssm":
+        conv = _slot_slice(state["conv"], slot, 1)          # [L,1,W-1,C]
+        h0 = _slot_slice(state["ssm"], slot, 1)
+
+        def body(xc, xs):
+            lp, cv, hh = xs
+            h = layers.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
+            y, (cv1, h1) = ssm.mamba_apply(lp["mamba"], h, cfg, conv_state=cv,
+                                           ssm_state=hh, length=length,
+                                           return_state=True)
+            return hint(xc + y, "activation"), (cv1, h1)
+
+        x, (conv, h0) = lax.scan(body, x, (params["layers"], conv, h0))
+        state = {"conv": _slot_put(state["conv"], conv, slot, 1),
+                 "ssm": _slot_put(state["ssm"], h0, slot, 1)}
+    else:  # hybrid: mamba slot state + paged shared-attention KV
+        g, k, tail = hybrid_layout(cfg)
+        sp = params["shared"]
+        _, c, _ = x.shape
+        positions = (q_offset + jnp.arange(c))[None]
+        conv_g = _slot_slice(state["conv_g"], slot, 2)      # [g,k,1,...]
+        ssm_g = _slot_slice(state["ssm_g"], slot, 2)
+
+        def mamba_body(xc, xs):
+            lp, cv, hh = xs
+            h = layers.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
+            y, (cv1, h1) = ssm.mamba_apply(lp["mamba"], h, cfg, conv_state=cv,
+                                           ssm_state=hh, length=length,
+                                           return_state=True)
+            return hint(xc + y, "activation"), (cv1, h1)
+
+        def group_body(carry, xs):
+            xc, kp_all, vp_all = carry
+            gp, cv, hh, gi = xs
+            xc, (cv1, h1) = lax.scan(mamba_body, xc, (gp, cv, hh))
+            h = layers.rmsnorm(sp["ln1"], xc, cfg.norm_eps)
+            y, kp_all, vp_all = layers.attention_prefill_paged(
+                sp["attn"], h, positions, cfg, kp_all, vp_all, gi,
+                block_table, q_offset, length, window=attn_window,
+                seq_axis=seq_axis)
+            xc = xc + y
+            xc = xc + layers.ffn(sp["ffn"],
+                                 layers.rmsnorm(sp["ln2"], xc, cfg.norm_eps))
+            return (hint(xc, "activation"), kp_all, vp_all), (cv1, h1)
+
+        (x, kp, vp), (conv_g, ssm_g) = lax.scan(
+            group_body,
+            (x, state["attn"]["k_pages"], state["attn"]["v_pages"]),
+            (params["groups"], conv_g, ssm_g, jnp.arange(g)))
+        new_state = {"conv_g": _slot_put(state["conv_g"], conv_g, slot, 2),
+                     "ssm_g": _slot_put(state["ssm_g"], ssm_g, slot, 2),
+                     "attn": {"k_pages": kp, "v_pages": vp}}
+        if tail:
+            conv_t = _slot_slice(state["conv_t"], slot, 1)
+            ssm_t = _slot_slice(state["ssm_t"], slot, 1)
+            x, (conv_t, ssm_t) = lax.scan(mamba_body, x,
+                                          (params["tail"], conv_t, ssm_t))
+            new_state["conv_t"] = _slot_put(state["conv_t"], conv_t, slot, 1)
+            new_state["ssm_t"] = _slot_put(state["ssm_t"], ssm_t, slot, 1)
+        else:
+            new_state["conv_t"] = state["conv_t"]
+            new_state["ssm_t"] = state["ssm_t"]
+        state = new_state
+    logits = _logits(cfg, params, _last_token(x, jnp.reshape(length, (1,))))
+    return logits[:, 0], state
+
+
+def serve_decode_step(cfg: ModelConfig, params, state, tokens, lengths,
+                      block_tables=None, *,
+                      attn_window: Optional[int] = None,
+                      seq_axis: Optional[str] = None):
+    """Batched one-token decode against the serve state (all families).
+
+    tokens [B] int32; lengths [B] = cached tokens per slot; block_tables
+    [B, MB] int32 for families with a paged component (None otherwise).
+    Returns (logits [B, V], state).  NOTE: recurrent slot state is updated
+    for *every* row — the caller (``models.runner.ModelRunner.decode``)
+    masks non-runnable slots so a mid-prefill neighbour's carried state is
+    never clobbered by the batched decode."""
+    if cfg.family in PAGED_FAMILIES:
+        return decode_step_paged(cfg, params, state, tokens, lengths,
+                                 block_tables, attn_window=attn_window,
+                                 seq_axis=seq_axis)
+    if cfg.family == "ssm":
+        return decode_step(cfg, params, state, tokens, lengths,
+                           attn_window=attn_window)
+    # hybrid: mamba slot state + paged shared-attention KV
+    g, k, tail = hybrid_layout(cfg)
+    sp = params["shared"]
+    x = layers.embed(params["embed"], tokens[:, None])
+
+    def mamba_body(xc, xs):
+        lp, conv, h = xs
+        hh = layers.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
+        y, (conv1, h1) = ssm.mamba_decode_step(lp["mamba"], hh, cfg,
+                                               (conv, h))
+        return hint(xc + y, "activation"), (conv1, h1)
+
+    def group_body(carry, xs):
+        xc, kp_all, vp_all = carry
+        gp, conv, h, gi = xs
+        xc, (conv1, h1) = lax.scan(mamba_body, xc, (gp, conv, h))
+        hh = layers.rmsnorm(sp["ln1"], xc, cfg.norm_eps)
+        y, kp_all, vp_all = layers.attention_decode_paged(
+            sp["attn"], hh, cfg, kp_all, vp_all, gi, lengths, block_tables,
+            window=attn_window, seq_axis=seq_axis)
+        xc = xc + y
+        xc = xc + layers.ffn(sp["ffn"],
+                             layers.rmsnorm(sp["ln2"], xc, cfg.norm_eps))
+        return (hint(xc, "activation"), kp_all, vp_all), (conv1, h1)
+
+    (x, kp, vp), (conv_g, ssm_g) = lax.scan(
+        group_body, (x, state["attn"]["k_pages"], state["attn"]["v_pages"]),
+        (params["groups"], state["conv_g"], state["ssm_g"], jnp.arange(g)))
+    new_state = {"conv_g": conv_g, "ssm_g": ssm_g,
+                 "attn": {"k_pages": kp, "v_pages": vp}}
+    if tail:
+        x, (conv_t, ssm_t) = lax.scan(mamba_body, x,
+                                      (params["tail"], state["conv_t"],
+                                       state["ssm_t"]))
+        new_state.update(conv_t=conv_t, ssm_t=ssm_t)
+    else:
+        new_state.update(conv_t=state["conv_t"], ssm_t=state["ssm_t"])
+    return _logits(cfg, params, x)[:, 0], new_state
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,250 @@
+"""CacheSpec / slot-state contract: family-agnostic serving runner.
+
+``ServeEngine`` must schedule every family — dense/moe transformers,
+Zamba2-style hybrids, Mamba2/RWKV6 ssm — through ONE continuous-batching
+loop without branching on ``cfg.family``.  This module is that contract:
+
+* :func:`cache_spec` describes, per family, which cache components are
+  **paged** (a growing attention KV addressed through block tables: the
+  transformer KV, the hybrid family's shared-attention KV — one pool of
+  physical pages whose leading axis counts attention *applications*) and
+  which are **fixed-size slot state** (the Mamba2 conv tail + SSM state,
+  the RWKV6 shift/wkv state — O(1) per sequence, batched over engine
+  slots).
+* :class:`ModelRunner` exposes the init / prefill / decode / extract /
+  insert / copy entry points the engine calls.  All family dispatch lives
+  behind it (``models.model.serve_*``); the engine only consults the spec
+  (``has_paged`` -> run a ``BlockAllocator``, ``slot_state`` -> carry the
+  blob through preemption).
+
+Scheduling consequences the engine derives from the spec alone:
+families with a paged component get real paged attention, prefix caching
+and page-pressure preemption; slot-state-only families get continuous
+batching under the token budget with no page pressure at all; families
+with both (hybrid) swap/recompute *pages and state together*.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+@dataclass(frozen=True)
+class PagedComponentSpec:
+    """One paged (block-table-addressed) KV component.
+
+    ``n_apps`` is the leading axis of the physical pages
+    ``[n_apps, kv_heads, NB, BS, head_dim]`` — attention *applications*
+    sharing one block table per sequence: all L layers of a transformer,
+    or the G applications of a hybrid's shared attention block."""
+    name: str
+    n_apps: int
+    kv_heads: int
+    head_dim: int
+
+    def page_shape(self, block_size: int) -> Tuple[int, ...]:
+        return (self.n_apps, self.kv_heads, block_size, self.head_dim)
+
+    def page_kv_bytes(self, block_size: int, itemsize: int) -> int:
+        """Bytes of ONE physical page, K and V."""
+        n = 1
+        for d in self.page_shape(block_size):
+            n *= d
+        return 2 * n * itemsize
+
+
+@dataclass(frozen=True)
+class SlotStateSpec:
+    """One fixed-size per-slot state entry (a top-level serve-state key).
+
+    ``batch_axis`` is the axis of that array indexed by the engine slot
+    (it varies: 1 for flat ``[L, B, ...]`` stacks, 2 for the hybrid's
+    grouped ``[G, K, B, ...]`` stacks)."""
+    key: str
+    batch_axis: int
+
+
+@dataclass(frozen=True)
+class CacheSpec:
+    """What a family's serving cache is made of (see module docstring)."""
+    paged: Tuple[PagedComponentSpec, ...]
+    slot_state: Tuple[SlotStateSpec, ...]
+
+    @property
+    def has_paged(self) -> bool:
+        return bool(self.paged)
+
+    @property
+    def has_slot_state(self) -> bool:
+        return bool(self.slot_state)
+
+
+def cache_spec(cfg: ModelConfig) -> CacheSpec:
+    """The ONE family-aware cache description (everything downstream —
+    engine scheduling, swap payloads, shard specs — derives from it)."""
+    if cfg.family in ("dense", "moe"):
+        return CacheSpec(
+            paged=(PagedComponentSpec("attn", cfg.n_layers, cfg.n_kv_heads,
+                                      cfg.hd),),
+            slot_state=())
+    if cfg.family == "ssm":
+        if cfg.rwkv:
+            ss = (SlotStateSpec("tm_shift", 1), SlotStateSpec("wkv", 1),
+                  SlotStateSpec("cm_shift", 1))
+        else:
+            ss = (SlotStateSpec("conv", 1), SlotStateSpec("ssm", 1))
+        return CacheSpec(paged=(), slot_state=ss)
+    if cfg.family == "hybrid":
+        g, _, _ = M.hybrid_layout(cfg)
+        return CacheSpec(
+            paged=(PagedComponentSpec("attn", g, cfg.n_kv_heads, cfg.hd),),
+            slot_state=(SlotStateSpec("conv_g", 2), SlotStateSpec("ssm_g", 2),
+                        SlotStateSpec("conv_t", 1),
+                        SlotStateSpec("ssm_t", 1)))
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def _slot_index(spec: SlotStateSpec, slot):
+    return (slice(None),) * spec.batch_axis + (slot,)
+
+
+class ModelRunner:
+    """Family-agnostic compute façade over ``models.model``.
+
+    Every method is pure/functional over the serve state pytree; the
+    jit/shard_map wrapping and all host-side bookkeeping stay in the
+    engine.  ``decode``/``prefill_chunk`` are safe to call inside
+    ``shard_map`` with ``seq_axis`` set (paged components sharded on the
+    page axis, slot state replicated — see :meth:`state_partition_specs`).
+    """
+
+    def __init__(self, cfg: ModelConfig, slots: int, max_seq: int):
+        self.cfg = cfg
+        self.slots = slots
+        self.max_seq = max_seq
+        self.spec = cache_spec(cfg)
+
+    # -- state ---------------------------------------------------------
+    def init_state(self, num_blocks: int, block_size: int, dtype):
+        return M.init_serve_state(self.cfg, self.slots, num_blocks,
+                                  block_size, dtype=dtype)
+
+    def init_dense_state(self, dtype):
+        """The legacy dense ``[slots, max_seq]``-slab A/B baseline state."""
+        return M.init_decode_state(self.cfg, self.slots, self.max_seq,
+                                   dtype=dtype)
+
+    # -- compute -------------------------------------------------------
+    def decode(self, params, state, tokens, lengths, block_tables, mask, *,
+               seq_axis: Optional[str] = None):
+        """Batched one-token decode.  ``mask`` [B] bool gates slot-state
+        updates: a non-runnable slot (mid-chunked-prefill, or empty) keeps
+        its carried recurrent state verbatim — without this, the batched
+        decode would advance a prefilling neighbour's conv/ssm/wkv state
+        with a garbage token.  Paged components need no gating: retired
+        and mid-prefill rows scatter into pages the next prefill chunk
+        overwrites (or the null page)."""
+        logits, new = M.serve_decode_step(self.cfg, params, state, tokens,
+                                          lengths, block_tables,
+                                          seq_axis=seq_axis)
+        for s in self.spec.slot_state:
+            a = new[s.key]
+            m = mask.reshape((1,) * s.batch_axis + (-1,)
+                             + (1,) * (a.ndim - s.batch_axis - 1))
+            new[s.key] = jnp.where(m, a, state[s.key])
+        return logits, new
+
+    def prefill_chunk(self, params, state, tokens, length, q_offset,
+                      block_table, slot, *, seq_axis: Optional[str] = None):
+        """One right-padded chunk of a single-sequence prefill: attention
+        K/V land in ``slot``'s pages, recurrent state reads/advances
+        ``slot``'s rows (padding rows are state-neutral)."""
+        return M.serve_prefill_chunk(self.cfg, params, state, tokens=tokens,
+                                     length=length, q_offset=q_offset,
+                                     block_table=block_table, slot=slot,
+                                     seq_axis=seq_axis)
+
+    # -- slot-state lifecycle (admission / preemption / restore) -------
+    def reset_slot(self, state, slot):
+        """Zero one slot's recurrent state (a fresh admission or a
+        recompute-restore must not inherit the previous occupant's)."""
+        out = dict(state)
+        for s in self.spec.slot_state:
+            a = state[s.key]
+            out[s.key] = a.at[_slot_index(s, slot)].set(0)
+        return out
+
+    def extract_slot_state(self, state, slot: int) -> Dict[str, np.ndarray]:
+        """One slot's recurrent state as a host-side blob — the fixed-size
+        half of a swap-preemption payload (pages are the other half)."""
+        return {s.key: np.asarray(jax.device_get(
+                    jnp.take(state[s.key], slot, axis=s.batch_axis)))
+                for s in self.spec.slot_state}
+
+    def insert_slot_state(self, state, slot: int, blob):
+        out = dict(state)
+        for s in self.spec.slot_state:
+            a = state[s.key]
+            out[s.key] = a.at[_slot_index(s, slot)].set(
+                jnp.asarray(blob[s.key], a.dtype))
+        return out
+
+    def slot_state_bytes(self, state) -> int:
+        """Bytes of ONE slot's recurrent state (swap-payload sizing for
+        the preemption cost model and ``swap_bytes`` accounting)."""
+        total = 0
+        for s in self.spec.slot_state:
+            a = state[s.key]
+            total += (a.size // a.shape[s.batch_axis]) * a.dtype.itemsize
+        return total
+
+    # -- paged-component page ops (COW + swap halves) ------------------
+    def copy_page(self, state, src, dst):
+        """Device-side physical-page copy across every paged component
+        (copy-on-write for mid-page prefix-cache matches)."""
+        return M.copy_kv_page(state, src, dst)
+
+    def extract_pages(self, state, pages):
+        """Gather physical pages by id — the device->host half of a page
+        swap.  Returns (k, v) ``[A, KvH, P, BS, hd]``."""
+        return M.extract_kv_pages(state, pages)
+
+    def insert_pages(self, state, pages, k, v):
+        """Scatter swapped-out pages back — the host->device half of a
+        page swap (non-paged state entries pass through untouched)."""
+        return M.insert_kv_pages(state, pages, k, v)
+
+    # -- paged-component geometry -------------------------------------
+    def page_shape(self, block_size: int) -> Tuple[int, ...]:
+        (comp,) = self.spec.paged
+        return comp.page_shape(block_size)
+
+    def page_kv_bytes(self, block_size: int, itemsize: int) -> int:
+        return sum(c.page_kv_bytes(block_size, itemsize)
+                   for c in self.spec.paged)
+
+    @property
+    def attn_applications(self) -> int:
+        """Attention applications per token (NoC combine count per
+        dispatched sharded attention pass)."""
+        return sum(c.n_apps for c in self.spec.paged)
+
+    def state_partition_specs(self, seq_axis: str = "seq"):
+        """shard_map specs for the serve state: pages sharded over the
+        sequence axis (axis 2 of [A, KvH, NB, BS, hd]), slot state
+        replicated (every shard advances it identically)."""
+        from jax.sharding import PartitionSpec as P
+        specs = {}
+        for c in self.spec.paged:
+            p = P(None, None, seq_axis)
+            specs[c.name] = {"k_pages": p, "v_pages": p}
+        for s in self.spec.slot_state:
+            specs[s.key] = P()
+        return specs

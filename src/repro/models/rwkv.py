@@ -47,14 +47,28 @@ def rwkv_init(rng, cfg: ModelConfig, dtype=jnp.bfloat16):
     }
 
 
-def _shift(x, last=None):
+def _shift(x, last=None, length=None):
     """Token shift: x_{t-1} (zeros / carried state at t=0).
 
-    Returns (shifted, new_last)."""
+    Returns (shifted, new_last).  With ``length`` (scalar or [B] int32),
+    ``new_last`` is the last *valid* row ``x[length-1]`` rather than the
+    final (possibly right-padded) row — the carried shift state of an
+    unpadded run."""
     if last is None:
         last = jnp.zeros_like(x[:, :1])
     shifted = jnp.concatenate([last, x[:, :-1]], axis=1)
-    return shifted, x[:, -1:]
+    if length is None:
+        return shifted, x[:, -1:]
+    b = x.shape[0]
+    idx = jnp.clip(jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+                   - 1, 0, x.shape[1] - 1)
+    return shifted, jnp.take_along_axis(x, idx[:, None, None], axis=1)
+
+
+def _valid_mask(length, b, s):
+    """[B, S] bool: row < length (right-padding rows are False)."""
+    return (jnp.arange(s)[None, :]
+            < jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))[:, None])
 
 
 def _decay(tm, xw):
@@ -65,10 +79,14 @@ def _decay(tm, xw):
 
 
 def time_mix(tm, x, cfg: ModelConfig, *, shift_state=None, wkv_state=None,
-             return_state: bool = False):
+             length=None, return_state: bool = False):
+    """``length`` (scalar or [B] int32): valid rows per sequence — padding
+    rows are made state-neutral (k -> 0, w -> 1 leaves the wkv recurrence
+    untouched) and the shift state is taken at the last valid row, so a
+    right-padded call carries exactly the state of an unpadded one."""
     b, s, d = x.shape
     h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
-    prev, new_shift = _shift(x, shift_state)
+    prev, new_shift = _shift(x, shift_state, length)
     mix = tm["mix"].astype(x.dtype)
     xr, xk, xv, xw, xg = (x * mix[i] + prev * (1 - mix[i]) for i in range(5))
     r = layers.linear(tm["wr"], xr).reshape(b, s, h, hd)
@@ -76,6 +94,10 @@ def time_mix(tm, x, cfg: ModelConfig, *, shift_state=None, wkv_state=None,
     v = layers.linear(tm["wv"], xv).reshape(b, s, h, hd)
     g = layers.linear(tm["wg"], xg)
     w = _decay(tm, xw).reshape(b, s, h, hd)
+    if length is not None:
+        valid = _valid_mask(length, b, s)[..., None, None]      # [B,S,1,1]
+        k = jnp.where(valid, k, 0.0)
+        w = jnp.where(valid, w, 1.0)
     # §Perf it-6 (REFUTED, kept as a note): hinting r/k/v/w replicated over
     # the TP axis before the scan does NOT remove the per-chunk partial-sum
     # all-reduces (8.5k ARs measured) — they originate inside the scan body
@@ -114,8 +136,9 @@ def time_mix_step(tm, x, cfg: ModelConfig, state):
     return layers.linear(tm["wo"], o), (x, Snew)
 
 
-def channel_mix(cm, x, *, shift_state=None, return_state: bool = False):
-    prev, new_shift = _shift(x, shift_state)
+def channel_mix(cm, x, *, shift_state=None, length=None,
+                return_state: bool = False):
+    prev, new_shift = _shift(x, shift_state, length)
     mix = cm["mix"].astype(x.dtype)
     xr = x * mix[0] + prev * (1 - mix[0])
     xk = x * mix[1] + prev * (1 - mix[1])

@@ -45,10 +45,13 @@ def _split_proj(cfg: ModelConfig, zxbcdt):
     return z, xin, B, C, dt
 
 
-def _causal_conv(x, w, conv_state=None):
+def _causal_conv(x, w, conv_state=None, length=None):
     """Depthwise causal conv over seq. x [B,S,C]; w [W,C].
 
-    Returns (y, tail) where tail is the last W-1 inputs (decode state)."""
+    Returns (y, tail) where tail is the last W-1 inputs (decode state).
+    With ``length`` (scalar or [B] int32) the tail is taken at the last
+    *valid* inputs — rows at and beyond ``length`` are right-padding and
+    must not leak into the carried decode state."""
     b, s, c = x.shape
     wlen = w.shape[0]
     if conv_state is None:
@@ -58,23 +61,44 @@ def _causal_conv(x, w, conv_state=None):
     y = jnp.zeros_like(x, dtype=jnp.float32)
     for i in range(wlen):  # W=4: tiny static unroll, fuses to one expression
         y = y + xp[:, i:i + s].astype(jnp.float32) * w[i].astype(jnp.float32)
-    tail = xp[:, -(wlen - 1):] if wlen > 1 else None
+    if wlen <= 1:
+        tail = None
+    elif length is None:
+        tail = xp[:, -(wlen - 1):]
+    else:
+        # xp row ``length + i`` (i in [0, W-1)) is input row length-W+1+i:
+        # the last W-1 valid inputs when rows >= length are padding
+        starts = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+        idx = starts[:, None] + jnp.arange(wlen - 1)[None]      # [B, W-1]
+        tail = jnp.take_along_axis(xp, idx[..., None], axis=1)
     return y.astype(x.dtype), tail
 
 
 def mamba_apply(p, x, cfg: ModelConfig, *, conv_state=None, ssm_state=None,
-                return_state: bool = False):
-    """x [B,S,d] -> y [B,S,d] (+ (conv_tail, ssm_state) when requested)."""
+                length=None, return_state: bool = False):
+    """x [B,S,d] -> y [B,S,d] (+ (conv_tail, ssm_state) when requested).
+
+    ``length`` (scalar or [B] int32): number of valid rows per sequence.
+    Rows at and beyond it are right-padding whose state contribution is
+    masked out (dt -> 0 freezes the SSM recurrence; the conv tail is taken
+    at the last valid inputs), so a padded prefill carries exactly the
+    state of an unpadded one — the serving engine's chunked prefill and
+    the dense slab baseline both rely on this."""
     b, s, d = x.shape
     di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
     z, xin, B, C, dt = _split_proj(cfg, layers.linear(p["in_proj"], x))
     conv_in = jnp.concatenate([xin, B, C], axis=-1)
-    conv_out, tail = _causal_conv(conv_in, p["conv_w"], conv_state)
+    conv_out, tail = _causal_conv(conv_in, p["conv_w"], conv_state, length)
     conv_out = ops.silu(conv_out)
     xs = conv_out[..., :di].reshape(b, s, h, hd)
     Bs = conv_out[..., di:di + n]
     Cs = conv_out[..., di + n:]
     dt_sp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    if length is not None:
+        valid = (jnp.arange(s)[None, :]
+                 < jnp.broadcast_to(jnp.asarray(length, jnp.int32),
+                                    (b,))[:, None])             # [B, S]
+        dt_sp = jnp.where(valid[..., None], dt_sp, 0.0)
     A = -jnp.exp(p["A_log"])
     y, hfin = ops.mamba2_scan(xs, dt_sp, A, Bs, Cs, h0=ssm_state)
     y = y + xs.astype(jnp.float32).astype(y.dtype) * p["D"][None, None, :, None].astype(y.dtype)

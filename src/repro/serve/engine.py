@@ -54,9 +54,37 @@ standard production mechanisms:
 
 Prefill functions are jit'd **once per bucket** (x O(log MB) block-table
 buckets) and cached (``stats["prefill_traces"]`` counts actual traces; it
-stays flat across admissions).  Families without a growing KV cache
-(rwkv / ssm / hybrid) run the same scheduler over the dense state path
-(``paged=False``), which is also kept as an A/B baseline for
+stays flat across admissions).
+
+**Family-agnostic cache contract.**  The engine never branches on
+``cfg.family``: every family is described by a
+``models.runner.CacheSpec`` — which cache components are *paged*
+(transformer KV; the hybrid family's shared-attention KV, one block table
+per sequence serving all G applications) and which are *fixed-size slot
+state* (Mamba2 conv/SSM, RWKV6 shift/wkv) — and driven through
+``models.runner.ModelRunner``'s init/prefill/decode/extract/insert entry
+points.  Consequences the scheduler derives from the spec alone:
+
+* dense/moe: paged KV, prefix caching, page-pressure preemption — as
+  before.
+* hybrid: real paged attention KV for the shared block **plus** slot
+  state; swap preemption parks *pages and state together* (registered
+  prefix-chain pages are re-attached by reference at restore and only the
+  unregistered remainder rides the arena), recompute replays through the
+  family's chunked prefill (padding rows are state-neutral).
+* ssm/rwkv: slot-state-only continuous batching — same token budget,
+  chunked prefill and batched decode, no page pressure at all.  Batched
+  decode masks slot-state updates for non-runnable slots so a
+  mid-prefill neighbour's recurrent state is never clobbered.
+
+Prefix caching stays attention-KV-only: families with slot state publish
+and pin page digests (that is what makes the swap-restore re-attach
+sound — the parked state blob covers the same tokens) but never skip
+prefill compute at admission, because cached pages cannot reconstruct the
+recurrent state that must advance through those tokens.
+
+``paged=False`` keeps the legacy dense ``[slots, max_seq]`` slab path
+(monolithic prefill, no paging) for every family as the A/B baseline of
 ``benchmarks/serve_throughput.py``.
 """
 from __future__ import annotations
@@ -77,6 +105,7 @@ from repro.configs.base import ModelConfig
 from repro.core import noc
 from repro.kernels import ops
 from repro.models import model as M
+from repro.models.runner import ModelRunner
 
 
 @dataclass
@@ -311,6 +340,22 @@ class BlockAllocator:
     def lookup(self, digest: bytes) -> Optional[int]:
         return self._hash_to_page.get(digest)
 
+    def page_digest(self, page: int) -> Optional[bytes]:
+        """The digest ``page`` is registered under (None if unregistered)."""
+        return self._page_hash.get(page)
+
+    # -- out-of-table references (swap-handle pins) --------------------
+    def pin(self, page: int) -> None:
+        """Hold a reference to ``page`` without a table slot — a swap
+        handle pins its registered prefix-chain pages so LRU eviction can
+        never reclaim them while the victim is parked."""
+        if self.refcount[page] <= 0:
+            raise RuntimeError(f"pin of unreferenced physical page {page}")
+        self.refcount[page] += 1
+
+    def unpin(self, page: int) -> None:
+        self._unref(page)
+
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_seq: int = 512,
@@ -332,8 +377,14 @@ class ServeEngine:
           seed: RNG seed for temperature sampling.
           prefill_buckets: chunk sizes for chunked prefill; each bucket is
             jit-compiled once and cached (``max_seq`` is always included).
-          paged: force the paged KV cache on/off (default: on for paged
-            families, off otherwise — the dense A/B baseline).
+          paged: None (default) serves through the family-agnostic
+            CacheSpec runner — paged KV where the family has attention
+            KV components (dense/moe/hybrid), slot-state-only continuous
+            batching otherwise (ssm/rwkv).  True additionally *requires*
+            a paged component (raises for slot-state-only families).
+            False forces the legacy dense ``[slots, max_seq]`` slab
+            baseline (monolithic prefill) for any family — the A/B
+            reference of ``benchmarks/serve_throughput.py``.
           block_size: tokens per KV page.
           num_blocks: physical page-pool size (default: full capacity,
             ``slots * ceil(max_seq/block_size)`` + null pages).  Smaller
@@ -364,13 +415,33 @@ class ServeEngine:
         self.slots = slots
         self.rng = jax.random.key(seed)
         self.dtype = jax.tree.leaves(params)[0].dtype
-        self.paged = (cfg.family in M.PAGED_FAMILIES) if paged is None else paged
-        if self.paged and cfg.family not in M.PAGED_FAMILIES:
-            raise ValueError(f"paged KV unsupported for family {cfg.family!r}")
+        # Family behavior is fully described by the CacheSpec contract —
+        # cfg.family is never consulted past this constructor.
+        self.runner = ModelRunner(cfg, slots, max_seq)
+        spec = self.runner.spec
+        if paged and not spec.has_paged:
+            raise ValueError(
+                f"family {cfg.family!r} has no paged cache components "
+                f"(CacheSpec: slot state only) — serve it with paged=None "
+                f"(slot-state continuous batching) or paged=False (the "
+                f"dense-slab A/B baseline)")
+        # paged=None/True -> the CacheSpec runner path (paged components
+        # block-table-addressed, slot state batched over engine slots);
+        # paged=False -> the legacy dense [slots, max_seq] slab baseline
+        # (monolithic prefill) kept for benchmark A/Bs.
+        self.dense_baseline = paged is False
+        self.paged = (not self.dense_baseline) and spec.has_paged
+        self.has_slot_state = ((not self.dense_baseline)
+                               and spec.has_slot_state)
         if prefix_caching and not self.paged:
-            raise ValueError("prefix_caching requires the paged KV cache")
+            raise ValueError("prefix_caching requires a paged KV component")
         self.prefix_caching = self.paged if prefix_caching is None \
             else bool(prefix_caching)
+        # Slot-state families publish/pin page digests (swap restores
+        # re-attach registered chains by reference) but can never *skip*
+        # prefill compute at admission: cached pages cannot reconstruct
+        # the recurrent state that must advance through those tokens.
+        self.prefix_attach = self.prefix_caching and not self.has_slot_state
 
         self.seq_shards = int(seq_shards)
         if self.seq_shards < 1 or (self.seq_shards & (self.seq_shards - 1)):
@@ -422,11 +493,16 @@ class ServeEngine:
                 num_blocks = S * (-(-num_blocks // S))   # round up to shards
             self.alloc = BlockAllocator(num_blocks, block_size, slots,
                                         self.blocks_per_slot, num_shards=S)
-            self.state = M.init_paged_decode_state(cfg, num_blocks, block_size,
-                                                   dtype=self.dtype)
+            self.state = self.runner.init_state(num_blocks, block_size,
+                                                self.dtype)
+        elif not self.dense_baseline:
+            # slot-state-only runner path: no page pool at all
+            self.state = self.runner.init_state(0, block_size, self.dtype)
         else:
-            self.state = M.init_decode_state(cfg, slots, max_seq,
-                                             dtype=self.dtype)
+            self.state = self.runner.init_dense_state(self.dtype)
+        self._slot_state_bytes = (self.runner.slot_state_bytes(self.state)
+                                  if self.has_slot_state else 0)
+        self._n_apps = self.runner.attn_applications if self.paged else 0
 
         self.lengths = np.zeros((slots,), np.int32)
         self.active: List[Optional[Request]] = [None] * slots
@@ -450,6 +526,7 @@ class ServeEngine:
             # counts KV tokens live at eviction, restored_tokens the part
             # re-attached without replay (swap-in or prefix-cache hit)
             "preempt_swaps": 0, "preempt_recomputes": 0, "swap_bytes": 0,
+            "swap_demotions": 0,
             "preempted_tokens": 0, "restored_tokens": 0,
             # prefix caching + page-gather accounting (paged mode)
             "prefix_hits": 0, "prefix_hit_tokens": 0, "cow_copies": 0,
@@ -457,56 +534,56 @@ class ServeEngine:
             "pages_evicted": 0,
             "gather_pages_calls": 0, "gather_page_volume": 0,
             # in-transit NoC combine accounting (sequence-sharded serving):
-            # one tree_softmax_combine per layer per dispatched decode tick /
-            # prefill chunk, costed by core.noc.softmax_combine_cost
+            # one tree_softmax_combine per attention application per
+            # dispatched decode tick / prefill chunk, costed by
+            # core.noc.softmax_combine_cost
             "noc_combines": 0, "noc_hops": 0, "noc_bytes": 0,
             "noc_energy_pj": 0.0,
         }
         self._prefill_fns: Dict[int, object] = {}
         self._decode = self._make_decode_fn()
-        self._copy_page = jax.jit(M.copy_kv_page) if self.paged else None
+        self._copy_page = (jax.jit(self.runner.copy_page)
+                           if self.paged else None)
         # page-swap device halves; page-id args are padded to power-of-two
         # buckets so each jit specializes O(log max_pages) times
-        self._extract_pages = jax.jit(M.extract_kv_pages) if self.paged \
-            else None
-        self._insert_pages = jax.jit(M.insert_kv_pages) if self.paged \
-            else None
+        self._extract_pages = (jax.jit(self.runner.extract_pages)
+                               if self.paged else None)
+        self._insert_pages = (jax.jit(self.runner.insert_pages)
+                              if self.paged else None)
+        # slot-state lifecycle half of the contract: a fresh admission (or
+        # a recompute restore) zeroes its slot's recurrent state rows
+        self._reset_slot = (jax.jit(self.runner.reset_slot)
+                            if self.has_slot_state else None)
 
     # -- jit caches ----------------------------------------------------
-    def _state_partition_specs(self):
-        """shard_map specs for the paged state: pages sharded over the
-        ``seq`` axis (axis 2 of [L, KvH, NB, BS, hd])."""
-        from jax.sharding import PartitionSpec as P
-        p = P(None, None, "seq")
-        return {"attn": {"k_pages": p, "v_pages": p}}
-
     def _make_decode_fn(self):
-        cfg = self.cfg
+        cfg, runner = self.cfg, self.runner
 
         if self.paged and self.seq_shards > 1:
             from jax.sharding import PartitionSpec as P
-            sspec = self._state_partition_specs()
+            sspec = runner.state_partition_specs("seq")
 
-            def body(params, state, toks, lens, tables_local):
+            def body(params, state, toks, lens, tables_local, mask):
                 # tables_local arrives [1, B, MB] (this shard's slice)
-                return M.decode_step_paged(cfg, params, state, toks, lens,
-                                           tables_local[0], seq_axis="seq")
+                return runner.decode(params, state, toks, lens,
+                                     tables_local[0], mask, seq_axis="seq")
 
             smapped = compat.shard_map(
                 body, mesh=self.mesh,
-                in_specs=(P(), sspec, P(), P(), P("seq")),
+                in_specs=(P(), sspec, P(), P(), P("seq"), P()),
                 out_specs=(P(), sspec), check_vma=False)
 
-            def f(params, state, toks, lens, tables):
+            def f(params, state, toks, lens, tables, mask):
                 self.stats["decode_traces"] += 1
-                return smapped(params, state, toks, lens, tables)
-        elif self.paged:
-            def f(params, state, toks, lens, tables):
+                return smapped(params, state, toks, lens, tables, mask)
+        elif not self.dense_baseline:
+            # runner path, unsharded: tables is None for slot-state-only
+            # families (no paged component to address)
+            def f(params, state, toks, lens, tables, mask):
                 self.stats["decode_traces"] += 1
-                return M.decode_step_paged(cfg, params, state, toks, lens,
-                                           tables)
+                return runner.decode(params, state, toks, lens, tables, mask)
         else:
-            def f(params, state, toks, lens, tables):
+            def f(params, state, toks, lens, tables, mask):
                 self.stats["decode_traces"] += 1
                 return M.decode_step(cfg, params, state, toks, lens)
         return jax.jit(f)
@@ -519,31 +596,31 @@ class ServeEngine:
         if fn is not None:
             return fn
         cfg, dtype, max_seq = self.cfg, self.dtype, self.max_seq
+        runner = self.runner
 
         if self.paged and self.seq_shards > 1:
             from jax.sharding import PartitionSpec as P
-            sspec = self._state_partition_specs()
+            sspec = runner.state_partition_specs("seq")
 
-            def body(params, state, toks, length, q_offset, bt_local):
-                return M.prefill_paged(cfg, params, state, tokens=toks,
-                                       length=length, q_offset=q_offset,
-                                       block_table=bt_local[0],
-                                       seq_axis="seq")
+            def body(params, state, toks, length, q_offset, bt_local, slot):
+                return runner.prefill_chunk(params, state, toks, length,
+                                            q_offset, bt_local[0], slot,
+                                            seq_axis="seq")
 
             smapped = compat.shard_map(
                 body, mesh=self.mesh,
-                in_specs=(P(), sspec, P(), P(), P(), P("seq")),
+                in_specs=(P(), sspec, P(), P(), P(), P("seq"), P()),
                 out_specs=(P(), sspec), check_vma=False)
 
-            def f(params, state, toks, length, q_offset, bt_row):
+            def f(params, state, toks, length, q_offset, bt_row, slot):
                 self.stats["prefill_traces"] += 1
-                return smapped(params, state, toks, length, q_offset, bt_row)
-        elif self.paged:
-            def f(params, state, toks, length, q_offset, bt_row):
+                return smapped(params, state, toks, length, q_offset, bt_row,
+                               slot)
+        elif not self.dense_baseline:
+            def f(params, state, toks, length, q_offset, bt_row, slot):
                 self.stats["prefill_traces"] += 1
-                return M.prefill_paged(cfg, params, state, tokens=toks,
-                                       length=length, q_offset=q_offset,
-                                       block_table=bt_row)
+                return runner.prefill_chunk(params, state, toks, length,
+                                            q_offset, bt_row, slot)
         else:
             def f(params, toks, lens):
                 self.stats["prefill_traces"] += 1
@@ -656,7 +733,10 @@ class ServeEngine:
             req._published = 0
             self.active[slot] = req
             self.lengths[slot] = 0
-            if self.paged and self.prefix_caching:
+            if self.has_slot_state:
+                # the previous occupant's recurrent state must not leak
+                self.state = self._reset_slot(self.state, jnp.int32(slot))
+            if self.prefix_attach:
                 self._attach_prefix(slot, req)
 
     def _attach_prefix(self, slot: int, req: Request) -> None:
@@ -720,7 +800,11 @@ class ServeEngine:
         req.prefill_pos = 0
         req.cached_len = 0
         req._published = 0
-        if self.prefix_caching:
+        if self.has_slot_state:
+            # recompute restore replays the family's prefill from token 0
+            # — the recurrent state rebuilds from zero alongside the pages
+            self.state = self._reset_slot(self.state, jnp.int32(slot))
+        if self.prefix_attach:
             hit0 = self.stats["prefix_hit_tokens"]
             if req.out_tokens:
                 self._attach_resume(slot, req)
@@ -760,17 +844,27 @@ class ServeEngine:
             self.stats["prefix_hit_tokens"] += match
 
     def _restore_swapped(self, slot: int, req: Request) -> bool:
-        """Swap-in: allocate fresh device pages for every parked page and
-        copy the arena contents back (per-shard batched).  All-or-nothing;
-        False when the pool cannot grant the full set yet."""
-        need = req._swap.n_pages
+        """Swap-in: re-attach the handle's pinned registered prefix-chain
+        pages *by reference*, allocate fresh device pages only for the
+        arena-parked remainder and copy those back (per-shard batched),
+        then re-insert the recurrent slot-state blob (families that carry
+        one).  All-or-nothing; False when the pool cannot grant the full
+        remainder yet."""
+        handle = req._swap
+        need = handle.n_pages              # unpinned pages to copy back
+        n_pin = len(handle.pinned)
         # demand headroom for the next token (decode or resume-prefill)
         # too: restoring into an instant page stall would only re-enter
-        # the preemption loop
+        # the preemption loop (pinned pages never touch the free pool)
         if self.alloc.free_blocks < max(
-                need, -(-(req._swap.tokens + 1) // self.block_size)):
+                need, -(-(handle.tokens + 1) // self.block_size) - n_pin):
             return False
         self.active[slot] = req
+        # pinned chain first: logical blocks [0, n_pin) re-attach by
+        # reference — share() adds the slot's refcount on top of the
+        # handle's, so a mid-restore rollback can release() uniformly
+        for page in handle.pinned:
+            self.alloc.share(slot, page)
         pages: List[int] = []
         for _ in range(need):
             page = self.alloc.alloc_page(slot)
@@ -779,25 +873,34 @@ class ServeEngine:
                 self.active[slot] = None
                 return False
             pages.append(page)
-        k, v = self._arena.read(req._swap.slots)
-        for sh, idx in self._by_shard(pages):
-            ids = self._pad_pow2([pages[i] for i in idx])
-            self.state = self._insert_pages(
-                self.state, jnp.asarray(ids),
-                jnp.asarray(self._pad_pages(np.moveaxis(k[idx], 0, 2))),
-                jnp.asarray(self._pad_pages(np.moveaxis(v[idx], 0, 2))))
-        self.stats["swap_bytes"] += need * self._arena.page_bytes
-        self.stats["restored_tokens"] += req._swap.tokens
-        # the parked pages cover [0, tokens); any gap up to the resume
+        if pages:
+            k, v = self._arena.read(handle.slots)
+            for sh, idx in self._by_shard(pages):
+                ids = self._pad_pow2([pages[i] for i in idx])
+                self.state = self._insert_pages(
+                    self.state, jnp.asarray(ids),
+                    jnp.asarray(self._pad_pages(np.moveaxis(k[idx], 0, 2))),
+                    jnp.asarray(self._pad_pages(np.moveaxis(v[idx], 0, 2))))
+        if handle.state is not None:
+            self.state = self.runner.insert_slot_state(self.state, slot,
+                                                       handle.state)
+        self.stats["swap_bytes"] += (need * self._page_kv_bytes()
+                                     + handle.state_bytes)
+        self.stats["restored_tokens"] += handle.tokens
+        # the restored coverage is [0, tokens); any gap up to the resume
         # target (possible after a mid-restore re-preemption) is
         # re-prefilled from _resume_tokens like the recompute arm
-        req.prefill_pos = req._swap.tokens
-        req.cached_len = req._swap.tokens
-        self._arena.free(req._swap)
+        req.prefill_pos = handle.tokens
+        req.cached_len = handle.tokens
+        for page in handle.pinned:
+            self.alloc.unpin(page)      # the slot's own reference remains
+        handle.pinned = []
+        if handle.slots:
+            self._arena.free(handle)
         req._swap = None
-        # the restored rows 0..need-1 hold the same content the digests
-        # commit to, so publishing may resume where it left off
-        req._published = min(req._published, need)
+        # the restored rows hold the same content the digests commit to,
+        # so publishing may resume where it left off
+        req._published = min(req._published, n_pin + need)
         self.lengths[slot] = req.prefill_pos
         return True
 
@@ -848,15 +951,15 @@ class ServeEngine:
         return min(_next_pow2(n_pages), self.blocks_per_slot)
 
     def _prefill_tick(self, budget: int, finished: List[Request]) -> int:
-        """Advance pending prefills under ``budget`` padded tokens.  Paged
-        slots move chunk-by-chunk and several can progress per tick; dense
-        slabs cannot chunk, so that mode keeps the seed engine's admission
-        rate (one monolithic prefill per tick — the A/B baseline).
-        Returns the unspent budget."""
+        """Advance pending prefills under ``budget`` padded tokens.  Runner
+        slots (paged *or* slot-state) move chunk-by-chunk and several can
+        progress per tick; dense slabs cannot chunk, so that mode keeps
+        the seed engine's admission rate (one monolithic prefill per tick
+        — the A/B baseline).  Returns the unspent budget."""
         pending = [(slot, req) for slot, req in enumerate(self.active)
                    if req is not None
                    and req.prefill_pos < self._prefill_target(req)]
-        if not self.paged:
+        if self.dense_baseline:
             for slot, req in pending[:1]:
                 plen = self._plen(req)
                 logits = self._run_prefill_chunk(slot, req,
@@ -882,7 +985,8 @@ class ServeEngine:
                         break                  # not affordable this tick
                     bucket = afford[-1]
                 n = min(remaining, bucket)
-                if not self.alloc.ensure(slot, req.prefill_pos + n):
+                if self.paged and not self.alloc.ensure(
+                        slot, req.prefill_pos + n):
                     self.stats["stalled_ticks"] += 1
                     break                      # pool exhausted; wait
                 logits = self._run_prefill_chunk(slot, req, bucket, n)
@@ -918,32 +1022,37 @@ class ServeEngine:
         src = self._prefill_source(req)
         padded[:n] = src[req.prefill_pos:req.prefill_pos + n]
         fn = self._prefill_fn(bucket)
-        if self.paged:
-            # pass only the live prefix of the block table (rounded up to a
-            # power-of-two bucket so jit specializations stay O(log MB)):
-            # per-chunk attention work is then bounded by the cached length,
-            # not the pool size — the old path handed the full MB row to a
-            # per-layer gather_pages, O(max_blocks) copies per chunk
-            n_live = -(-(req.prefill_pos + n) // self.block_size)
-            mb = self._page_bucket(n_live)
-            bt = np.zeros((mb,), np.int32)
-            u = min(int(self.alloc.used[slot]), mb)
-            bt[:u] = self.alloc.table[slot, :u]
-            S = self.seq_shards
-            if S > 1:
-                bt = self.alloc.shard_local(bt)       # [S, mb] local tables
-                self._account_noc_combine(rows=bucket)
-            if not ops.using_pallas():
-                # fallback linearizes k+v per layer per chunk per shard
-                # (kernel: zero)
-                self.stats["gather_pages_calls"] += 2 * self.cfg.n_layers * S
-                self.stats["gather_page_volume"] += (2 * self.cfg.n_layers
-                                                     * mb * S)
+        if not self.dense_baseline:
+            bt = None
+            if self.paged:
+                # pass only the live prefix of the block table (rounded up
+                # to a power-of-two bucket so jit specializations stay
+                # O(log MB)): per-chunk attention work is then bounded by
+                # the cached length, not the pool size — the old path
+                # handed the full MB row to a per-application gather_pages,
+                # O(max_blocks) copies per chunk
+                n_live = -(-(req.prefill_pos + n) // self.block_size)
+                mb = self._page_bucket(n_live)
+                bt = np.zeros((mb,), np.int32)
+                u = min(int(self.alloc.used[slot]), mb)
+                bt[:u] = self.alloc.table[slot, :u]
+                S = self.seq_shards
+                if S > 1:
+                    bt = self.alloc.shard_local(bt)   # [S, mb] local tables
+                    self._account_noc_combine(rows=bucket)
+                if not ops.using_pallas():
+                    # fallback linearizes k+v per attention application per
+                    # chunk per shard (kernel: zero)
+                    self.stats["gather_pages_calls"] += 2 * self._n_apps * S
+                    self.stats["gather_page_volume"] += (2 * self._n_apps
+                                                         * mb * S)
+                bt = jnp.asarray(bt)
             logits, self.state = fn(
                 self.params, self.state, jnp.asarray(padded[None]),
-                jnp.int32(n), jnp.int32(req.prefill_pos), jnp.asarray(bt))
+                jnp.int32(n), jnp.int32(req.prefill_pos), bt,
+                jnp.int32(slot))
             return logits
-        # dense: single-sequence prefill scattered into the slot's slab
+        # dense baseline: single-sequence prefill scattered into the slab
         logits, one_state = fn(self.params, jnp.asarray(padded[None]),
                                jnp.array([n], jnp.int32))
         self.state = _scatter_slot(self.state, one_state, slot)
@@ -951,15 +1060,16 @@ class ServeEngine:
 
     def _account_noc_combine(self, rows: int) -> None:
         """Accumulate the in-transit combine traffic one sharded dispatch
-        performs: one tree_softmax_combine per layer, ``rows`` query rows
-        each (slots for decode, the chunk bucket for prefill)."""
+        performs: one tree_softmax_combine per attention application (L
+        for transformers, G for the hybrid shared block), ``rows`` query
+        rows each (slots for decode, the chunk bucket for prefill)."""
         cfg = self.cfg
         c = noc.softmax_combine_cost(rows, cfg.n_heads, cfg.hd,
                                      self.seq_shards)
-        self.stats["noc_combines"] += cfg.n_layers
-        self.stats["noc_hops"] += cfg.n_layers * c["hops"]
-        self.stats["noc_bytes"] += cfg.n_layers * c["bytes"]
-        self.stats["noc_energy_pj"] += cfg.n_layers * c["energy_pj"]
+        self.stats["noc_combines"] += self._n_apps
+        self.stats["noc_hops"] += self._n_apps * c["hops"]
+        self.stats["noc_bytes"] += self._n_apps * c["bytes"]
+        self.stats["noc_energy_pj"] += self._n_apps * c["energy_pj"]
 
     def _sample(self, logits, req: Request) -> int:
         logits = logits.reshape(-1)
@@ -1027,8 +1137,10 @@ class ServeEngine:
                 runnable.append(i)
             if runnable:
                 toks = np.zeros((self.slots,), np.int32)
+                mask = np.zeros((self.slots,), bool)
                 for i in runnable:
                     toks[i] = self.active[i].out_tokens[-1]
+                    mask[i] = True
                 # .copy(): jnp.asarray zero-copy-aliases numpy buffers on
                 # CPU, and lengths/table are mutated below while the async
                 # dispatch may still be reading them (shard_local already
@@ -1041,9 +1153,12 @@ class ServeEngine:
                     self._account_noc_combine(rows=self.slots)
                 else:
                     tables = jnp.asarray(self.alloc.table.copy())
+                # the mask gates recurrent slot-state updates: batched
+                # decode must not advance a mid-prefill neighbour's state
                 logits, self.state = self._decode(
                     self.params, self.state, jnp.asarray(toks),
-                    jnp.asarray(self.lengths.copy()), tables)
+                    jnp.asarray(self.lengths.copy()), tables,
+                    jnp.asarray(mask))
                 for i in runnable:
                     req = self.active[i]
                     self.lengths[i] += 1
@@ -1079,10 +1194,35 @@ class ServeEngine:
         victims = [i for i, r in enumerate(self.active)
                    if r is not None and self.alloc.used[i] > 0]
         if len(victims) < 2:
+            # a parked swap restore can itself hold pages hostage (its
+            # handle pins shared prefix-chain pages whose co-holders have
+            # since retired): demote the first such handle — anywhere in
+            # the restore queue, not just its head — to the recompute arm
+            # (pins and arena bytes are dropped, the restore replays from
+            # _resume_tokens) rather than livelock
+            for parked in self.restore_queue:
+                if parked._swap is not None:
+                    self._demote_swap(parked)
+                    break
             return
         slot = min(victims, key=lambda i: (len(self.active[i].out_tokens),
                                            self.active[i].prefill_pos))
         self._preempt(slot)
+
+    def _demote_swap(self, req: Request) -> None:
+        """Convert a parked swap handle into a recompute-arm restore: free
+        its pinned references and arena slots (the pool gets every byte
+        back) and let ``_restore`` replay the progress from
+        ``_resume_tokens``.  Token-identical either way — only the restore
+        cost changes."""
+        handle = req._swap
+        for page in handle.pinned:
+            self.alloc.unpin(page)
+        handle.pinned = []
+        if handle.slots:
+            self._arena.free(handle)
+        req._swap = None
+        self.stats["swap_demotions"] += 1
 
     def _preempt(self, slot: int) -> None:
         """Evict ``slot`` while preserving its generation progress.
@@ -1148,45 +1288,78 @@ class ServeEngine:
         n_pages = -(-live_tokens // self.block_size)
         return noc.preempt_decision(
             n_pages, self._page_kv_bytes(), live_tokens,
-            flops_per_token=2.0 * self.cfg.param_count(active_only=True))
+            flops_per_token=2.0 * self.cfg.param_count(active_only=True),
+            state_bytes=self._slot_state_bytes)
 
     def _page_shape(self):
-        """Per-page array shape ``(L, KvH, BS, hd)`` — the ONE definition
-        shared by the swap arena and the cost model, so priced and
-        accounted swap bytes can never drift apart."""
-        cfg = self.cfg
-        return (cfg.n_layers, cfg.n_kv_heads, self.block_size, cfg.hd)
+        """Per-page array shape ``(A, KvH, BS, hd)`` (A = attention
+        applications: L for transformers, G for the hybrid shared block) —
+        the ONE definition shared by the swap arena and the cost model,
+        from the CacheSpec, so priced and accounted swap bytes can never
+        drift apart."""
+        return self.runner.page_shape(self.block_size)
 
     def _page_kv_bytes(self) -> int:
-        """Bytes of one physical page across all layers, K and V."""
-        n = 1
-        for d in self._page_shape():
-            n *= d
-        return 2 * n * jnp.dtype(self.dtype).itemsize
+        """Bytes of one physical page across all applications, K and V."""
+        return self.runner.page_kv_bytes(self.block_size,
+                                         jnp.dtype(self.dtype).itemsize)
 
     def _swap_out(self, slot: int, live_tokens: int) -> bool:
-        """Copy the victim's live pages into the host arena (per-shard
-        batched); False when the arena cannot hold them all."""
+        """Park the victim's progress host-side: registered prefix-chain
+        pages are *pinned* (restore re-attaches them by reference — they
+        never ride the link), the unregistered remainder is copied into
+        the arena (per-shard batched), and families with recurrent state
+        park the slot's fixed-size blob alongside.  False when the arena
+        cannot hold the remainder."""
         from repro.serve import swap
+        req = self.active[slot]
         n_pages = -(-live_tokens // self.block_size)
-        if self._arena is None:
-            if self.swap_pages < 1:
-                return False
-            self._arena = swap.SwapArena(self.swap_pages, self._page_shape(),
-                                         jnp.dtype(self.dtype))
-        handle = self._arena.alloc(n_pages)
-        if handle is None:
-            return False
-        handle.tokens = live_tokens
         pages = [int(p) for p in self.alloc.table[slot, :n_pages]]
-        for sh, idx in self._by_shard(pages):
-            ids = self._pad_pow2([pages[i] for i in idx])
+        n_pin = 0
+        if self.prefix_caching:
+            # longest leading run of pages registered under this request's
+            # own digest chain: their bytes are already content-addressed
+            # in the pool (and often shared with other readers), so
+            # copying them would only inflate swap_bytes — the handle pins
+            # them instead and restore re-attaches by reference.  If the
+            # pins ever starve the survivors, the deadlock breaker demotes
+            # this handle to the recompute arm (_demote_swap) rather than
+            # livelock.
+            for i, p in enumerate(pages):
+                if (i < len(req._digests)
+                        and self.alloc.page_digest(p) == req._digests[i]):
+                    n_pin += 1
+                else:
+                    break
+        rest = pages[n_pin:]
+        if rest:
+            if self._arena is None:
+                if self.swap_pages < 1:
+                    return False
+                self._arena = swap.SwapArena(self.swap_pages,
+                                             self._page_shape(),
+                                             jnp.dtype(self.dtype))
+            handle = self._arena.alloc(len(rest))
+            if handle is None:
+                return False
+        else:
+            handle = swap.SwapHandle([])   # fully covered by pinned pages
+        handle.tokens = live_tokens
+        handle.pinned = pages[:n_pin]
+        for p in handle.pinned:
+            self.alloc.pin(p)      # survives release(); LRU can't evict it
+        if self.has_slot_state:
+            handle.state = self.runner.extract_slot_state(self.state, slot)
+            handle.state_bytes = self._slot_state_bytes
+        for sh, idx in self._by_shard(rest):
+            ids = self._pad_pow2([rest[i] for i in idx])
             k, v = self._extract_pages(self.state, jnp.asarray(ids))
             k = np.moveaxis(np.asarray(k), 2, 0)[:len(idx)]
             v = np.moveaxis(np.asarray(v), 2, 0)[:len(idx)]
             self._arena.write([handle.slots[i] for i in idx], k, v)
-        self.stats["swap_bytes"] += n_pages * self._arena.page_bytes
-        self.active[slot]._swap = handle
+        self.stats["swap_bytes"] += (len(rest) * self._page_kv_bytes()
+                                     + handle.state_bytes)
+        req._swap = handle
         return True
 
     def _extend_digests(self, req: Request, kv_seq: np.ndarray) -> None:

@@ -30,17 +30,33 @@ import numpy as np
 
 @dataclass
 class SwapHandle:
-    """One preempted request's parked pages.
+    """One preempted request's parked progress.
 
     ``slots[i]`` is the arena slot holding the victim's *logical* block
-    ``i`` — restore re-allocates device pages in the same logical order, so
-    the mapping survives the round trip even when the new physical pages
-    land on different shards than the originals.  ``tokens`` counts the KV
-    rows the parked pages cover (= the victim's live length at eviction;
-    a victim preempted again mid-restore may cover fewer tokens than its
-    full resume target — the gap is re-prefilled after swap-in)."""
+    ``pinned_pages + i`` — restore re-allocates device pages in the same
+    logical order, so the mapping survives the round trip even when the
+    new physical pages land on different shards than the originals.
+    ``tokens`` counts the KV rows the parked progress covers (= the
+    victim's live length at eviction; a victim preempted again mid-restore
+    may cover fewer tokens than its full resume target — the gap is
+    re-prefilled after swap-in).
+
+    Two generalizations beyond raw pages:
+
+    * ``pinned`` — leading prefix-chain pages that were *registered* in
+      the prefix cache at eviction are not copied at all: the handle holds
+      a refcount on each (so LRU eviction can never reclaim them) and
+      restore re-attaches them by reference, swapping only the
+      unregistered remainder.
+    * ``state`` — families with fixed-size recurrent slot state (hybrid
+      Mamba2 conv/SSM) park it here as a host blob alongside the pages;
+      ``state_bytes`` is its link-traffic size for ``swap_bytes`` /
+      cost-model accounting."""
     slots: List[int] = field(default_factory=list)
     tokens: int = 0
+    pinned: List[int] = field(default_factory=list)
+    state: Optional[object] = None
+    state_bytes: int = 0
 
     @property
     def n_pages(self) -> int:

@@ -223,14 +223,32 @@ def test_auto_policy_follows_cost_model(setup, base, monkeypatch):
 
 def test_full_swap_arena_degrades_to_recompute(setup, base):
     """swap_pages too small for the victim: the engine must fall back to
-    the recompute arm for that victim instead of failing or wedging."""
+    the recompute arm for that victim instead of failing or wedging.
+    ``prefix_caching=False`` keeps every live page arena-bound — with
+    caching on, registered prefix-chain pages are *pinned* instead of
+    copied, so a tiny arena can legitimately suffice (covered by
+    test_swap_pinned_chain_shrinks_arena_demand)."""
     cfg, params = setup
     base_toks, _ = base
     toks, eng = _drain(cfg, params, num_blocks=11, preempt_policy="swap",
-                       swap_pages=1)
+                       swap_pages=1, prefix_caching=False)
     assert toks == base_toks
     assert eng.stats["preempt_swaps"] == 0
     assert eng.stats["preempt_recomputes"] >= 1
+
+
+def test_swap_pinned_chain_shrinks_arena_demand(setup, base):
+    """With prefix caching on, a victim's registered prefix-chain pages
+    are pinned (re-attached by reference at restore), so an arena too
+    small for *all* live pages can still take the unregistered remainder
+    — and outputs stay token-identical."""
+    cfg, params = setup
+    base_toks, base_decode = base
+    toks, eng = _drain(cfg, params, num_blocks=11, preempt_policy="swap",
+                       swap_pages=4)
+    assert toks == base_toks
+    assert eng.stats["preempt_swaps"] >= 1
+    assert eng.stats["decode_tokens"] == base_decode
 
 
 def test_restored_requests_have_priority_over_new_admissions(setup):

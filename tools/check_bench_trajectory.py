@@ -52,6 +52,9 @@ def main() -> int:
          ("shared_prefix", "cache_on", "ttft_p50_ms"), False),
         ("oversubscribed goodput (swap) tok/s",
          ("preempted", "swap", "goodput_tok_s"), True),
+        # family serving leg (hybrid by default) — skips gracefully when
+        # the previous artifact predates it, so first runs don't trip
+        ("family serve tok/s", ("family", "tok_s"), True),
     ]
     failures = []
     for name, path, up in metrics:
