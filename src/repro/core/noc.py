@@ -219,6 +219,25 @@ def preempt_decision(n_pages: int, page_bytes: int, tokens: int,
     return "swap" if s <= r else "recompute"
 
 
+def restore_cost_seconds(n_pages: int, page_bytes: int, tokens: int,
+                         flops_per_token: float, state_bytes: int = 0,
+                         policy: str = "auto") -> float:
+    """Seconds to bring one preemption victim back: the swap arm's link
+    round trip, the recompute arm's prefill replay, or (``"auto"``) the
+    cheaper of the two — the same comparison :func:`preempt_decision`
+    makes, exposed as a *magnitude* so schedulers can rank victims by how
+    expensive each would be to evict, not just pick an arm.  For
+    ``policy="auto"`` the returned value is always the cost of the arm
+    ``preempt_decision`` would take."""
+    s = swap_cost(n_pages, page_bytes, state_bytes)["seconds"]
+    r = recompute_cost(tokens, flops_per_token)["seconds"]
+    if policy == "swap":
+        return s
+    if policy == "recompute":
+        return r
+    return min(s, r)
+
+
 def distributed_softmax(x, axis_name: str):
     """Softmax over a feature axis sharded across ``axis_name`` (e.g. the
     vocab-sharded LM head).  max and sum statistics ride the butterfly."""

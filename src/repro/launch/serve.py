@@ -53,6 +53,14 @@ def main():
     ap.add_argument("--swap-pages", type=int, default=None,
                     help="host swap-arena capacity in pages (default: one "
                          "full pool's worth)")
+    ap.add_argument("--proactive-horizon", type=int, default=0,
+                    help="preempt on predicted page-pool exhaustion this "
+                         "many ticks ahead (0 = deadlock-only, the "
+                         "pre-SLO behavior)")
+    ap.add_argument("--batch-frac", type=float, default=0.0,
+                    help="fraction of the synthetic stream submitted as "
+                         "the 'batch' latency class (longer decodes, "
+                         "weight 1) instead of 'interactive' (weight 8)")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore trained params (repro.checkpoint layout)")
     args = ap.parse_args()
@@ -80,14 +88,18 @@ def main():
                       prefix_caching=prefix_caching,
                       seq_shards=args.seq_shards,
                       preempt_policy=args.preempt_policy,
-                      swap_pages=args.swap_pages)
+                      swap_pages=args.swap_pages,
+                      proactive_horizon=args.proactive_horizon)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for i in range(args.requests):
         plen = int(rng.integers(2, min(24, args.max_seq // 4)))
+        batch = rng.random() < args.batch_frac
         eng.submit(rng.integers(0, cfg.vocab_size, plen).tolist(),
-                   max_new_tokens=args.max_new_tokens,
-                   temperature=args.temperature)
+                   max_new_tokens=(2 * args.max_new_tokens if batch
+                                   else args.max_new_tokens),
+                   temperature=args.temperature,
+                   priority="batch" if batch else "interactive")
     done = eng.run_until_drained()
     dt = time.perf_counter() - t0
     total = sum(len(r.out_tokens) for r in done)
@@ -113,6 +125,24 @@ def main():
           f"{eng.stats['preempted_tokens']:.0f} preempted tokens, "
           f"swap_bytes={eng.stats['swap_bytes']:.0f}), "
           f"gather_volume={eng.stats['gather_page_volume']:.0f}")
+    for cls in eng.class_order:
+        cs = eng.class_stats[cls]
+        if not cs["submitted"]:
+            continue
+        lat = [r for r in done if r.priority == cls and r.ttft is not None]
+        ttfts = sorted(r.ttft for r in lat)
+        p50 = ttfts[len(ttfts) // 2] * 1e3 if ttfts else 0.0
+        print(f"[serve] class {cls} (w={eng.class_weights[cls]:g}): "
+              f"finished={cs['finished']:.0f}/{cs['submitted']:.0f}, "
+              f"tokens={cs['finished_tokens']:.0f}, "
+              f"preemptions={cs['preemptions']:.0f}, "
+              f"ttft_p50={p50:.1f}ms")
+    if eng.stats["preempt_proactive"]:
+        print(f"[serve] proactive preemptions (horizon="
+              f"{eng.proactive_horizon}): "
+              f"{eng.stats['preempt_proactive']:.0f}, "
+              f"stalled_ticks={eng.stats['stalled_ticks']:.0f} "
+              f"of {eng.stats['ticks']:.0f} ticks")
     if eng.seq_shards > 1:
         print(f"[serve] noc: combines={eng.stats['noc_combines']:.0f}, "
               f"hops={eng.stats['noc_hops']:.0f}, "

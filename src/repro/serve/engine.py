@@ -42,6 +42,17 @@ standard production mechanisms:
   (``core.noc.preempt_decision``).  Preempted requests re-admit with
   priority over new work; no decoded token is ever replayed or re-sampled,
   so greedy outputs are token-identical to an unpressured run.
+* **SLO-aware scheduling** — every request carries a *latency class*
+  (``submit(..., priority="interactive"|"batch")``); admission orders the
+  queue by class then age, preemption-victim selection scores candidates
+  by ``pages held x restore cost x class weight`` (restore cost priced by
+  ``core.noc.restore_cost_seconds`` — the same swap-vs-recompute model
+  ``preempt_decision`` uses), and with ``proactive_horizon > 0`` the
+  engine preempts on *predicted* page-pool exhaustion (free + reclaimable
+  pages vs the next-K-ticks page demand of active slots) instead of
+  waiting for a fully stalled tick.  Per-class counters live in
+  ``engine.class_stats``; per-request TTFT/TPOT (wall and tick clocks)
+  ride the :class:`Request`.
 * **Sequence-sharded page pool** (``seq_shards=N``) — the physical pool is
   split over an N-device ``seq`` mesh axis; ``BlockAllocator`` places a
   slot's pages round-robin across shards (fill-local under pressure), and
@@ -92,9 +103,9 @@ from __future__ import annotations
 import hashlib
 import itertools
 import time
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -106,6 +117,14 @@ from repro.core import noc
 from repro.kernels import ops
 from repro.models import model as M
 from repro.models.runner import ModelRunner
+
+# Latency classes and their default preemption weights.  A victim's
+# eviction score is ``pages x restore_cost x weight``, so a heavier class
+# is proportionally harder to evict; admission drains heavier classes
+# first (age-ordered within a class).  Override / extend via the engine's
+# ``class_weights`` ctor arg.
+LATENCY_CLASSES = ("interactive", "batch")
+CLASS_WEIGHTS = {"interactive": 8.0, "batch": 1.0}
 
 
 @dataclass
@@ -124,14 +143,20 @@ class Request:
     max_new_tokens: int = 32
     temperature: float = 0.0            # 0 => greedy
     eos_id: Optional[int] = None
+    priority: str = "interactive"       # latency class (LATENCY_CLASSES)
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
     prefill_pos: int = 0                # tokens already prefilled (chunked)
     cached_len: int = 0                 # prefix tokens served from cache
     ttft: Optional[float] = None        # submit -> first token (seconds)
+    tpot: Optional[float] = None        # seconds per decode token (mean)
+    submit_tick: int = 0                # virtual clock: tick at submit
+    first_tick: Optional[int] = None    # tick the first token landed
+    finish_tick: Optional[int] = None   # tick the request retired
     resume_len: int = 0                 # preempted: KV tokens to restore
     _preempted_live: int = 0            # KV tokens live at last eviction
     _t_submit: float = 0.0
+    _t_first: float = 0.0               # wall clock of the first token
     _digests: List[bytes] = field(default_factory=list)  # per-full-page chain
     _published: int = 0                 # this slot's pages already registered
     _resume_tokens: Optional[np.ndarray] = None  # [resume_len] int32
@@ -365,7 +390,9 @@ class ServeEngine:
                  max_tokens_per_tick: Optional[int] = None,
                  prefix_caching: Optional[bool] = None,
                  seq_shards: int = 1, preempt_policy: str = "auto",
-                 swap_pages: Optional[int] = None):
+                 swap_pages: Optional[int] = None,
+                 class_weights: Optional[Dict[str, float]] = None,
+                 proactive_horizon: int = 0):
         """Stand up a serving engine over ``params``.
 
         Args:
@@ -408,6 +435,19 @@ class ServeEngine:
           swap_pages: host swap-arena capacity in pages (default: one full
             pool's worth).  A full arena degrades ``swap`` to
             ``recompute`` for that victim instead of failing.
+          class_weights: latency-class name -> preemption weight map
+            (default ``CLASS_WEIGHTS``: interactive=8, batch=1).  Classes
+            admit in descending-weight order (age-ordered within a
+            class) and a victim's eviction score scales with its weight,
+            so heavier classes are admitted sooner and evicted later.
+          proactive_horizon: look-ahead in ticks for *proactive*
+            preemption (0 = off, the deadlock-only legacy behavior).
+            When the active slots' predicted page demand over the next
+            ``proactive_horizon`` ticks exceeds the grantable pool
+            (free + LRU-reclaimable pages), the cheapest victim by
+            ``pages x restore cost x class weight`` is preempted *before*
+            anything stalls — progress-preserving, so greedy outputs stay
+            token-identical either way.
         """
         self.cfg = cfg
         self.params = params
@@ -480,6 +520,20 @@ class ServeEngine:
                 f"got {preempt_policy!r}")
         self.preempt_policy = preempt_policy
 
+        self.class_weights = dict(CLASS_WEIGHTS)
+        if class_weights:
+            self.class_weights.update(class_weights)
+        if any(w <= 0 for w in self.class_weights.values()):
+            raise ValueError(f"class weights must be positive: "
+                             f"{self.class_weights}")
+        # admission order: heaviest class first, name-stable on ties
+        self.class_order = tuple(sorted(
+            self.class_weights, key=lambda c: (-self.class_weights[c], c)))
+        self.proactive_horizon = int(proactive_horizon)
+        if self.proactive_horizon < 0:
+            raise ValueError(
+                f"proactive_horizon must be >= 0, got {proactive_horizon}")
+
         if self.paged:
             self.block_size = block_size
             self.blocks_per_slot = -(-max_seq // block_size)
@@ -506,21 +560,37 @@ class ServeEngine:
 
         self.lengths = np.zeros((slots,), np.int32)
         self.active: List[Optional[Request]] = [None] * slots
-        self.queue: List[Request] = []
-        # preempted requests await re-admission here with *priority* over
-        # new submissions (no starvation: a victim can never be queue-jumped
-        # by fresh work competing for the pages it was evicted to free)
-        self.restore_queue: List[Request] = []
+        # one FIFO deque per latency class (O(1) admission pops even under
+        # thousand-request arrival streams; the old list.pop(0) was O(n));
+        # admission drains them in class_order, age-ordered within a class
+        self._queues: Dict[str, Deque[Request]] = {
+            cls: deque() for cls in self.class_order}
+        # preempted requests await re-admission here with priority over
+        # same-or-lower-class submissions (no starvation: a victim can
+        # never be queue-jumped by equal work competing for the pages it
+        # was evicted to free; a strictly heavier class may jump a parked
+        # lighter victim — that is the SLO contract)
+        self.restore_queue: Deque[Request] = deque()
         self.swap_pages = (swap_pages if swap_pages is not None
                            else (slots * self.blocks_per_slot
                                  if self.paged else 0))
         self._arena = None              # serve.swap.SwapArena, lazily built
         self._rid = itertools.count()
         self._tick = 0
+        self._stalled_this_tick = False
+        self.class_stats: Dict[str, Dict[str, float]] = {
+            cls: self._zero_class_stats() for cls in self.class_order}
         self.stats: Dict[str, float] = {
             "prefill_traces": 0, "decode_traces": 0, "ticks": 0,
             "prefill_tokens": 0, "decode_tokens": 0, "occupancy_sum": 0.0,
-            "stalled_ticks": 0, "preemptions": 0,
+            # stall_events counts per-slot waits (a tick can log several);
+            # stalled_ticks is the once-per-tick roll-up, so
+            # stalled_ticks <= ticks always holds.  padded_tokens is the
+            # per-tick budget actually charged (prefill buckets + decode
+            # tokens) — its per-tick delta never exceeds
+            # max_tokens_per_tick on the paged path.
+            "stalled_ticks": 0, "stall_events": 0, "padded_tokens": 0,
+            "preemptions": 0, "preempt_proactive": 0,
             # progress-preserving preemption: every preemption is a swap or
             # a recompute (restart-preemptions are gone); preempted_tokens
             # counts KV tokens live at eviction, restored_tokens the part
@@ -554,6 +624,23 @@ class ServeEngine:
         # a recompute restore) zeroes its slot's recurrent state rows
         self._reset_slot = (jax.jit(self.runner.reset_slot)
                             if self.has_slot_state else None)
+
+    @staticmethod
+    def _zero_class_stats() -> Dict[str, float]:
+        return {"submitted": 0, "finished": 0, "finished_tokens": 0,
+                "preemptions": 0}
+
+    @property
+    def queue(self) -> List[Request]:
+        """Queued-but-unadmitted requests in admission order (class order,
+        age-ordered within a class).  A read-only snapshot — ``submit()``
+        is the only writer."""
+        return [r for cls in self.class_order for r in self._queues[cls]]
+
+    @property
+    def queued(self) -> int:
+        """Number of queued-but-unadmitted requests (O(#classes))."""
+        return sum(len(q) for q in self._queues.values())
 
     # -- jit caches ----------------------------------------------------
     def _make_decode_fn(self):
@@ -636,13 +723,18 @@ class ServeEngine:
 
         ``prompt`` is a sequence of token ids in ``[0, vocab_size)``;
         keyword args fill the :class:`Request` fields (``max_new_tokens``,
-        ``temperature``, ``eos_id``).  Validation is up-front and loud:
-        empty or out-of-vocab prompts raise (out-of-vocab ids would embed
-        as NaN and poison recycled pages), as does a request that could
-        never fit the page pool even alone (it would stall the engine
-        forever).  With prefix caching on, the chained page digests are
-        computed here so admission can pin the longest cached prefix."""
-        prompt = np.asarray(prompt, np.int32)
+        ``temperature``, ``eos_id``, ``priority`` — the latency class,
+        one of the engine's ``class_weights`` keys).  Validation is
+        up-front and loud: empty or out-of-vocab prompts raise
+        (out-of-vocab ids would embed as NaN and poison recycled pages),
+        as do unknown latency classes and a request that could never fit
+        the page pool even alone (it would stall the engine forever).
+        With prefix caching on, the chained page digests are computed
+        here so admission can pin the longest cached prefix."""
+        # defensive copy: np.asarray is zero-copy for an int32 ndarray, so
+        # caller-side mutation after submit would silently corrupt the
+        # queued prompt, its page digests, and the chunked-prefill source
+        prompt = np.array(prompt, np.int32, copy=True)
         if prompt.size == 0:
             raise ValueError("empty prompt")
         if prompt.min() < 0 or prompt.max() >= self.cfg.vocab_size:
@@ -653,7 +745,12 @@ class ServeEngine:
                 f"token ids must be in [0, {self.cfg.vocab_size}); got "
                 f"range [{prompt.min()}, {prompt.max()}]")
         req = Request(next(self._rid), prompt, **kw)
+        if req.priority not in self.class_weights:
+            raise ValueError(
+                f"unknown latency class {req.priority!r}; this engine "
+                f"serves {sorted(self.class_weights)}")
         req._t_submit = time.perf_counter()
+        req.submit_tick = self._tick
         if self.paged:
             # a request that cannot ever fit the pool alone would cycle
             # through preemption forever — reject it loudly up front
@@ -671,7 +768,8 @@ class ServeEngine:
                 req._digests = _page_digests(
                     prompt, self.block_size,
                     self._plen(req) // self.block_size)
-        self.queue.append(req)
+        self.class_stats[req.priority]["submitted"] += 1
+        self._queues[req.priority].append(req)
         return req.rid
 
     def _free_slot(self) -> Optional[int]:
@@ -710,34 +808,49 @@ class ServeEngine:
         """Move queued requests into free slots (no token cost; the prefill
         work is budgeted separately in _prefill_tick).
 
-        Preempted requests re-admit FIRST, and a restore that cannot be
-        placed yet (swap-in waiting for enough free pages) blocks new
-        admissions behind it — fresh work must not grab the pages a victim
-        was evicted to free, or the victim starves.  With prefix caching
-        the prompt's longest cached page-prefix is attached here and the
-        chunked prefill starts at the first uncached token."""
-        while self.restore_queue:
-            slot = self._free_slot()
-            if slot is None:
-                return
-            if not self._restore(slot, self.restore_queue[0]):
-                return                  # head-of-line waits for pages
-            self.restore_queue.pop(0)
-        while self.queue:
-            slot = self._free_slot()
-            if slot is None:
-                return
-            req = self.queue.pop(0)
-            req.prefill_pos = 0
-            req.cached_len = 0
-            req._published = 0
-            self.active[slot] = req
-            self.lengths[slot] = 0
-            if self.has_slot_state:
-                # the previous occupant's recurrent state must not leak
-                self.state = self._reset_slot(self.state, jnp.int32(slot))
-            if self.prefix_attach:
-                self._attach_prefix(slot, req)
+        Admission is class-ordered: for each latency class in descending
+        weight, preempted requests of that class re-admit FIRST (FIFO
+        among themselves), then fresh submissions of that class,
+        age-ordered.  A restore that cannot be placed yet (swap-in
+        waiting for enough free pages) blocks everything of its own and
+        every lighter class behind it — equal-or-lower work must not grab
+        the pages a victim was evicted to free, or the victim starves —
+        while a strictly heavier class may still jump a parked lighter
+        victim (the SLO contract).  With prefix caching the prompt's
+        longest cached page-prefix is attached here and the chunked
+        prefill starts at the first uncached token."""
+        barrier = 0.0          # classes with weight <= barrier are blocked
+        for cls in self.class_order:
+            w = self.class_weights[cls]
+            if w <= barrier:
+                continue
+            for req in [r for r in self.restore_queue if r.priority == cls]:
+                slot = self._free_slot()
+                if slot is None:
+                    return
+                if not self._restore(slot, req):
+                    # this victim (and everything lighter) waits for pages
+                    barrier = max(barrier, w)
+                    break
+                self.restore_queue.remove(req)
+            if w <= barrier:
+                continue
+            q = self._queues[cls]
+            while q:
+                slot = self._free_slot()
+                if slot is None:
+                    return
+                req = q.popleft()
+                req.prefill_pos = 0
+                req.cached_len = 0
+                req._published = 0
+                self.active[slot] = req
+                self.lengths[slot] = 0
+                if self.has_slot_state:
+                    # the previous occupant's recurrent state must not leak
+                    self.state = self._reset_slot(self.state, jnp.int32(slot))
+                if self.prefix_attach:
+                    self._attach_prefix(slot, req)
 
     def _attach_prefix(self, slot: int, req: Request) -> None:
         """Pin the longest registered page chain matching ``req``'s prompt.
@@ -965,6 +1078,7 @@ class ServeEngine:
                 logits = self._run_prefill_chunk(slot, req,
                                                  self._bucket(plen), plen)
                 self.stats["prefill_tokens"] += plen
+                self.stats["padded_tokens"] += self._bucket(plen)
                 req.prefill_pos = plen
                 self.lengths[slot] = plen
                 self._finish_prefill(slot, req, logits, finished)
@@ -987,10 +1101,12 @@ class ServeEngine:
                 n = min(remaining, bucket)
                 if self.paged and not self.alloc.ensure(
                         slot, req.prefill_pos + n):
-                    self.stats["stalled_ticks"] += 1
+                    self.stats["stall_events"] += 1
+                    self._stalled_this_tick = True
                     break                      # pool exhausted; wait
                 logits = self._run_prefill_chunk(slot, req, bucket, n)
                 budget -= bucket
+                self.stats["padded_tokens"] += bucket
                 self.stats["prefill_tokens"] += n
                 req.prefill_pos += n
                 self.lengths[slot] = req.prefill_pos
@@ -1009,12 +1125,27 @@ class ServeEngine:
         on EOS / single-token requests."""
         first = self._sample(logits[0], req)
         req.out_tokens.append(int(first))
-        req.ttft = time.perf_counter() - req._t_submit
+        req._t_first = time.perf_counter()
+        req.ttft = req._t_first - req._t_submit
+        req.first_tick = self._tick
         hit_eos = req.eos_id is not None and first == req.eos_id
         if hit_eos or req.max_new_tokens <= 1:
-            req.done = True
-            finished.append(req)
-            self._retire(slot)
+            self._finish(slot, req, finished)
+
+    def _finish(self, slot: int, req: Request, finished: List[Request],
+                ) -> None:
+        """Retire a completed request: latency bookkeeping (wall + tick
+        clocks), per-class goodput accounting, slot/page recycling."""
+        req.done = True
+        req.finish_tick = self._tick
+        if len(req.out_tokens) > 1 and req._t_first:
+            req.tpot = ((time.perf_counter() - req._t_first)
+                        / (len(req.out_tokens) - 1))
+        cs = self.class_stats[req.priority]
+        cs["finished"] += 1
+        cs["finished_tokens"] += len(req.out_tokens)
+        finished.append(req)
+        self._retire(slot)
 
     def _run_prefill_chunk(self, slot: int, req: Request, bucket: int,
                            n: int):
@@ -1099,13 +1230,20 @@ class ServeEngine:
         decode over all runnable slots; (5) retire finished requests,
         recycling their slot and pages.  If the tick made no progress and
         at least one slot stalled on pages, the allocation deadlock is
-        broken by preempting the slot with the least live KV — its progress
-        is preserved (swap or recompute, per ``preempt_policy``) and it
-        re-admits with priority."""
+        broken by preempting the cheapest victim (pages × restore cost ×
+        class weight) — its progress is preserved (swap or recompute, per
+        ``preempt_policy``) and it re-admits with priority.  With
+        ``proactive_horizon > 0`` the same eviction fires *before* the
+        stall, off the predicted page demand."""
         self._tick += 1
         self.stats["ticks"] += 1
+        self._stalled_this_tick = False
         progress0 = self.stats["prefill_tokens"] + self.stats["decode_tokens"]
-        stall0 = self.stats["stalled_ticks"]
+        # proactive preemption looks AHEAD: if the next-K-ticks page demand
+        # of the active slots exceeds what the pool can grant, evict the
+        # cheapest victim now instead of waiting for a fully stalled tick
+        if self.paged and self.proactive_horizon > 0:
+            self._preempt_proactive()
         # already-active decode slots reserve their next page BEFORE any
         # restore or admission can take it: a swap-in that consumed exactly
         # the pages its own preemption freed would re-starve the survivors
@@ -1123,16 +1261,30 @@ class ServeEngine:
         if self.paged:
             for i in decode_slots:
                 self.alloc.ensure(i, self.lengths[i] + 1)
-        self._prefill_tick(self.max_tokens_per_tick - len(decode_slots),
-                           finished)
-        live = [i for i in range(self.slots) if self._decode_ready(i)]
+        spare = self._prefill_tick(self.max_tokens_per_tick
+                                   - len(decode_slots), finished)
+        # a prefill that completed inside this tick made its slot
+        # decode-ready mid-tick; its decode token was never reserved above,
+        # so it only rides along if the prefill loop left budget — else it
+        # waits one tick (the reserved decode_slots always run)
+        reserved = set(decode_slots)
+        live = []
+        for i in range(self.slots):
+            if not self._decode_ready(i):
+                continue
+            if i in reserved:
+                live.append(i)
+            elif spare >= 1:
+                spare -= 1
+                live.append(i)
         self.stats["occupancy_sum"] += (
             sum(r is not None for r in self.active) / self.slots)
         if live:
             runnable = []
             for i in live:
                 if self.paged and not self.alloc.ensure(i, self.lengths[i] + 1):
-                    self.stats["stalled_ticks"] += 1
+                    self.stats["stall_events"] += 1
+                    self._stalled_this_tick = True
                     continue                   # stalled: re-decoded later
                 runnable.append(i)
             if runnable:
@@ -1163,22 +1315,23 @@ class ServeEngine:
                     req = self.active[i]
                     self.lengths[i] += 1
                     self.stats["decode_tokens"] += 1
+                    self.stats["padded_tokens"] += 1
                     nxt = self._sample(logits[i], req)
                     req.out_tokens.append(nxt)
                     hit_eos = req.eos_id is not None and nxt == req.eos_id
                     if (len(req.out_tokens) >= req.max_new_tokens or hit_eos
                             or self.lengths[i] >= self.max_seq - 1):
-                        req.done = True
-                        finished.append(req)
-                        self._retire(i)
+                        self._finish(i, req, finished)
         if self.paged:
             for k in ("pages_allocated", "pages_freed", "pages_shared",
                       "pages_evicted"):
                 self.stats[k] = getattr(self.alloc, k)
+        if self._stalled_this_tick:
+            self.stats["stalled_ticks"] += 1   # once per tick, ≤ ticks
         made_progress = (self.stats["prefill_tokens"]
                          + self.stats["decode_tokens"] > progress0)
         if (self.paged and not made_progress and not finished
-                and self.stats["stalled_ticks"] > stall0):
+                and self._stalled_this_tick):
             # every live slot is waiting on pages and nothing else moved:
             # a static tick would repeat forever — break the deadlock
             self._preempt_for_deadlock()
@@ -1187,10 +1340,12 @@ class ServeEngine:
     def _preempt_for_deadlock(self) -> None:
         """Two+ partially-allocated slots can wait on each other's pages
         (each request fits the pool alone, together they don't).  Preempt
-        the slot with the least live KV so the others can run — its
-        progress is *preserved* (swapped to the host arena or recomputed
-        at restore, see :meth:`_preempt`), so greedy outputs are unchanged
-        and no decoded token is ever replayed."""
+        the cheapest victim by :meth:`_victim_score` (pages × restore cost
+        × class weight — least live KV among equal-class candidates) so
+        the others can run — its progress is *preserved* (swapped to the
+        host arena or recomputed at restore, see :meth:`_preempt`), so
+        greedy outputs are unchanged and no decoded token is ever
+        replayed."""
         victims = [i for i, r in enumerate(self.active)
                    if r is not None and self.alloc.used[i] > 0]
         if len(victims) < 2:
@@ -1205,9 +1360,71 @@ class ServeEngine:
                     self._demote_swap(parked)
                     break
             return
-        slot = min(victims, key=lambda i: (len(self.active[i].out_tokens),
-                                           self.active[i].prefill_pos))
-        self._preempt(slot)
+        self._preempt(min(victims, key=self._victim_score))
+
+    def _restore_seconds(self, req: Request, live_tokens: int) -> float:
+        """Price what bringing this victim back would cost — the same
+        swap-vs-recompute arms :func:`core.noc.preempt_decision` weighs,
+        collapsed to seconds under the engine's ``preempt_policy``."""
+        n_pages = -(-live_tokens // self.block_size)
+        return noc.restore_cost_seconds(
+            n_pages, self._page_kv_bytes(), live_tokens,
+            flops_per_token=2.0 * self.cfg.param_count(active_only=True),
+            state_bytes=self._slot_state_bytes,
+            policy=self.preempt_policy)
+
+    def _victim_score(self, slot: int):
+        """Preemption-victim ordering: evict the slot whose loss costs
+        least — pages held × restore seconds × latency-class weight, so an
+        interactive request only falls when no batch victim exists.  The
+        old ``(out_tokens, prefill_pos)`` pair stays as the tie-break
+        (score is monotone in live KV, so equal-class picks are
+        unchanged); the slot index last keeps it deterministic."""
+        req = self.active[slot]
+        live = int(self.lengths[slot])
+        pages = int(self.alloc.used[slot])
+        score = (pages * self._restore_seconds(req, live)
+                 * self.class_weights[req.priority])
+        return (score, len(req.out_tokens), req.prefill_pos, slot)
+
+    def _page_demand(self, horizon: int) -> int:
+        """Pages the active slots will ask for over the next ``horizon``
+        ticks beyond what they already hold.  Mid-prefill slots can grow by
+        a whole chunk per tick; decode-ready slots by one token per tick —
+        both capped at the request's total length."""
+        need = 0
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            cur = int(self.lengths[slot])
+            total = self._prefill_target(req) + req.max_new_tokens
+            if req.prefill_pos < self._prefill_target(req):
+                grow = horizon * self.max_tokens_per_tick
+            else:
+                grow = horizon
+            future = min(total, cur + grow)
+            need += max(0, -(-future // self.block_size)
+                        - int(self.alloc.used[slot]))
+        return need
+
+    def _preempt_proactive(self) -> None:
+        """Fire a preemption BEFORE the pool stalls: when the predicted
+        next-``proactive_horizon``-ticks page demand of the active slots
+        exceeds the free pool (parked-LRU pages count as free — the
+        allocator reclaims them on demand), evict the cheapest victim by
+        :meth:`_victim_score` now, so an interactive admission never waits
+        behind a fully stalled tick.  Held while any restore is parked —
+        evicting to re-admit would just ping-pong the same pages."""
+        if self.restore_queue:
+            return
+        victims = [i for i, r in enumerate(self.active)
+                   if r is not None and self.alloc.used[i] > 0]
+        if len(victims) < 2:
+            return
+        if self._page_demand(self.proactive_horizon) <= self.alloc.free_blocks:
+            return
+        self.stats["preempt_proactive"] += 1
+        self._preempt(min(victims, key=self._victim_score))
 
     def _demote_swap(self, req: Request) -> None:
         """Convert a parked swap handle into a recompute-arm restore: free
@@ -1247,6 +1464,7 @@ class ServeEngine:
         L = int(self.lengths[slot])    # KV rows live right now
         self.stats["preemptions"] += 1
         self.stats["preempted_tokens"] += L
+        self.class_stats[req.priority]["preemptions"] += 1
         req._preempted_live = L
         if L == 0:                      # nothing cached yet: plain requeue
             req.prefill_pos = 0
@@ -1401,14 +1619,14 @@ class ServeEngine:
         done: List[Request] = []
         for _ in range(max_ticks):
             done.extend(self.step())
-            if (not self.queue and not self.restore_queue
+            if (not self.queued and not self.restore_queue
                     and all(r is None for r in self.active)):
                 return done
         if strict:
             live = [r.rid for r in self.active if r is not None]
             raise RuntimeError(
                 f"engine not drained after {max_ticks} ticks "
-                f"(queued={len(self.queue)}, "
+                f"(queued={self.queued}, "
                 f"awaiting_restore={len(self.restore_queue)}, "
                 f"active rids={live}, "
                 f"stalled_ticks={self.stats['stalled_ticks']:.0f}, "
@@ -1426,6 +1644,8 @@ class ServeEngine:
         stays out of the timed run."""
         for k in self.stats:
             self.stats[k] = 0
+        self.class_stats = {cls: self._zero_class_stats()
+                            for cls in self.class_order}
         if self.paged:
             self.alloc.reset_counters()
 

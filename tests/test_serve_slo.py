@@ -1,0 +1,318 @@
+"""SLO-aware scheduling: latency classes, cost-scored victim selection,
+proactive preemption — and the scheduler-accounting bugfix regressions.
+
+Victim selection scores candidates by pages held × restore cost (the same
+swap-vs-recompute pricing ``core.noc.preempt_decision`` uses) × latency-
+class weight, so a batch request always falls before an equal-cost
+interactive one.  Proactive preemption (``proactive_horizon > 0``) fires
+on *predicted* page-pool exhaustion, before any tick stalls.  The
+acceptance bar is unchanged from test_preemption: greedy outputs token-
+identical to an unpressured run on every new preemption path.
+
+The bugfix regressions pinned here:
+- per-tick padded-token budget is never overspent by a prefill that
+  completes (and becomes decode-ready) mid-tick;
+- ``stalled_ticks`` counts ticks (≤ ``ticks``), with per-slot events in
+  the new ``stall_events`` counter;
+- ``submit()`` copies the caller's prompt buffer (an int32 ndarray used
+  to be aliased zero-copy).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import noc
+from repro.models import model as M
+from repro.serve import ServeEngine
+
+_KW = dict(max_seq=64, slots=2, block_size=8, prefill_buckets=(16, 64))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("granite-3-2b"))
+    params = M.init_params(cfg, jax.random.key(0), dtype=jnp.float32)
+    return cfg, params
+
+
+def _drain(cfg, params, reqs, max_ticks=400, **extra):
+    eng = ServeEngine(cfg, params, **_KW, **extra)
+    for p, kw in reqs:
+        eng.submit(p, **kw)
+    done = eng.run_until_drained(max_ticks=max_ticks)
+    return {r.rid: tuple(r.out_tokens) for r in done}, eng
+
+
+# ---------------------------------------------------------------------------
+# restore cost model (pure host, no device)
+# ---------------------------------------------------------------------------
+
+def test_restore_cost_seconds_policy_arms():
+    kw = dict(n_pages=4, page_bytes=1 << 20, tokens=64, flops_per_token=1e9)
+    s = noc.swap_cost(4, 1 << 20)["seconds"]
+    r = noc.recompute_cost(64, 1e9)["seconds"]
+    assert noc.restore_cost_seconds(**kw, policy="swap") == s
+    assert noc.restore_cost_seconds(**kw, policy="recompute") == r
+    assert noc.restore_cost_seconds(**kw, policy="auto") == min(s, r)
+
+
+def test_restore_cost_seconds_tracks_preempt_decision(monkeypatch):
+    """auto's collapsed seconds always equals the seconds of the arm
+    ``preempt_decision`` picks — the victim score and the preemption
+    policy can never price the same victim differently."""
+    monkeypatch.setattr(noc, "SWAP_LINK_BYTES_PER_S", 1e9)
+    monkeypatch.setattr(noc, "RECOMPUTE_FLOPS_PER_S", 1e12)
+    for pb in (1 << s for s in range(8, 28, 2)):
+        kw = dict(n_pages=8, page_bytes=pb, tokens=128, flops_per_token=1e8)
+        arm = noc.preempt_decision(**kw)
+        cost = {"swap": noc.swap_cost(8, pb)["seconds"],
+                "recompute": noc.recompute_cost(128, 1e8)["seconds"]}[arm]
+        assert noc.restore_cost_seconds(**kw, policy="auto") == cost
+
+
+# ---------------------------------------------------------------------------
+# victim scoring
+# ---------------------------------------------------------------------------
+
+def test_class_weight_dominates_equal_cost_victims(setup):
+    """Two lockstep decoders — identical pages held, identical restore
+    cost.  The OLD key (out_tokens, prefill_pos) ties and would evict
+    slot 0 = the interactive request (admitted first, class-ordered);
+    the class weight must make the batch request fall instead."""
+    cfg, params = setup
+    reqs = [(list(range(1, 13)), dict(max_new_tokens=40,
+                                      priority="interactive")),
+            (list(range(5, 17)), dict(max_new_tokens=40, priority="batch"))]
+    _, eng = _drain(cfg, params, reqs, num_blocks=11,
+                    prefix_caching=False)
+    assert eng.stats["preemptions"] >= 1
+    assert eng.class_stats["batch"]["preemptions"] >= 1
+    assert eng.class_stats["interactive"]["preemptions"] == 0
+
+
+def test_victim_score_cost_term_matches_noc(setup):
+    """The engine's per-victim restore seconds is exactly the noc model
+    evaluated at the victim's page count and live tokens, and the score
+    is monotone in live KV for equal-class victims (the old least-
+    progress pick is preserved within a class)."""
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, **_KW, preempt_policy="swap")
+    eng.submit(list(range(1, 13)), max_new_tokens=40)
+    eng.submit(list(range(5, 17)), max_new_tokens=30)
+    for _ in range(6):
+        eng.step()
+    req0, req1 = eng.active[0], eng.active[1]
+    assert req0 is not None and req1 is not None
+    live = int(eng.lengths[0])
+    n_pages = -(-live // eng.block_size)
+    want = noc.restore_cost_seconds(
+        n_pages, eng._page_kv_bytes(), live,
+        flops_per_token=2.0 * cfg.param_count(active_only=True),
+        state_bytes=eng._slot_state_bytes, policy="swap")
+    assert eng._restore_seconds(req0, live) == want
+    assert want == noc.swap_cost(n_pages, eng._page_kv_bytes(),
+                                 eng._slot_state_bytes)["seconds"]
+    # same class, slot 1 decoded further by construction after the prompt
+    # gap closes — rerun a few ticks and compare scores at equal class
+    s0, s1 = eng._victim_score(0), eng._victim_score(1)
+    if eng.lengths[0] < eng.lengths[1]:
+        assert s0 < s1
+    elif eng.lengths[1] < eng.lengths[0]:
+        assert s1 < s0
+
+
+def test_unknown_latency_class_rejected(setup):
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, **_KW)
+    with pytest.raises(ValueError, match="unknown latency class"):
+        eng.submit([1, 2, 3], priority="best-effort")
+    with pytest.raises(ValueError):
+        ServeEngine(cfg, params, **_KW, proactive_horizon=-1)
+    with pytest.raises(ValueError):
+        ServeEngine(cfg, params, **_KW,
+                    class_weights={"interactive": 0.0})
+
+
+# ---------------------------------------------------------------------------
+# class-ordered admission
+# ---------------------------------------------------------------------------
+
+def test_admission_is_class_then_age_ordered(setup):
+    """batch, interactive, batch, interactive submitted in that order on a
+    1-slot engine: both interactive requests must start (first_tick)
+    before either batch one, FIFO within each class."""
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, max_seq=64, slots=1, block_size=8,
+                      prefill_buckets=(16, 64))
+    rids = [eng.submit(list(range(1 + i, 9 + i)), max_new_tokens=4,
+                       priority=p)
+            for i, p in enumerate(("batch", "interactive",
+                                   "batch", "interactive"))]
+    done = {r.rid: r for r in eng.run_until_drained(max_ticks=200)}
+    order = sorted(rids, key=lambda rid: done[rid].first_tick)
+    assert order == [rids[1], rids[3], rids[0], rids[2]]
+
+
+# ---------------------------------------------------------------------------
+# proactive preemption
+# ---------------------------------------------------------------------------
+
+def test_proactive_fires_before_any_stall(setup):
+    """With a horizon the eviction happens on *predicted* exhaustion: the
+    first preemption lands while stalled_ticks is still zero (deadlock-
+    only would need a fully stalled tick first), and outputs stay
+    token-identical to the unpressured run."""
+    cfg, params = setup
+    reqs = [(list(range(1, 13)), dict(max_new_tokens=40)),
+            (list(range(5, 17)), dict(max_new_tokens=40))]
+    base, beng = _drain(cfg, params, reqs)
+    assert beng.stats["preemptions"] == 0
+
+    eng = ServeEngine(cfg, params, **_KW, num_blocks=11,
+                      proactive_horizon=4)
+    for p, kw in reqs:
+        eng.submit(p, **kw)
+    for _ in range(400):
+        eng.step()
+        if eng.stats["preempt_proactive"] >= 1:
+            break
+    assert eng.stats["preempt_proactive"] >= 1
+    assert eng.stats["stalled_ticks"] == 0
+    done = eng.run_until_drained(max_ticks=400)
+    toks = {r.rid: tuple(r.out_tokens) for r in done}
+    assert toks == base
+
+
+def test_proactive_never_fires_on_roomy_pool(setup):
+    """Full pool: predicted demand always fits, so a horizon must not
+    change behavior at all."""
+    cfg, params = setup
+    reqs = [(list(range(1, 13)), dict(max_new_tokens=40)),
+            (list(range(5, 17)), dict(max_new_tokens=40))]
+    _, eng = _drain(cfg, params, reqs, proactive_horizon=8)
+    assert eng.stats["preempt_proactive"] == 0
+    assert eng.stats["preemptions"] == 0
+
+
+@pytest.mark.parametrize("policy", ["swap", "recompute", "auto"])
+def test_class_mixed_oversubscription_token_identity(setup, policy):
+    """Interactive + batch mixed under an oversubscribed pool with
+    proactive preemption on: greedy outputs token-identical to the
+    unpressured run for every preempt policy, and no decoded token is
+    ever replayed."""
+    cfg, params = setup
+    reqs = [(list(range(1, 13)), dict(max_new_tokens=40, priority="batch")),
+            (list(range(5, 17)), dict(max_new_tokens=40, priority="batch")),
+            (list(range(3, 9)), dict(max_new_tokens=4,
+                                     priority="interactive")),
+            (list(range(7, 15)), dict(max_new_tokens=6,
+                                      priority="interactive"))]
+    base, beng = _drain(cfg, params, reqs)
+    assert beng.stats["preemptions"] == 0
+    toks, eng = _drain(cfg, params, reqs, num_blocks=11,
+                       preempt_policy=policy, proactive_horizon=4)
+    assert toks == base
+    assert eng.stats["preemptions"] >= 1
+    assert eng.stats["decode_tokens"] == beng.stats["decode_tokens"]
+
+
+# ---------------------------------------------------------------------------
+# per-class stats
+# ---------------------------------------------------------------------------
+
+def test_class_stats_accounting(setup):
+    cfg, params = setup
+    reqs = [(list(range(1, 9)), dict(max_new_tokens=4,
+                                     priority="interactive")),
+            (list(range(2, 10)), dict(max_new_tokens=4,
+                                      priority="interactive")),
+            (list(range(3, 11)), dict(max_new_tokens=6, priority="batch"))]
+    toks, eng = _drain(cfg, params, reqs)
+    ci = eng.class_stats["interactive"]
+    cb = eng.class_stats["batch"]
+    assert ci["submitted"] == 2 and ci["finished"] == 2
+    assert cb["submitted"] == 1 and cb["finished"] == 1
+    assert ci["finished_tokens"] == 8 and cb["finished_tokens"] == 6
+    assert (ci["finished_tokens"] + cb["finished_tokens"]
+            == sum(len(t) for t in toks.values()))
+    total_preempt = sum(c["preemptions"]
+                       for c in eng.class_stats.values())
+    assert total_preempt == eng.stats["preemptions"]
+    eng.reset_stats()
+    assert eng.class_stats["interactive"]["submitted"] == 0
+
+
+def test_latency_fields_populated(setup):
+    """first/finish tick clocks and tpot land on every finished request —
+    the traffic harness's deterministic metrics depend on them."""
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, **_KW)
+    eng.submit(list(range(1, 9)), max_new_tokens=4)
+    (req,) = eng.run_until_drained(max_ticks=100)
+    assert req.first_tick is not None and req.finish_tick is not None
+    assert req.submit_tick <= req.first_tick <= req.finish_tick
+    assert req.ttft is not None and req.ttft > 0
+    assert req.tpot is not None and req.tpot > 0
+
+
+# ---------------------------------------------------------------------------
+# bugfix regressions
+# ---------------------------------------------------------------------------
+
+def test_tick_budget_never_overspent_by_midtick_prefill(setup):
+    """A prefill that completes mid-tick makes its slot decode-ready; its
+    first decode token must be charged against the tick budget (deferred
+    a tick when nothing is left), so padded tokens per tick never exceed
+    ``max_tokens_per_tick``.  Budget == the one bucket size: the prefill
+    chunk spends the whole budget, the old code decoded on top of it."""
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, max_seq=64, slots=2, block_size=8,
+                      prefill_buckets=(16,), max_tokens_per_tick=16)
+    for i in range(3):
+        eng.submit(list(range(1 + i, 13 + i)), max_new_tokens=6)
+    deltas, prev = [], 0
+    for _ in range(200):
+        eng.step()
+        deltas.append(eng.stats["padded_tokens"] - prev)
+        prev = eng.stats["padded_tokens"]
+        if (not eng.queued and not eng.restore_queue
+                and all(r is None for r in eng.active)):
+            break
+    else:
+        pytest.fail("engine did not drain")
+    assert max(deltas) <= 16, deltas
+    # the deferral actually happened: some tick spent the full budget on
+    # a completing prefill and pushed the new decode to the next tick
+    assert any(d == 16 for d in deltas), deltas
+
+
+def test_stalled_ticks_is_per_tick_not_per_slot(setup):
+    """Pressured pool with two stalling slots: the per-slot counter
+    (stall_events) can exceed the per-tick one, and stalled_ticks can
+    never exceed ticks (the seed engine double-counted)."""
+    cfg, params = setup
+    reqs = [(list(range(1, 13)), dict(max_new_tokens=40)),
+            (list(range(5, 17)), dict(max_new_tokens=40))]
+    _, eng = _drain(cfg, params, reqs, num_blocks=11,
+                    preempt_policy="recompute")
+    s = eng.stats
+    assert s["stalled_ticks"] >= 1                # pressure really happened
+    assert s["stalled_ticks"] <= s["ticks"]
+    assert s["stall_events"] >= s["stalled_ticks"]
+
+
+def test_submit_copies_caller_prompt_buffer(setup):
+    """Mutating the submitted ndarray afterwards must not change what the
+    engine prefills (np.asarray used to alias int32 buffers)."""
+    cfg, params = setup
+    prompt = np.arange(1, 13, dtype=np.int32)
+    want, _ = _drain(cfg, params,
+                     [(prompt.copy(), dict(max_new_tokens=6))])
+    eng = ServeEngine(cfg, params, **_KW)
+    rid = eng.submit(prompt, max_new_tokens=6)
+    prompt[:] = 1                                  # caller reuses the buffer
+    done = eng.run_until_drained(max_ticks=100)
+    got = {r.rid: tuple(r.out_tokens) for r in done}
+    assert got[rid] == want[0]

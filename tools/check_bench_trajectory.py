@@ -55,6 +55,14 @@ def main() -> int:
         # family serving leg (hybrid by default) — skips gracefully when
         # the previous artifact predates it, so first runs don't trip
         ("family serve tok/s", ("family", "tok_s"), True),
+        # traffic leg: per-class goodput under Poisson arrivals with
+        # proactive SLO preemption — also skips on older artifacts
+        ("traffic interactive goodput tok/s",
+         ("traffic", "poisson", "proactive", "classes", "interactive",
+          "goodput_tok_s"), True),
+        ("traffic batch goodput tok/s",
+         ("traffic", "poisson", "proactive", "classes", "batch",
+          "goodput_tok_s"), True),
     ]
     failures = []
     for name, path, up in metrics:
