@@ -75,6 +75,7 @@ def _drive(eng: ServeEngine, reqs) -> dict:
         "kv_mb": eng.kv_cache_bytes() / 1e6,
         "prefill_traces": int(eng.stats["prefill_traces"]),
         "prefill_tokens": int(eng.stats["prefill_tokens"]),
+        "prefill_dispatches": int(eng.stats["prefill_dispatches"]),
         "prefix_hit_tokens": int(eng.stats["prefix_hit_tokens"]),
         "prefix_hit_rate": eng.prefix_hit_rate,
         "preemptions": int(eng.stats["preemptions"]),
@@ -183,6 +184,80 @@ def run_shared_prefix(cfg, params, slots: int, max_seq: int,
     return {"cache_on": _jsonable(res["cache_on"]),
             "cache_off": _jsonable(res["cache_off"]),
             "ttft_p50_speedup": ttft_speedup, "outputs_match": bool(match)}
+
+
+def run_long_prompt(cfg, params, small: int, big: int, n_requests: int,
+                    seed: int = 0, passes: int = 3, big_buckets=None) -> dict:
+    """Long-prompt TTFT A/B: buckets capped at ``small`` vs a ``big``
+    bucket, same stream, same per-tick budget.
+
+    Every prompt is >= 4x the ``small`` bucket.  The budget affords the
+    ``big`` bucket but not the auto-appended ``max_seq`` one, so the
+    small-bucket engine's budget fallback chunks each prompt at ``small``
+    (many thin dispatches) while the big-bucket engine prefills it in one
+    — the q-tiled kernel is what lets that bucket exist at all.  Asserts
+    (CI-enforcing, the smoke lane runs this): token-identical greedy
+    outputs, strictly fewer prefill dispatches, and a lower TTFT p50 for
+    the big side; the warmup pass covers every (chunk, table)-bucket jit
+    so the timed passes trace nothing."""
+    header(f"serve long-prompt: buckets-{small} vs buckets-{big}")
+    max_seq = big + 64
+    budget = big + 8           # affords `big`, never the max_seq bucket
+    rng = np.random.default_rng(seed)
+    reqs = [(rng.integers(0, cfg.vocab_size,
+                          int(rng.integers(4 * small, big + 33))).tolist(),
+             dict(max_new_tokens=4)) for _ in range(n_requests)]
+    low = (max(8, small // 16), max(16, small // 4))   # (32, 128) at 512
+    sides = {"small": low + (small,),
+             "big": tuple(big_buckets) if big_buckets
+             else low + (small, big)}
+    res = {}
+    for name, buckets in sides.items():
+        eng = ServeEngine(cfg, params, paged=True, max_seq=max_seq, slots=2,
+                          prefill_buckets=buckets, prefix_caching=False,
+                          max_tokens_per_tick=budget)
+        # warmup: one full pass of the same stream compiles every
+        # (chunk-bucket, table-bucket) jit the timed passes will hit —
+        # including the new big-bucket ones
+        for p, kw in reqs:
+            eng.submit(p, **kw)
+        eng.run_until_drained()
+        ttfts = []
+        for _ in range(passes):
+            eng.reset_stats()          # counters stay single-pass; only the
+            res[name] = _drive(eng, reqs)  # pooled TTFTs span all passes
+            ttfts += res[name]["ttfts"]
+            assert res[name]["prefill_traces"] == 0, (
+                f"long_prompt/{name}: warmup missed "
+                f"{res[name]['prefill_traces']} prefill jits")
+        res[name]["ttft_p50_ms"] = _pct(ttfts, 50) * 1e3
+        res[name]["ttft_p95_ms"] = _pct(ttfts, 95) * 1e3
+        res[name]["buckets"] = list(eng.prefill_buckets)
+
+    match = res["big"]["tokens"] == res["small"]["tokens"]
+    assert match, "long_prompt: big-bucket outputs diverged from small-bucket"
+    d_small = res["small"]["prefill_dispatches"]
+    d_big = res["big"]["prefill_dispatches"]
+    assert d_big < d_small, (
+        f"long_prompt: big bucket did not reduce prefill dispatches "
+        f"({d_big} vs {d_small})")
+    p50_small, p50_big = (res["small"]["ttft_p50_ms"],
+                          res["big"]["ttft_p50_ms"])
+    assert p50_big < p50_small, (
+        f"long_prompt: buckets-{big} TTFT p50 ({p50_big:.2f}ms) did not "
+        f"beat buckets-{small} ({p50_small:.2f}ms)")
+    for name, r in res.items():
+        emit(f"serve_longprompt_{name}", r["ttft_p50_ms"] * 1e3,
+             f"ttft_p50_ms={r['ttft_p50_ms']:.2f};"
+             f"ttft_p95_ms={r['ttft_p95_ms']:.2f};"
+             f"dispatches={r['prefill_dispatches']};tok_s={r['tok_s']:.1f}")
+    emit("serve_longprompt_speedup", 0.0,
+         f"ttft_p50_speedup={p50_small / max(p50_big, 1e-9):.2f};"
+         f"dispatch_ratio={d_small / max(d_big, 1):.2f};outputs_match=True")
+    return {"small": _jsonable(res["small"]), "big": _jsonable(res["big"]),
+            "ttft_p50_speedup": p50_small / max(p50_big, 1e-9),
+            "dispatch_ratio": d_small / max(d_big, 1),
+            "outputs_match": bool(match)}
 
 
 def run_sharded(cfg, params, slots: int, max_seq: int, n_requests: int,
@@ -549,7 +624,8 @@ def run_preempted(cfg, params, max_seq: int, seq_shards: int = 1,
 
 def run(slots: int = 8, max_seq: int = 128, n_requests: int = 32,
         seed: int = 0, out_json: str = "BENCH_serve.json",
-        seq_shards: int = 1, family_arch: str = "zamba2-7b"):
+        seq_shards: int = 1, family_arch: str = "zamba2-7b",
+        lp_small: int = 512, lp_big: int = 2048, lp_buckets=None):
     cfg = reduced(get_config("stablelm-1.6b"))
     params = M.init_params(cfg, jax.random.key(0), dtype=jnp.float32)
     results = {
@@ -565,6 +641,12 @@ def run(slots: int = 8, max_seq: int = 128, n_requests: int = 32,
         "traffic": run_traffic(cfg, params, max_seq,
                                max(24, 3 * n_requests), seed),
         "family": run_family(family_arch, slots, max_seq, n_requests, seed),
+        # the stream is deliberately longer than the slot count: queued
+        # requests' TTFT includes their predecessors' prefill wall time,
+        # so the dispatch-overhead gap compounds over the queue
+        "long_prompt": run_long_prompt(cfg, params, lp_small, lp_big,
+                                       max(8, n_requests), seed,
+                                       big_buckets=lp_buckets),
     }
     if seq_shards > 1:
         results["sharded"] = run_sharded(cfg, params, slots, max_seq,
@@ -592,17 +674,24 @@ def main():
                          "through the CacheSpec runner engine, assert "
                          "token identity vs the dense decode_step "
                          "reference, and report its tok/s")
+    ap.add_argument("--prefill-buckets", default=None,
+                    help="comma-separated bucket override for the "
+                         "long-prompt leg's big-bucket engine (default "
+                         "32,128,<small>,<big>)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run (tiny model, few requests)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
+    lp_buckets = (tuple(int(b) for b in args.prefill_buckets.split(","))
+                  if args.prefill_buckets else None)
     if args.smoke:
         run(slots=2, max_seq=64, n_requests=8, out_json=args.out,
-            seq_shards=args.seq_shards, family_arch=args.arch)
+            seq_shards=args.seq_shards, family_arch=args.arch,
+            lp_small=64, lp_big=256, lp_buckets=lp_buckets)
     else:
         run(slots=args.slots, max_seq=args.max_seq, n_requests=args.requests,
             out_json=args.out, seq_shards=args.seq_shards,
-            family_arch=args.arch)
+            family_arch=args.arch, lp_buckets=lp_buckets)
 
 
 if __name__ == "__main__":

@@ -170,17 +170,20 @@ def gather_pages(pages, block_table):
 
 
 def paged_prefill_attention(q, k_pages, v_pages, block_table, *, q_offset,
-                            length, window=None):
+                            length, window=None, q_tile=None):
     """Prefill-chunk attention over paged KV (chunk K/V already scattered).
 
     Kernel path: scalar-prefetch page gather inside the Pallas index_map —
-    no host-side linearization at all.  Fallback: gather exactly the pages
-    in ``block_table`` (callers pass a prefix-length-bucketed slice, so the
-    copy volume tracks the live prefix, not the pool)."""
+    no host-side linearization at all; ``q_tile`` sizes its query tile in
+    chunk positions (None: VMEM-budget auto, see
+    ``prefill_attention.resolve_q_tile``).  Fallback: gather exactly the
+    pages in ``block_table`` (callers pass a prefix-length-bucketed slice,
+    so the copy volume tracks the live prefix, not the pool); the ref path
+    is dense so ``q_tile`` has no effect there."""
     if _use_pallas() and window is None:
         return _pf.paged_prefill_attention(
             q, k_pages, v_pages, block_table, q_offset=q_offset,
-            length=length, interpret=_interp())
+            length=length, q_tile=q_tile, interpret=_interp())
     k_lin = gather_pages(k_pages, block_table)[None]
     v_lin = gather_pages(v_pages, block_table)[None]
     return ref.flash_attention(q, k_lin, v_lin, causal=True,
@@ -190,11 +193,13 @@ def paged_prefill_attention(q, k_pages, v_pages, block_table, *, q_offset,
 
 
 def paged_prefill_attention_partial(q, k_pages, v_pages, block_table, *,
-                                    q_offset, length, skip_null: bool = False):
+                                    q_offset, length, skip_null: bool = False,
+                                    q_tile=None):
     if _use_pallas():
         return _pf.paged_prefill_attention_partial(
             q, k_pages, v_pages, block_table, q_offset=q_offset,
-            length=length, skip_null=skip_null, interpret=_interp())
+            length=length, skip_null=skip_null, q_tile=q_tile,
+            interpret=_interp())
     return ref.paged_prefill_attention_partial(
         q, k_pages, v_pages, block_table, q_offset=q_offset, length=length,
         skip_null=skip_null)

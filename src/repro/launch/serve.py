@@ -38,6 +38,13 @@ def main():
                     help="physical page pool size (default: full capacity)")
     ap.add_argument("--token-budget", type=int, default=None,
                     help="max padded tokens (prefill+decode) per tick")
+    ap.add_argument("--prefill-buckets", default=None,
+                    help="comma-separated chunk sizes for chunked prefill "
+                         "(default 32,128,512,2048; each clamps to "
+                         "--max-seq, which is always included)")
+    ap.add_argument("--q-tile", type=int, default=None,
+                    help="prefill-kernel query-tile size in chunk positions "
+                         "(default: auto-sized to the kernel VMEM budget)")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable shared-prompt-page prefix caching")
     ap.add_argument("--seq-shards", type=int, default=1,
@@ -81,6 +88,10 @@ def main():
 
     paged = None if not args.dense else False
     prefix_caching = False if (args.no_prefix_cache or args.dense) else None
+    ekw = {}
+    if args.prefill_buckets:
+        ekw["prefill_buckets"] = tuple(
+            int(b) for b in args.prefill_buckets.split(","))
     eng = ServeEngine(cfg, params, max_seq=args.max_seq, slots=args.slots,
                       paged=paged, block_size=args.block_size,
                       num_blocks=args.num_blocks,
@@ -89,7 +100,8 @@ def main():
                       seq_shards=args.seq_shards,
                       preempt_policy=args.preempt_policy,
                       swap_pages=args.swap_pages,
-                      proactive_horizon=args.proactive_horizon)
+                      proactive_horizon=args.proactive_horizon,
+                      q_tile=args.q_tile, **ekw)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for i in range(args.requests):
@@ -117,6 +129,7 @@ def main():
           f"({eng.kv_cache_bytes() / 1e6:.1f} MB), "
           f"occupancy={eng.mean_occupancy:.2f}, "
           f"prefill_traces={eng.stats['prefill_traces']:.0f}, "
+          f"prefill_dispatches={eng.stats['prefill_dispatches']:.0f}, "
           f"prefix_hit_tokens={eng.stats['prefix_hit_tokens']:.0f}, "
           f"preemptions={eng.stats['preemptions']:.0f} "
           f"(swap={eng.stats['preempt_swaps']:.0f}/"

@@ -270,7 +270,7 @@ def attention_decode_paged(p, x, cfg: ModelConfig, kp_all, vp_all,
 
 def attention_prefill_paged(p, x, positions, cfg: ModelConfig, kp_all, vp_all,
                             layer_idx, block_table, q_offset, length, *,
-                            window=None, seq_axis=None):
+                            window=None, seq_axis=None, q_tile=None):
     """Chunked prefill of ONE sequence (batch 1) against paged KV.
 
     x [1,C,d] is the chunk at global positions [q_offset, q_offset+C);
@@ -288,7 +288,12 @@ def attention_prefill_paged(p, x, positions, cfg: ModelConfig, kp_all, vp_all,
     are 0, so their K/V scatter hits the local null page and attention
     skips them — and per-shard (acc, m, l) prefill partials merge via
     ``core.noc.tree_softmax_combine``, causal masking staying on global
-    positions."""
+    positions.
+
+    ``q_tile`` threads through to the kernel's query-tile size (chunk
+    positions; None = VMEM-budget auto) — it never changes results, only
+    the kernel's VMEM footprint, which is what lets big prefill buckets
+    through."""
     _, c, _ = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     bs = kp_all.shape[3]
@@ -313,7 +318,7 @@ def attention_prefill_paged(p, x, positions, cfg: ModelConfig, kp_all, vp_all,
     if seq_axis is None:
         o = ops.paged_prefill_attention(q, kp, vp, block_table,
                                         q_offset=q_offset, length=length,
-                                        window=window)
+                                        window=window, q_tile=q_tile)
     else:
         if window is not None:
             raise NotImplementedError(
@@ -321,7 +326,7 @@ def attention_prefill_paged(p, x, positions, cfg: ModelConfig, kp_all, vp_all,
         from repro.core import noc
         acc, m, l = ops.paged_prefill_attention_partial(
             q, kp, vp, block_table, q_offset=q_offset, length=length,
-            skip_null=True)
+            skip_null=True, q_tile=q_tile)
         o = noc.tree_softmax_combine(acc, m, l, seq_axis).astype(x.dtype)
     y = linear(p["wo"], o.reshape(1, c, h * hd))
     return y, kp_all, vp_all

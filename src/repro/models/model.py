@@ -378,7 +378,7 @@ def _last_token(x, lengths):
 
 def prefill_paged(cfg: ModelConfig, params, state, *, tokens, length,
                   q_offset, block_table, attn_window: Optional[int] = None,
-                  seq_axis: Optional[str] = None):
+                  seq_axis: Optional[str] = None, q_tile: Optional[int] = None):
     """One *chunk* of a single-sequence prefill into the paged KV cache.
 
     tokens [1, C] (right-padded chunk); length (scalar int32) = valid rows;
@@ -410,7 +410,8 @@ def prefill_paged(cfg: ModelConfig, params, state, *, tokens, length,
         h = layers.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
         y, kp_all, vp_all = layers.attention_prefill_paged(
             lp["attn"], h, positions, cfg, kp_all, vp_all, li, block_table,
-            q_offset, length, window=attn_window, seq_axis=seq_axis)
+            q_offset, length, window=attn_window, seq_axis=seq_axis,
+            q_tile=q_tile)
         xc = xc + y
         h2 = layers.rmsnorm(lp["ln2"], xc, cfg.norm_eps)
         if cfg.family == "moe":
@@ -529,7 +530,8 @@ def _slot_put(a, update, slot, axis: int):
 def serve_prefill_chunk(cfg: ModelConfig, params, state, *, tokens, length,
                         q_offset, block_table, slot,
                         attn_window: Optional[int] = None,
-                        seq_axis: Optional[str] = None):
+                        seq_axis: Optional[str] = None,
+                        q_tile: Optional[int] = None):
     """One chunk of a single-sequence prefill against the serve state.
 
     tokens [1, C] (right-padded); length (scalar int32) = valid rows;
@@ -546,7 +548,8 @@ def serve_prefill_chunk(cfg: ModelConfig, params, state, *, tokens, length,
     if cfg.family in PAGED_FAMILIES:
         return prefill_paged(cfg, params, state, tokens=tokens, length=length,
                              q_offset=q_offset, block_table=block_table,
-                             attn_window=attn_window, seq_axis=seq_axis)
+                             attn_window=attn_window, seq_axis=seq_axis,
+                             q_tile=q_tile)
     x = layers.embed(params["embed"], tokens)
     x = hint(x, "activation")
     if cfg.rwkv:
@@ -610,7 +613,7 @@ def serve_prefill_chunk(cfg: ModelConfig, params, state, *, tokens, length,
             y, kp_all, vp_all = layers.attention_prefill_paged(
                 sp["attn"], h, positions, cfg, kp_all, vp_all, gi,
                 block_table, q_offset, length, window=attn_window,
-                seq_axis=seq_axis)
+                seq_axis=seq_axis, q_tile=q_tile)
             xc = xc + y
             xc = xc + layers.ffn(sp["ffn"],
                                  layers.rmsnorm(sp["ln2"], xc, cfg.norm_eps))

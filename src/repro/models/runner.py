@@ -125,10 +125,12 @@ class ModelRunner:
     page axis, slot state replicated — see :meth:`state_partition_specs`).
     """
 
-    def __init__(self, cfg: ModelConfig, slots: int, max_seq: int):
+    def __init__(self, cfg: ModelConfig, slots: int, max_seq: int,
+                 q_tile: Optional[int] = None):
         self.cfg = cfg
         self.slots = slots
         self.max_seq = max_seq
+        self.q_tile = q_tile        # prefill-kernel query-tile override
         self.spec = cache_spec(cfg)
 
     # -- state ---------------------------------------------------------
@@ -169,7 +171,7 @@ class ModelRunner:
         return M.serve_prefill_chunk(self.cfg, params, state, tokens=tokens,
                                      length=length, q_offset=q_offset,
                                      block_table=block_table, slot=slot,
-                                     seq_axis=seq_axis)
+                                     seq_axis=seq_axis, q_tile=self.q_tile)
 
     # -- slot-state lifecycle (admission / preemption / restore) -------
     def reset_slot(self, state, slot):

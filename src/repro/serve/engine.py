@@ -115,6 +115,7 @@ from repro import compat
 from repro.configs.base import ModelConfig
 from repro.core import noc
 from repro.kernels import ops
+from repro.kernels import prefill_attention as pf_kernel
 from repro.models import model as M
 from repro.models.runner import ModelRunner
 
@@ -385,14 +386,16 @@ class BlockAllocator:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_seq: int = 512,
                  slots: int = 8, seed: int = 0,
-                 prefill_buckets=(32, 128, 512), paged: Optional[bool] = None,
+                 prefill_buckets=(32, 128, 512, 2048),
+                 paged: Optional[bool] = None,
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  max_tokens_per_tick: Optional[int] = None,
                  prefix_caching: Optional[bool] = None,
                  seq_shards: int = 1, preempt_policy: str = "auto",
                  swap_pages: Optional[int] = None,
                  class_weights: Optional[Dict[str, float]] = None,
-                 proactive_horizon: int = 0):
+                 proactive_horizon: int = 0,
+                 q_tile: Optional[int] = None):
         """Stand up a serving engine over ``params``.
 
         Args:
@@ -404,6 +407,9 @@ class ServeEngine:
           seed: RNG seed for temperature sampling.
           prefill_buckets: chunk sizes for chunked prefill; each bucket is
             jit-compiled once and cached (``max_seq`` is always included).
+            Buckets above 512 are fine — the q-tiled prefill kernel's
+            VMEM scratch is sized by ``q_tile``, not the chunk — and are
+            validated against the kernel's VMEM budget at construction.
           paged: None (default) serves through the family-agnostic
             CacheSpec runner — paged KV where the family has attention
             KV components (dense/moe/hybrid), slot-state-only continuous
@@ -448,6 +454,11 @@ class ServeEngine:
             ``pages x restore cost x class weight`` is preempted *before*
             anything stalls — progress-preserving, so greedy outputs stay
             token-identical either way.
+          q_tile: prefill-kernel query-tile size in chunk positions
+            (default None = auto: largest power of two whose scratch fits
+            the kernel's VMEM budget, so big buckets tile and small ones
+            run single-tile).  Never changes results — only the kernel's
+            VMEM footprint and dispatch granularity.
         """
         self.cfg = cfg
         self.params = params
@@ -457,7 +468,8 @@ class ServeEngine:
         self.dtype = jax.tree.leaves(params)[0].dtype
         # Family behavior is fully described by the CacheSpec contract —
         # cfg.family is never consulted past this constructor.
-        self.runner = ModelRunner(cfg, slots, max_seq)
+        self.q_tile = None if q_tile is None else int(q_tile)
+        self.runner = ModelRunner(cfg, slots, max_seq, q_tile=self.q_tile)
         spec = self.runner.spec
         if paged and not spec.has_paged:
             raise ValueError(
@@ -506,6 +518,23 @@ class ServeEngine:
         # prompt fits some bucket
         bks = sorted({min(b, max_seq) for b in prefill_buckets} | {max_seq})
         self.prefill_buckets = tuple(bks)
+        if self.paged:
+            # price every bucket against the q-tiled kernel's VMEM scratch
+            # budget NOW — an oversized tile would otherwise OOM only on
+            # TPU, deep inside the first prefill dispatch
+            g = max(1, cfg.n_heads // max(1, cfg.n_kv_heads))
+            for b in self.prefill_buckets:
+                t = pf_kernel.resolve_q_tile(b, g, cfg.hd, block_size,
+                                             self.q_tile)
+                need = pf_kernel.q_tile_vmem_bytes(t, g, cfg.hd, block_size)
+                if need > pf_kernel.DEFAULT_VMEM_BUDGET:
+                    raise ValueError(
+                        f"prefill bucket {b} needs a [{t}*{g}, {cfg.hd}] "
+                        f"query tile = {need} VMEM bytes, over the kernel "
+                        f"budget ({pf_kernel.DEFAULT_VMEM_BUDGET}); shrink "
+                        f"the q_tile knob (or leave it None for the "
+                        f"VMEM-budget auto tile) or drop the bucket from "
+                        f"prefill_buckets")
         self.max_tokens_per_tick = (max_tokens_per_tick if max_tokens_per_tick
                                     else slots + self.prefill_buckets[-1])
         if self.max_tokens_per_tick < self.prefill_buckets[0]:
@@ -589,7 +618,11 @@ class ServeEngine:
             # per-tick budget actually charged (prefill buckets + decode
             # tokens) — its per-tick delta never exceeds
             # max_tokens_per_tick on the paged path.
+            # prefill_dispatches counts chunk launches (dense: whole-prompt
+            # prefills) — the fewer-fatter-dispatches win of big buckets
+            # shows up here while prefill_tokens stays identical
             "stalled_ticks": 0, "stall_events": 0, "padded_tokens": 0,
+            "prefill_dispatches": 0,
             "preemptions": 0, "preempt_proactive": 0,
             # progress-preserving preemption: every preemption is a swap or
             # a recompute (restart-preemptions are gone); preempted_tokens
@@ -1075,10 +1108,10 @@ class ServeEngine:
         if self.dense_baseline:
             for slot, req in pending[:1]:
                 plen = self._plen(req)
-                logits = self._run_prefill_chunk(slot, req,
-                                                 self._bucket(plen), plen)
+                bucket = self._bucket(plen)
+                logits = self._run_prefill_chunk(slot, req, bucket, plen)
                 self.stats["prefill_tokens"] += plen
-                self.stats["padded_tokens"] += self._bucket(plen)
+                self.stats["padded_tokens"] += bucket
                 req.prefill_pos = plen
                 self.lengths[slot] = plen
                 self._finish_prefill(slot, req, logits, finished)
@@ -1149,6 +1182,7 @@ class ServeEngine:
 
     def _run_prefill_chunk(self, slot: int, req: Request, bucket: int,
                            n: int):
+        self.stats["prefill_dispatches"] += 1
         padded = np.zeros((bucket,), np.int32)
         src = self._prefill_source(req)
         padded[:n] = src[req.prefill_pos:req.prefill_pos + n]

@@ -1,0 +1,137 @@
+"""Q-tiled paged-prefill kernel: interpret-mode parity vs the kernels/ref.py
+oracle across tile configurations (tile < C, tile == C, C not divisible by
+the tile, GQA), the q-tile-aware live-page clamp, ``skip_null`` with an
+all-foreign q-tile, and the (acc, m, l) partials combine across shard-local
+tables."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import prefill_attention as pf
+from repro.kernels import ref
+
+
+def _case(rng, kvh=2, nb=14, bs=8, d=16, h=6, c=12, n_pages=5):
+    q = jnp.asarray(rng.normal(size=(1, c, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(kvh, nb, bs, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(kvh, nb, bs, d)), jnp.float32)
+    bt = jnp.asarray(rng.permutation(nb - 1)[:n_pages] + 1, jnp.int32)
+    return q, kp, vp, bt
+
+
+def test_qtile_parity_sweep(rng):
+    """Every q_tile choice — smaller than the chunk, equal, oversized, and
+    not dividing C — reproduces the ref oracle's outputs AND partials, at
+    every (q_offset, length) the engine dispatches (fresh prefill, chunk
+    continuation, partial tail chunk)."""
+    c = 12                                    # not a power of two: 8 ∤ 12
+    q, kp, vp, bt = _case(rng, c=c)
+    for qoff, ln in [(0, c), (5, c), (17, 3), (0, 1), (28, c)]:
+        kw = dict(q_offset=jnp.int32(qoff), length=jnp.int32(ln))
+        want = ref.paged_prefill_attention(q, kp, vp, bt, **kw)
+        ref_p = ref.paged_prefill_attention_partial(q, kp, vp, bt, **kw)
+        for t in (None, 1, 4, 8, c, 2 * c):
+            got = pf.paged_prefill_attention(q, kp, vp, bt, q_tile=t,
+                                             interpret=True, **kw)
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5,
+                err_msg=f"q_tile={t} {kw}")
+            ker_p = pf.paged_prefill_attention_partial(
+                q, kp, vp, bt, q_tile=t, interpret=True, **kw)
+            for a, b in zip(ref_p, ker_p):
+                np.testing.assert_allclose(
+                    np.asarray(b), np.asarray(a), rtol=1e-5, atol=1e-5,
+                    err_msg=f"q_tile={t} {kw}")
+
+
+def test_qtile_parity_gqa_single_head_group(rng):
+    """GQA corner cases: G=3 (h=6/kvh=2) is the sweep default; also check
+    MHA (G=1) and one KV head serving every query head."""
+    for h, kvh in ((4, 4), (8, 1)):
+        q, kp, vp, bt = _case(rng, h=h, kvh=kvh, c=10)
+        kw = dict(q_offset=jnp.int32(7), length=jnp.int32(10))
+        want = ref.paged_prefill_attention(q, kp, vp, bt, **kw)
+        for t in (3, 10):
+            got = pf.paged_prefill_attention(q, kp, vp, bt, q_tile=t,
+                                             interpret=True, **kw)
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5,
+                err_msg=f"h={h} kvh={kvh} q_tile={t}")
+
+
+def test_skip_null_all_foreign_qtile_returns_combine_identity(rng):
+    """A q-tile whose entire causal window lies in foreign (zeroed) table
+    entries under ``skip_null`` must emit the combine identity
+    (acc=0, m=NEG_INF, l=0) — and combining both shards' partials still
+    bit-matches the unsharded oracle."""
+    bs, c, t = 8, 16, 4
+    q, kp, vp, bt = _case(rng, c=c, n_pages=4)          # 4 pages = 32 rows
+    kw = dict(q_offset=jnp.int32(0), length=jnp.int32(c))
+    want = ref.paged_prefill_attention(q, kp, vp, bt, **kw)
+
+    bt_np = np.asarray(bt)
+    s0 = jnp.asarray(np.where(np.arange(4) < 2, bt_np, 0), jnp.int32)
+    s1 = jnp.asarray(np.where(np.arange(4) >= 2, bt_np, 0), jnp.int32)
+    p0 = pf.paged_prefill_attention_partial(q, kp, vp, s0, skip_null=True,
+                                            q_tile=t, interpret=True, **kw)
+    p1 = pf.paged_prefill_attention_partial(q, kp, vp, s1, skip_null=True,
+                                            q_tile=t, interpret=True, **kw)
+
+    # shard 1 owns only pages 2-3 (rows 16+); q-tile 0 covers positions
+    # 0..3, causal window entirely inside page 0 — all-foreign for it
+    acc1, m1, l1 = (np.asarray(x) for x in p1)
+    rows = slice(0, t)
+    assert np.all(acc1[0, rows] == 0.0)
+    assert np.all(m1[0, rows] == pf.NEG_INF)
+    assert np.all(l1[0, rows] == 0.0)
+
+    acc, m, l = ref.combine_partials(p0, p1)
+    merged = acc / jnp.maximum(l, 1e-30)[..., None]
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_partials_combine_across_four_shard_local_tables(rng):
+    """4-way shard-local tables (each shard owns one page, zeros elsewhere,
+    ``skip_null``): folding the four (acc, m, l) partials together
+    reproduces the unsharded kernel output — the exact reduction
+    ``noc.tree_softmax_combine`` runs over the mesh."""
+    q, kp, vp, bt = _case(rng, c=12, n_pages=4)
+    kw = dict(q_offset=jnp.int32(3), length=jnp.int32(12))
+    want = ref.paged_prefill_attention(q, kp, vp, bt, **kw)
+    bt_np = np.asarray(bt)
+    parts = []
+    for s in range(4):
+        local = jnp.asarray(np.where(np.arange(4) == s, bt_np, 0), jnp.int32)
+        parts.append(pf.paged_prefill_attention_partial(
+            q, kp, vp, local, skip_null=True, q_tile=4, interpret=True, **kw))
+    acc, m, l = parts[0]
+    for p in parts[1:]:
+        acc, m, l = ref.combine_partials((acc, m, l), p)
+    merged = acc / jnp.maximum(l, 1e-30)[..., None]
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_resolve_q_tile_and_vmem_model():
+    """Tile resolution: explicit tiles clamp to [1, C]; the auto tile keeps
+    small chunks single-tile (the seed kernel's behavior) and shrinks big
+    chunks until the VMEM model fits the budget, never below 8."""
+    g, d, bs = 4, 64, 16
+    # explicit: honored, clamped
+    assert pf.resolve_q_tile(128, g, d, bs, q_tile=32) == 32
+    assert pf.resolve_q_tile(128, g, d, bs, q_tile=512) == 128
+    assert pf.resolve_q_tile(128, g, d, bs, q_tile=0) == 1
+    # auto: small chunk -> whole chunk, one tile
+    small = pf.resolve_q_tile(64, g, d, bs)
+    assert small == 64
+    # auto: big chunk tiles down to the budget, and the resolved tile's
+    # footprint actually fits while the next power of two would not
+    t = pf.resolve_q_tile(1 << 16, g, d, bs)
+    assert 8 <= t < (1 << 16)
+    assert pf.q_tile_vmem_bytes(t, g, d, bs) <= pf.DEFAULT_VMEM_BUDGET
+    assert pf.q_tile_vmem_bytes(2 * t, g, d, bs) > pf.DEFAULT_VMEM_BUDGET
+    # the VMEM model is monotone in every dimension it prices
+    assert pf.q_tile_vmem_bytes(16, g, d, bs) < pf.q_tile_vmem_bytes(
+        32, g, d, bs)
+    assert pf.q_tile_vmem_bytes(16, g, d, bs) < pf.q_tile_vmem_bytes(
+        16, 2 * g, d, bs)

@@ -1,0 +1,149 @@
+"""Engine-side guarantees of big-bucket (q-tiled) prefill: the VMEM guard
+at construction, the per-tick ``padded_tokens <= max_tokens_per_tick``
+budget invariant with big buckets, the O(log) jit-trace bound, and the
+long-prompt dispatch A/B (fewer dispatches, identical tokens)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.kernels import prefill_attention as pf
+from repro.models import model as M
+from repro.serve import ServeEngine
+
+
+def _setup(arch="granite-3-2b"):
+    cfg = reduced(get_config(arch))
+    params = M.init_params(cfg, jax.random.key(0), dtype=jnp.float32)
+    return cfg, params
+
+
+def test_engine_guard_rejects_oversized_q_tile():
+    """An explicit q_tile whose scratch cannot fit the kernel VMEM budget
+    is rejected at construction (before any state allocation), naming the
+    knobs — not at first prefill dispatch on TPU."""
+    cfg, params = _setup()
+    big = 1 << 20
+    assert pf.q_tile_vmem_bytes(big, max(1, cfg.n_heads // cfg.n_kv_heads),
+                                cfg.hd, 16) > pf.DEFAULT_VMEM_BUDGET
+    with pytest.raises(ValueError, match="prefill_buckets"):
+        ServeEngine(cfg, params, max_seq=2 * big, slots=1, q_tile=big)
+    # the auto tile sizes itself to the budget: the same huge bucket is
+    # fine with q_tile=None (construction only — nothing is dispatched)
+    eng = ServeEngine(cfg, params, max_seq=4096, slots=1,
+                      prefill_buckets=(32, 4096))
+    assert eng.prefill_buckets[-1] == 4096
+
+
+def test_padded_tokens_per_tick_invariant_with_big_buckets():
+    """The per-tick ``padded_tokens`` delta never exceeds
+    ``max_tokens_per_tick`` on the paged path — including when the
+    round-up bucket is unaffordable and the engine falls back to chunking
+    at a smaller bucket (the big-bucket geometry)."""
+    cfg, params = _setup()
+    budget = 136
+    eng = ServeEngine(cfg, params, max_seq=512, slots=2, block_size=8,
+                      prefill_buckets=(16, 32, 128, 512),
+                      max_tokens_per_tick=budget, prefix_caching=False)
+    rng = np.random.default_rng(0)
+    for n in (300, 420, 37, 510):
+        eng.submit(rng.integers(0, cfg.vocab_size, n).tolist(),
+                   max_new_tokens=3)
+    prev, ticks = eng.stats["padded_tokens"], 0
+    while (eng.queued or eng.restore_queue
+           or any(r is not None for r in eng.active)):
+        eng.step()
+        ticks += 1
+        cur = eng.stats["padded_tokens"]
+        assert cur - prev <= budget, (
+            f"tick {ticks}: padded_tokens grew by {cur - prev} "
+            f"> max_tokens_per_tick={budget}")
+        prev = cur
+        assert ticks < 500
+
+
+def test_dense_padded_tokens_charged_once_per_prefill():
+    """Dense-baseline accounting: one monolithic prefill charges exactly
+    one bucket of padded tokens (regression: the bucket used to be
+    recomputed on the charge line — pin the accounting so drift between
+    the dispatched bucket and the charged bucket is caught)."""
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, params, max_seq=64, slots=2, paged=False,
+                      prefill_buckets=(8, 16, 32))
+    eng.submit(list(range(2, 13)), max_new_tokens=2)     # 11 -> bucket 16
+    eng.submit(list(range(2, 7)), max_new_tokens=2)      # 5  -> bucket 8
+    done = eng.run_until_drained()
+    assert len(done) == 2
+    decode = int(eng.stats["decode_tokens"])
+    assert int(eng.stats["padded_tokens"]) == 16 + 8 + decode
+    assert int(eng.stats["prefill_dispatches"]) == 2
+
+
+def test_prefill_traces_stay_logarithmic_with_big_buckets():
+    """Jit specializations stay O(buckets x log table-buckets) even when
+    long prompts stream through big buckets: traces are bounded by
+    |prefill_buckets| x (log2(blocks_per_slot) + 1) and flat across
+    further admissions."""
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, params, max_seq=512, slots=2, block_size=8,
+                      prefill_buckets=(32, 128, 512), prefix_caching=False)
+    rng = np.random.default_rng(1)
+    lens = [500, 260, 130, 40, 390, 510, 200, 70]
+    for n in lens:
+        eng.submit(rng.integers(0, cfg.vocab_size, n).tolist(),
+                   max_new_tokens=2)
+    eng.run_until_drained()
+    bound = len(eng.prefill_buckets) * (
+        int(np.log2(eng.blocks_per_slot)) + 1)
+    traces = int(eng.stats["prefill_traces"])
+    assert 0 < traces <= bound, (traces, bound)
+    # steady state: replaying the same length mix compiles nothing new
+    for n in lens:
+        eng.submit(rng.integers(0, cfg.vocab_size, n).tolist(),
+                   max_new_tokens=2)
+    eng.run_until_drained()
+    assert int(eng.stats["prefill_traces"]) == traces
+
+
+def test_big_bucket_engine_fewer_dispatches_same_tokens():
+    """The benchmark's long-prompt A/B in miniature: a big bucket the
+    budget affords (while the auto-included max_seq bucket stays
+    unaffordable) prefills each long prompt in one dispatch where the
+    small-bucket engine chunks it — greedy outputs identical."""
+    cfg, params = _setup()
+    small, big = 32, 128
+    mk = dict(max_seq=big + 64, slots=2, block_size=8, prefix_caching=False,
+              max_tokens_per_tick=big + 8)
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, int(n)).tolist()
+               for n in (128, 130, 155, 128)]
+
+    outs, stats = {}, {}
+    for name, buckets in (("small", (8, small)), ("big", (8, small, big))):
+        eng = ServeEngine(cfg, params, prefill_buckets=buckets, **mk)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=3)
+        done = sorted(eng.run_until_drained(), key=lambda r: r.rid)
+        outs[name] = [tuple(r.out_tokens) for r in done]
+        stats[name] = int(eng.stats["prefill_dispatches"])
+    assert outs["big"] == outs["small"]
+    assert stats["big"] < stats["small"], stats
+
+
+def test_engine_explicit_q_tile_token_identical():
+    """Forcing a small explicit q_tile through the engine changes nothing
+    about greedy outputs (the knob only re-tiles the kernel; on the CPU
+    ref path it is a pass-through, which this pins down too)."""
+    cfg, params = _setup()
+    prompts = [[3, 1, 4, 1, 5, 9, 2, 6], list(range(2, 40)), [7, 7]]
+
+    def drain(**kw):
+        eng = ServeEngine(cfg, params, max_seq=64, slots=2, block_size=8,
+                          prefill_buckets=(8, 16, 64), **kw)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=4)
+        return [tuple(r.out_tokens) for r in
+                sorted(eng.run_until_drained(), key=lambda r: r.rid)]
+
+    assert drain() == drain(q_tile=4)

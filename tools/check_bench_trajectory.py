@@ -63,6 +63,10 @@ def main() -> int:
         ("traffic batch goodput tok/s",
          ("traffic", "poisson", "proactive", "classes", "batch",
           "goodput_tok_s"), True),
+        # long-prompt leg: big-bucket (q-tiled kernel) prefill TTFT —
+        # skips gracefully on artifacts that predate it
+        ("long-prompt big-bucket TTFT p50 ms",
+         ("long_prompt", "big", "ttft_p50_ms"), False),
     ]
     failures = []
     for name, path, up in metrics:
