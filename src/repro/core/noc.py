@@ -145,16 +145,20 @@ E_HOP_PJ_PER_BIT = 0.1
 
 
 def softmax_combine_cost(rows: int, heads: int, head_dim: int,
-                         n_shards: int) -> dict:
+                         n_shards: int, itemsize: int = 4) -> dict:
     """Traffic/energy of ONE tree_softmax_combine over ``n_shards``.
 
-    The butterfly moves the full (acc f32 [rows, heads, head_dim],
+    The butterfly moves the full (acc [rows, heads, head_dim],
     m [rows, heads], l [rows, heads]) payload per hop, log2(n) hops, every
-    node active — per-device bytes therefore hops * payload.  Returns
-    ``{"hops", "bytes", "energy_pj"}`` (bytes/energy are per device)."""
+    node active — per-device bytes therefore hops * payload.  ``itemsize``
+    is the partials' element width in bytes (default 4: the (acc, m, l)
+    contract carries fp32 partials regardless of how the KV *pool* is
+    stored — an int8 pool dequantizes inside the kernel, before the
+    combine).  Returns ``{"hops", "bytes", "energy_pj"}`` (bytes/energy
+    are per device)."""
     assert _is_pow2(n_shards), n_shards
     hops = max(n_shards - 1, 0).bit_length()         # log2 for pow2 n
-    payload = rows * heads * (head_dim + 2) * 4      # acc + m + l, fp32
+    payload = rows * heads * (head_dim + 2) * itemsize   # acc + m + l
     total = hops * payload
     return {"hops": hops, "bytes": total,
             "energy_pj": total * 8 * E_HOP_PJ_PER_BIT}
@@ -185,11 +189,14 @@ RECOMPUTE_E_PJ_PER_FLOP = _SRAM.e_mac_pj / 2.0   # one MAC = two FLOPs
 def swap_cost(n_pages: int, page_bytes: int, state_bytes: int = 0) -> dict:
     """Round-trip cost of parking ``n_pages`` KV pages host-side.
 
-    ``page_bytes`` counts K **and** V for one page; ``state_bytes`` adds a
-    family's fixed-size recurrent slot state (hybrid Mamba2 conv/SSM —
-    rides the same link both ways); the factor 2 is the two link
-    traversals (swap-out now, swap-in at restore).  Returns
-    ``{"bytes", "seconds", "energy_pj"}``."""
+    ``page_bytes`` counts K **and** V for one page *at the pool's storage
+    width* — the engine passes ``ServeEngine._page_kv_bytes()``, which
+    prices an int8 pool at 1 byte per value plus its per-page scales, so a
+    quantized pool's cheaper link traffic shifts the swap-vs-recompute
+    crossover accordingly.  ``state_bytes`` adds a family's fixed-size
+    recurrent slot state (hybrid Mamba2 conv/SSM — rides the same link
+    both ways); the factor 2 is the two link traversals (swap-out now,
+    swap-in at restore).  Returns ``{"bytes", "seconds", "energy_pj"}``."""
     b = 2 * (n_pages * page_bytes + state_bytes)
     return {"bytes": b, "seconds": b / SWAP_LINK_BYTES_PER_S,
             "energy_pj": b * 8 * SWAP_E_PJ_PER_BIT}

@@ -162,13 +162,28 @@ def decode_attention_partial(q, k, v, *, lengths=None, kv_offset: int = 0,
 # directly — the host never linearizes the cache.  Everything else (online
 # softmax over sequential KV blocks, the (acc, m, l) partials contract that
 # ``core.noc.tree_softmax_combine`` consumes) is identical to the dense path.
+#
+# Quantized pool (``k_scales``/``v_scales`` not None): pages are int8 and a
+# per-page-per-head f32 scale array [KvH, NB] rides scalar prefetch alongside
+# the block table; the kernel dequantizes the (head, page) tile right after
+# the DMA (``k * ks[ih, page]``) so the online softmax — and with it the
+# (acc, m, l) contract, ``skip_null`` and the NoC combine — runs in f32
+# exactly as on the fp16 path.  Scales live in SMEM; the extra traffic is one
+# scalar per page step.
 # ---------------------------------------------------------------------------
 
-def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
-                  m_scr, l_scr, acc_scr, *, scale: float, block_s: int,
+def _paged_kernel(bt_ref, len_ref, *refs, scale: float, block_s: int,
                   kv_offset: int, return_partials: bool,
-                  skip_null: bool = False):
+                  skip_null: bool = False, quantized: bool = False):
+    if quantized:
+        (ks_ref, vs_ref, q_ref, k_ref, v_ref,
+         o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr) = refs
+    else:
+        ks_ref = vs_ref = None
+        (q_ref, k_ref, v_ref,
+         o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr) = refs
     ib = pl.program_id(0)
+    ih = pl.program_id(1)
     ibk = pl.program_id(2)
     nb = pl.num_programs(2)
 
@@ -181,6 +196,11 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32)                  # [G, D]
         k = k_ref[0, 0].astype(jnp.float32)                  # [BS, D]
+        v = v_ref[0, 0].astype(jnp.float32)                  # [BS, D]
+        if quantized:
+            page = bt_ref[ib, ibk]
+            k = k * ks_ref[ih, page]
+            v = v * vs_ref[ih, page]
         s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale  # [G, BS]
         kpos = kv_offset + ibk * block_s + lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -192,7 +212,7 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         corr = jnp.exp(m_prev - m_new)
         l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
         acc_scr[...] = acc_scr[...] * corr + lax.dot_general(
-            p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            p, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
         m_scr[...] = m_new
 
@@ -216,7 +236,7 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 
 def _paged_decode(q, k_pages, v_pages, block_tables, lengths, *,
                   kv_offset: int, return_partials: bool, interpret: bool,
-                  skip_null: bool = False):
+                  skip_null: bool = False, k_scales=None, v_scales=None):
     b, h, d = q.shape
     kvh, _, bs, _ = k_pages.shape
     g = h // kvh
@@ -226,26 +246,30 @@ def _paged_decode(q, k_pages, v_pages, block_tables, lengths, *,
         lengths = jnp.full((b,), kv_offset + mb * bs, jnp.int32)
     lens = jnp.minimum(lengths.astype(jnp.int32), kv_offset + mb * bs)
 
+    quantized = k_scales is not None
     out_dt = jnp.float32 if return_partials else q.dtype
     kernel = functools.partial(
         _paged_kernel, scale=1.0 / math.sqrt(d), block_s=bs,
         kv_offset=kv_offset, return_partials=return_partials,
-        skip_null=skip_null)
+        skip_null=skip_null, quantized=quantized)
 
+    # trailing *_ absorbs the scalar-prefetch operands, so one index_map set
+    # serves both the 2-operand (fp16) and 4-operand (quantized) grids
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,            # block_tables, lengths
+        # block_tables, lengths (+ k_scales, v_scales when quantized)
+        num_scalar_prefetch=4 if quantized else 2,
         grid=(b, kvh, mb),
         in_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda ib, ih, ibk, bt, ln: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, g, d), lambda ib, ih, ibk, *_: (ib, ih, 0, 0)),
             pl.BlockSpec((1, 1, bs, d),
-                         lambda ib, ih, ibk, bt, ln: (ih, bt[ib, ibk], 0, 0)),
+                         lambda ib, ih, ibk, bt, *_: (ih, bt[ib, ibk], 0, 0)),
             pl.BlockSpec((1, 1, bs, d),
-                         lambda ib, ih, ibk, bt, ln: (ih, bt[ib, ibk], 0, 0)),
+                         lambda ib, ih, ibk, bt, *_: (ih, bt[ib, ibk], 0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda ib, ih, ibk, bt, ln: (ib, ih, 0, 0)),
-            pl.BlockSpec((1, 1, g), lambda ib, ih, ibk, bt, ln: (ib, ih, 0)),
-            pl.BlockSpec((1, 1, g), lambda ib, ih, ibk, bt, ln: (ib, ih, 0)),
+            pl.BlockSpec((1, 1, g, d), lambda ib, ih, ibk, *_: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, g), lambda ib, ih, ibk, *_: (ib, ih, 0)),
+            pl.BlockSpec((1, 1, g), lambda ib, ih, ibk, *_: (ib, ih, 0)),
         ],
         scratch_shapes=[
             pltpu.VMEM((g, 1), jnp.float32),
@@ -253,6 +277,10 @@ def _paged_decode(q, k_pages, v_pages, block_tables, lengths, *,
             pltpu.VMEM((g, d), jnp.float32),
         ],
     )
+    prefetch = (block_tables.astype(jnp.int32), lens)
+    if quantized:
+        prefetch += (k_scales.astype(jnp.float32),
+                     v_scales.astype(jnp.float32))
     out, m, l = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -262,28 +290,36 @@ def _paged_decode(q, k_pages, v_pages, block_tables, lengths, *,
             jax.ShapeDtypeStruct((b, kvh, g), jnp.float32),
         ],
         interpret=interpret,
-    )(block_tables.astype(jnp.int32), lens, qh, k_pages, v_pages)
+    )(*prefetch, qh, k_pages, v_pages)
     return out.reshape(b, h, d), m.reshape(b, h), l.reshape(b, h)
 
 
 def paged_decode_attention(q, k_pages, v_pages, block_tables, *, lengths=None,
+                           k_scales=None, v_scales=None,
                            interpret: bool = False):
-    """q [B,H,D]; k_pages,v_pages [KvH,NB,BS,D]; block_tables [B,MB] -> [B,H,D]."""
+    """q [B,H,D]; k_pages,v_pages [KvH,NB,BS,D]; block_tables [B,MB] -> [B,H,D].
+
+    ``k_scales``/``v_scales`` [KvH, NB] f32 mark an int8-quantized pool:
+    each (head, page) tile is dequantized in the inner page loop."""
     out, _, _ = _paged_decode(q, k_pages, v_pages, block_tables, lengths,
                               kv_offset=0, return_partials=False,
-                              interpret=interpret)
+                              interpret=interpret,
+                              k_scales=k_scales, v_scales=v_scales)
     return out
 
 
 def paged_decode_attention_partial(q, k_pages, v_pages, block_tables, *,
                                    lengths=None, kv_offset: int = 0,
                                    skip_null: bool = False,
+                                   k_scales=None, v_scales=None,
                                    interpret: bool = False):
     """Per-shard paged partials (acc f32, m, l) for the NoC tree combine.
 
     ``skip_null``: zero table entries skip compute (consecutive zeros also
     collapse their null-page DMAs, since the block index repeats) — the
-    shard-local-table contract for sequence-sharded page pools."""
+    shard-local-table contract for sequence-sharded page pools.
+    ``k_scales``/``v_scales``: per-page dequant scales (int8 pool)."""
     return _paged_decode(q, k_pages, v_pages, block_tables, lengths,
                          kv_offset=kv_offset, return_partials=True,
-                         interpret=interpret, skip_null=skip_null)
+                         interpret=interpret, skip_null=skip_null,
+                         k_scales=k_scales, v_scales=v_scales)

@@ -123,25 +123,33 @@ def decode_attention_partial(q, k, v, *, lengths=None, kv_offset: int = 0,
                                         kv_offset=kv_offset)
 
 
-def paged_decode_attention(q, k_pages, v_pages, block_tables, *, lengths=None):
+def paged_decode_attention(q, k_pages, v_pages, block_tables, *, lengths=None,
+                           k_scales=None, v_scales=None):
     if _use_pallas():
         return _da.paged_decode_attention(q, k_pages, v_pages, block_tables,
-                                          lengths=lengths, interpret=_interp())
+                                          lengths=lengths, k_scales=k_scales,
+                                          v_scales=v_scales,
+                                          interpret=_interp())
     return ref.paged_decode_attention(q, k_pages, v_pages, block_tables,
-                                      lengths=lengths)
+                                      lengths=lengths, k_scales=k_scales,
+                                      v_scales=v_scales)
 
 
 def paged_decode_attention_partial(q, k_pages, v_pages, block_tables, *,
                                    lengths=None, kv_offset: int = 0,
-                                   skip_null: bool = False):
+                                   skip_null: bool = False,
+                                   k_scales=None, v_scales=None):
     if _use_pallas():
         return _da.paged_decode_attention_partial(
             q, k_pages, v_pages, block_tables, lengths=lengths,
-            kv_offset=kv_offset, skip_null=skip_null, interpret=_interp())
+            kv_offset=kv_offset, skip_null=skip_null, k_scales=k_scales,
+            v_scales=v_scales, interpret=_interp())
     return ref.paged_decode_attention_partial(q, k_pages, v_pages,
                                               block_tables, lengths=lengths,
                                               kv_offset=kv_offset,
-                                              skip_null=skip_null)
+                                              skip_null=skip_null,
+                                              k_scales=k_scales,
+                                              v_scales=v_scales)
 
 
 # Trace-time gather accounting: ``gather_pages`` linearizes pages host-side
@@ -160,17 +168,18 @@ def gather_stats() -> dict:
     return dict(_GATHER_STATS)
 
 
-def gather_pages(pages, block_table):
+def gather_pages(pages, block_table, scales=None):
     n = block_table.shape[-1]
     if block_table.ndim == 2:
         n *= block_table.shape[0]
     _GATHER_STATS["calls"] += 1
     _GATHER_STATS["pages"] += int(n)
-    return ref.gather_pages(pages, block_table)
+    return ref.gather_pages(pages, block_table, scales)
 
 
 def paged_prefill_attention(q, k_pages, v_pages, block_table, *, q_offset,
-                            length, window=None, q_tile=None):
+                            length, window=None, q_tile=None,
+                            k_scales=None, v_scales=None):
     """Prefill-chunk attention over paged KV (chunk K/V already scattered).
 
     Kernel path: scalar-prefetch page gather inside the Pallas index_map —
@@ -179,13 +188,16 @@ def paged_prefill_attention(q, k_pages, v_pages, block_table, *, q_offset,
     ``prefill_attention.resolve_q_tile``).  Fallback: gather exactly the
     pages in ``block_table`` (callers pass a prefix-length-bucketed slice,
     so the copy volume tracks the live prefix, not the pool); the ref path
-    is dense so ``q_tile`` has no effect there."""
+    is dense so ``q_tile`` has no effect there.  ``k_scales``/``v_scales``
+    [KvH, NB] dequantize an int8 pool (kernel: inner page loop; fallback:
+    during the gather)."""
     if _use_pallas() and window is None:
         return _pf.paged_prefill_attention(
             q, k_pages, v_pages, block_table, q_offset=q_offset,
-            length=length, q_tile=q_tile, interpret=_interp())
-    k_lin = gather_pages(k_pages, block_table)[None]
-    v_lin = gather_pages(v_pages, block_table)[None]
+            length=length, q_tile=q_tile, k_scales=k_scales,
+            v_scales=v_scales, interpret=_interp())
+    k_lin = gather_pages(k_pages, block_table, k_scales)[None]
+    v_lin = gather_pages(v_pages, block_table, v_scales)[None]
     return ref.flash_attention(q, k_lin, v_lin, causal=True,
                                q_offset=q_offset,
                                lengths=jnp.reshape(q_offset + length, (1,)),
@@ -194,15 +206,16 @@ def paged_prefill_attention(q, k_pages, v_pages, block_table, *, q_offset,
 
 def paged_prefill_attention_partial(q, k_pages, v_pages, block_table, *,
                                     q_offset, length, skip_null: bool = False,
-                                    q_tile=None):
+                                    q_tile=None, k_scales=None,
+                                    v_scales=None):
     if _use_pallas():
         return _pf.paged_prefill_attention_partial(
             q, k_pages, v_pages, block_table, q_offset=q_offset,
             length=length, skip_null=skip_null, q_tile=q_tile,
-            interpret=_interp())
+            k_scales=k_scales, v_scales=v_scales, interpret=_interp())
     return ref.paged_prefill_attention_partial(
         q, k_pages, v_pages, block_table, q_offset=q_offset, length=length,
-        skip_null=skip_null)
+        skip_null=skip_null, k_scales=k_scales, v_scales=v_scales)
 
 
 def matmul(x, w, *, out_dtype=None, bm: int = 256, bn: int = 256,

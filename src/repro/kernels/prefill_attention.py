@@ -112,11 +112,18 @@ def resolve_q_tile(c: int, group: int, head_dim: int, block_s: int,
     return min(t, c)
 
 
-def _paged_prefill_kernel(bt_ref, qlen_ref, q_ref, k_ref, v_ref,
-                          o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr, *,
-                          scale: float, block_s: int, group: int,
-                          q_tile: int, return_partials: bool,
-                          skip_null: bool = False):
+def _paged_prefill_kernel(bt_ref, qlen_ref, *refs, scale: float,
+                          block_s: int, group: int, q_tile: int,
+                          return_partials: bool, skip_null: bool = False,
+                          quantized: bool = False):
+    if quantized:
+        (ks_ref, vs_ref, q_ref, k_ref, v_ref,
+         o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr) = refs
+    else:
+        ks_ref = vs_ref = None
+        (q_ref, k_ref, v_ref,
+         o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr) = refs
+    ih = pl.program_id(0)
     iq = pl.program_id(1)
     ibk = pl.program_id(2)
     nb = pl.num_programs(2)
@@ -144,6 +151,12 @@ def _paged_prefill_kernel(bt_ref, qlen_ref, q_ref, k_ref, v_ref,
     def _compute():
         q = q_ref[0].astype(jnp.float32)                     # [T*G, D]
         k = k_ref[0, 0].astype(jnp.float32)                  # [BS, D]
+        v = v_ref[0, 0].astype(jnp.float32)                  # [BS, D]
+        if quantized:
+            # compute only runs for live steps, whose bt entry IS the page
+            page = bt_ref[ibk]
+            k = k * ks_ref[ih, page]
+            v = v * vs_ref[ih, page]
         s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
         # row r of tile iq is (chunk position iq*T + r // G, head r % G)
@@ -158,7 +171,7 @@ def _paged_prefill_kernel(bt_ref, qlen_ref, q_ref, k_ref, v_ref,
         corr = jnp.exp(m_prev - m_new)
         l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
         acc_scr[...] = acc_scr[...] * corr + lax.dot_general(
-            p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            p, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
         m_scr[...] = m_new
 
@@ -175,7 +188,8 @@ def _paged_prefill_kernel(bt_ref, qlen_ref, q_ref, k_ref, v_ref,
 
 def _paged_prefill(q, k_pages, v_pages, block_table, q_offset, length, *,
                    return_partials: bool, interpret: bool,
-                   skip_null: bool = False, q_tile=None):
+                   skip_null: bool = False, q_tile=None,
+                   k_scales=None, v_scales=None):
     b, c, h, d = q.shape
     assert b == 1, "paged prefill is single-sequence (chunked serving)"
     kvh, _, bs, _ = k_pages.shape
@@ -194,11 +208,12 @@ def _paged_prefill(q, k_pages, v_pages, block_table, q_offset, length, *,
     qlen = jnp.stack([jnp.minimum(total, mb * bs),
                       jnp.asarray(q_offset, jnp.int32)])
 
+    quantized = k_scales is not None
     out_dt = jnp.float32 if return_partials else q.dtype
     kernel = functools.partial(
         _paged_prefill_kernel, scale=1.0 / math.sqrt(d), block_s=bs,
         group=g, q_tile=t, return_partials=return_partials,
-        skip_null=skip_null)
+        skip_null=skip_null, quantized=quantized)
 
     def _page_idx(ih, iq, ibk, bt, ql):
         # clamp dead grid steps onto the tile's LAST live page: tile iq
@@ -209,24 +224,27 @@ def _paged_prefill(q, k_pages, v_pages, block_table, q_offset, length, *,
         n_live = jnp.maximum((tile_end + bs - 1) // bs, 1)
         return bt[jnp.minimum(ibk, n_live - 1)]
 
+    # trailing *_ absorbs the scalar-prefetch operands, so one index_map
+    # set serves both the 2-operand (fp16) and 4-operand (quantized) grids
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,            # block_table, (total, q_offset)
+        # block_table, (total, q_offset) (+ k_scales, v_scales quantized)
+        num_scalar_prefetch=4 if quantized else 2,
         grid=(kvh, nqt, mb),
         in_specs=[
             pl.BlockSpec((1, t * g, d),
-                         lambda ih, iq, ibk, bt, ql: (ih, iq, 0)),
+                         lambda ih, iq, ibk, *_: (ih, iq, 0)),
             pl.BlockSpec((1, 1, bs, d),
-                         lambda ih, iq, ibk, bt, ql:
+                         lambda ih, iq, ibk, bt, ql, *_:
                          (ih, _page_idx(ih, iq, ibk, bt, ql), 0, 0)),
             pl.BlockSpec((1, 1, bs, d),
-                         lambda ih, iq, ibk, bt, ql:
+                         lambda ih, iq, ibk, bt, ql, *_:
                          (ih, _page_idx(ih, iq, ibk, bt, ql), 0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, t * g, d),
-                         lambda ih, iq, ibk, bt, ql: (ih, iq, 0)),
-            pl.BlockSpec((1, t * g), lambda ih, iq, ibk, bt, ql: (ih, iq)),
-            pl.BlockSpec((1, t * g), lambda ih, iq, ibk, bt, ql: (ih, iq)),
+                         lambda ih, iq, ibk, *_: (ih, iq, 0)),
+            pl.BlockSpec((1, t * g), lambda ih, iq, ibk, *_: (ih, iq)),
+            pl.BlockSpec((1, t * g), lambda ih, iq, ibk, *_: (ih, iq)),
         ],
         scratch_shapes=[
             pltpu.VMEM((t * g, 1), jnp.float32),
@@ -234,6 +252,10 @@ def _paged_prefill(q, k_pages, v_pages, block_table, q_offset, length, *,
             pltpu.VMEM((t * g, d), jnp.float32),
         ],
     )
+    prefetch = (block_table.astype(jnp.int32), qlen)
+    if quantized:
+        prefetch += (k_scales.astype(jnp.float32),
+                     v_scales.astype(jnp.float32))
     out, m, l = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -243,7 +265,7 @@ def _paged_prefill(q, k_pages, v_pages, block_table, q_offset, length, *,
             jax.ShapeDtypeStruct((kvh, nqt * t * g), jnp.float32),
         ],
         interpret=interpret,
-    )(block_table.astype(jnp.int32), qlen, qh, k_pages, v_pages)
+    )(*prefetch, qh, k_pages, v_pages)
     out = out[:, :c * g]
     m = m[:, :c * g]
     l = l[:, :c * g]
@@ -254,26 +276,33 @@ def _paged_prefill(q, k_pages, v_pages, block_table, q_offset, length, *,
 
 
 def paged_prefill_attention(q, k_pages, v_pages, block_table, *, q_offset,
-                            length, q_tile=None, interpret: bool = False):
+                            length, q_tile=None, k_scales=None,
+                            v_scales=None, interpret: bool = False):
     """q [1,C,H,D]; k_pages,v_pages [KvH,NB,BS,D]; block_table [MB] -> [1,C,H,D].
 
     The chunk's own K/V must already be scattered into the pages; causal
     masking is on global positions (``q_offset + row``), KV validity on
     ``kpos < q_offset + length``.  ``q_tile`` sets the query-tile size in
-    chunk positions (None: auto per :func:`resolve_q_tile`)."""
+    chunk positions (None: auto per :func:`resolve_q_tile`).
+    ``k_scales``/``v_scales`` [KvH, NB] f32 mark an int8-quantized pool:
+    each (head, page) tile is dequantized in the inner page loop."""
     out, _, _ = _paged_prefill(q, k_pages, v_pages, block_table, q_offset,
                                length, return_partials=False,
-                               interpret=interpret, q_tile=q_tile)
+                               interpret=interpret, q_tile=q_tile,
+                               k_scales=k_scales, v_scales=v_scales)
     return out
 
 
 def paged_prefill_attention_partial(q, k_pages, v_pages, block_table, *,
                                     q_offset, length, skip_null: bool = False,
-                                    q_tile=None, interpret: bool = False):
+                                    q_tile=None, k_scales=None,
+                                    v_scales=None, interpret: bool = False):
     """Per-shard partials (acc f32 [1,C,H,D], m [1,C,H], l [1,C,H]) for the
     NoC tree combine — same algebra as the decode kernels.  ``skip_null``
     elides zero table entries (the shard-local-table contract); a q-tile
-    whose live pages are all foreign yields ``(0, NEG_INF, 0)`` rows."""
+    whose live pages are all foreign yields ``(0, NEG_INF, 0)`` rows.
+    ``k_scales``/``v_scales``: per-page dequant scales (int8 pool)."""
     return _paged_prefill(q, k_pages, v_pages, block_table, q_offset, length,
                           return_partials=True, interpret=interpret,
-                          skip_null=skip_null, q_tile=q_tile)
+                          skip_null=skip_null, q_tile=q_tile,
+                          k_scales=k_scales, v_scales=v_scales)

@@ -252,11 +252,16 @@ def combine_partials(parts: Tuple[jax.Array, jax.Array, jax.Array],
 # paged decode attention (block/paged KV cache, vLLM-style)
 # ---------------------------------------------------------------------------
 
-def gather_pages(pages: jax.Array, block_table: jax.Array) -> jax.Array:
+def gather_pages(pages: jax.Array, block_table: jax.Array,
+                 scales: Optional[jax.Array] = None) -> jax.Array:
     """Linearize a paged KV buffer for one-or-more sequences.
 
     pages [KvH, NB, BS, D]; block_table [B, MB] (or [MB]) int32 physical
     page ids -> linear KV [B, MB*BS, KvH, D] (or [MB*BS, KvH, D]).
+
+    ``scales`` [KvH, NB] f32 marks an int8-quantized pool: the gathered
+    pages are dequantized (`int8 * per-page-per-head scale`, f32 out) —
+    O(live pages) work, never O(pool).
     """
     squeeze = block_table.ndim == 1
     if squeeze:
@@ -264,6 +269,9 @@ def gather_pages(pages: jax.Array, block_table: jax.Array) -> jax.Array:
     kvh, _, bs, d = pages.shape
     mb = block_table.shape[-1]
     lin = pages[:, block_table]                       # [KvH, B, MB, BS, D]
+    if scales is not None:
+        sc = scales[:, block_table]                   # [KvH, B, MB]
+        lin = lin.astype(jnp.float32) * sc[..., None, None]
     lin = jnp.moveaxis(lin, 0, 3)                     # [B, MB, BS, KvH, D]
     lin = lin.reshape(block_table.shape[0], mb * bs, kvh, d)
     return lin[0] if squeeze else lin
@@ -272,6 +280,8 @@ def gather_pages(pages: jax.Array, block_table: jax.Array) -> jax.Array:
 def paged_decode_attention_partial(q, k_pages, v_pages, block_tables, *,
                                    lengths: Optional[jax.Array] = None,
                                    kv_offset: int = 0, skip_null: bool = False,
+                                   k_scales: Optional[jax.Array] = None,
+                                   v_scales: Optional[jax.Array] = None,
                                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Flash-decoding partials over a *paged* KV cache.
 
@@ -284,10 +294,11 @@ def paged_decode_attention_partial(q, k_pages, v_pages, block_tables, *,
     With ``skip_null`` a table entry of 0 contributes nothing even inside
     the live range — the contract for *shard-local* tables, where logical
     blocks owned by another shard of a sequence-sharded page pool are
-    mapped to the local null page.
+    mapped to the local null page.  ``k_scales``/``v_scales`` [KvH, NB]
+    dequantize an int8 pool page-by-page before attending.
     """
-    k_lin = gather_pages(k_pages, block_tables)
-    v_lin = gather_pages(v_pages, block_tables)
+    k_lin = gather_pages(k_pages, block_tables, k_scales)
+    v_lin = gather_pages(v_pages, block_tables, v_scales)
     kv_valid = None
     if skip_null:
         bt = block_tables if block_tables.ndim == 2 else block_tables[None]
@@ -297,9 +308,13 @@ def paged_decode_attention_partial(q, k_pages, v_pages, block_tables, *,
 
 
 def paged_decode_attention(q, k_pages, v_pages, block_tables, *,
-                           lengths: Optional[jax.Array] = None) -> jax.Array:
+                           lengths: Optional[jax.Array] = None,
+                           k_scales: Optional[jax.Array] = None,
+                           v_scales: Optional[jax.Array] = None) -> jax.Array:
     acc, m, l = paged_decode_attention_partial(q, k_pages, v_pages,
-                                               block_tables, lengths=lengths)
+                                               block_tables, lengths=lengths,
+                                               k_scales=k_scales,
+                                               v_scales=v_scales)
     return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
 
 
@@ -309,6 +324,8 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, *,
 
 def paged_prefill_attention_partial(q, k_pages, v_pages, block_table, *,
                                     q_offset, length, skip_null: bool = False,
+                                    k_scales: Optional[jax.Array] = None,
+                                    v_scales: Optional[jax.Array] = None,
                                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Prefill-chunk attention partials over a paged KV cache (oracle).
 
@@ -320,11 +337,12 @@ def paged_prefill_attention_partial(q, k_pages, v_pages, block_table, *,
     :func:`combine_partials` / ``core.noc.tree_softmax_combine`` consume.
     ``skip_null`` excludes zero table entries (shard-local tables map
     foreign pages of a sequence-sharded pool to the local null page).
+    ``k_scales``/``v_scales`` [KvH, NB] dequantize an int8 pool.
     """
     _, c, h, d = q.shape
     bs = k_pages.shape[2]
-    k_lin = gather_pages(k_pages, block_table)        # [MB*BS, KvH, D]
-    v_lin = gather_pages(v_pages, block_table)
+    k_lin = gather_pages(k_pages, block_table, k_scales)  # [MB*BS, KvH, D]
+    v_lin = gather_pages(v_pages, block_table, v_scales)
     sk = k_lin.shape[0]
     kh = _expand_kv(k_lin[None], h)[0]                # [Sk, H, D]
     vh = _expand_kv(v_lin[None], h)[0]
@@ -344,9 +362,12 @@ def paged_prefill_attention_partial(q, k_pages, v_pages, block_table, *,
 
 
 def paged_prefill_attention(q, k_pages, v_pages, block_table, *,
-                            q_offset, length) -> jax.Array:
+                            q_offset, length,
+                            k_scales: Optional[jax.Array] = None,
+                            v_scales: Optional[jax.Array] = None) -> jax.Array:
     acc, m, l = paged_prefill_attention_partial(
-        q, k_pages, v_pages, block_table, q_offset=q_offset, length=length)
+        q, k_pages, v_pages, block_table, q_offset=q_offset, length=length,
+        k_scales=k_scales, v_scales=v_scales)
     return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
 
 

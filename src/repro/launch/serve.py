@@ -36,6 +36,12 @@ def main():
                     help="paged-KV page size (tokens)")
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="physical page pool size (default: full capacity)")
+    ap.add_argument("--kv-dtype", default="fp16",
+                    choices=["fp16", "int8"],
+                    help="paged-pool storage: fp16 keeps the engine dtype "
+                         "(bit-exact), int8 stores quantized pages with "
+                         "per-page-per-head scales (~4x more sequences per "
+                         "byte; paged families only)")
     ap.add_argument("--token-budget", type=int, default=None,
                     help="max padded tokens (prefill+decode) per tick")
     ap.add_argument("--prefill-buckets", default=None,
@@ -101,7 +107,7 @@ def main():
                       preempt_policy=args.preempt_policy,
                       swap_pages=args.swap_pages,
                       proactive_horizon=args.proactive_horizon,
-                      q_tile=args.q_tile, **ekw)
+                      q_tile=args.q_tile, kv_dtype=args.kv_dtype, **ekw)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for i in range(args.requests):
@@ -122,6 +128,8 @@ def main():
             else "dense" if eng.dense_baseline else "slot-state")
     if eng.has_slot_state and eng.paged:
         mode += "+slot-state"              # hybrid: paged shared-attn KV too
+    if eng.kv_dtype != "fp16":
+        mode += f"/{eng.kv_dtype}"
     if eng.seq_shards > 1:
         mode += f"/seq{eng.seq_shards}"
     print(f"[serve] {len(done)} requests, {total} tokens, {dt:.2f}s "

@@ -215,22 +215,27 @@ PAGED_FAMILIES = ("dense", "moe")
 
 
 def init_paged_decode_state(cfg: ModelConfig, num_blocks: int,
-                            block_size: int, dtype=jnp.bfloat16):
+                            block_size: int, dtype=jnp.bfloat16,
+                            kv_dtype: str = "fp16"):
     """Paged KV cache: physical pages [L, KvH, NB, BS, hd] shared by all
     slots, addressed through per-slot block tables (page 0 = null sink).
     Only families whose *every* mixing layer grows a KV cache; the serving
     engine's family-agnostic state (hybrid paged shared-attention KV +
-    fixed-size slot state) is built by :func:`init_serve_state`."""
+    fixed-size slot state) is built by :func:`init_serve_state`.
+    ``kv_dtype="int8"`` stores quantized pages plus per-page-per-head
+    ``k_scales``/``v_scales`` [L, KvH, NB] f32."""
     if cfg.family not in PAGED_FAMILIES:
         raise ValueError(
             f"paged decode state requires family in {PAGED_FAMILIES}, "
             f"got {cfg.family!r}")
     return {"attn": layers.paged_kv_cache_init(cfg, num_blocks, block_size,
-                                               dtype, n_slots=cfg.n_layers)}
+                                               dtype, n_slots=cfg.n_layers,
+                                               kv_dtype=kv_dtype)}
 
 
 def init_serve_state(cfg: ModelConfig, slots: int, num_blocks: int,
-                     block_size: int, dtype=jnp.bfloat16):
+                     block_size: int, dtype=jnp.bfloat16,
+                     kv_dtype: str = "fp16"):
     """Serving-cache state for any family: the union of *paged* components
     (attention KV pages shared by all slots through block tables) and
     *fixed-size slot state* (recurrent state batched over ``slots``).
@@ -248,7 +253,8 @@ def init_serve_state(cfg: ModelConfig, slots: int, num_blocks: int,
     if cfg.family in ("dense", "moe"):
         return {"attn": layers.paged_kv_cache_init(cfg, num_blocks,
                                                    block_size, dtype,
-                                                   n_slots=cfg.n_layers)}
+                                                   n_slots=cfg.n_layers,
+                                                   kv_dtype=kv_dtype)}
     if cfg.rwkv:
         tm_shift, wkv, cm_shift = rwkv.rwkv_state_init(cfg, slots,
                                                        cfg.n_layers, dtype)
@@ -267,8 +273,23 @@ def init_serve_state(cfg: ModelConfig, slots: int, num_blocks: int,
                               h_g),
         "conv_t": conv_t, "ssm_t": h_t,
         "attn": layers.paged_kv_cache_init(cfg, num_blocks, block_size,
-                                           dtype, n_slots=g),
+                                           dtype, n_slots=g,
+                                           kv_dtype=kv_dtype),
     }
+
+
+def _attn_pages_in(state):
+    """(k_pages, v_pages, k_scales|None, v_scales|None) scan-carry tuple."""
+    att = state["attn"]
+    return (att["k_pages"], att["v_pages"],
+            att.get("k_scales"), att.get("v_scales"))
+
+
+def _attn_pages_out(kp, vp, ks, vs):
+    att = {"k_pages": kp, "v_pages": vp}
+    if ks is not None:
+        att.update(k_scales=ks, v_scales=vs)
+    return att
 
 
 # ---------------------------------------------------------------------------
@@ -405,25 +426,26 @@ def prefill_paged(cfg: ModelConfig, params, state, *, tokens, length,
     positions = (q_offset + jnp.arange(c))[None]
 
     def body(carry, xs):
-        xc, kp_all, vp_all = carry
+        xc, kp_all, vp_all, ks_all, vs_all = carry
         lp, li = xs
         h = layers.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
-        y, kp_all, vp_all = layers.attention_prefill_paged(
+        y, kp_all, vp_all, ks_all, vs_all = layers.attention_prefill_paged(
             lp["attn"], h, positions, cfg, kp_all, vp_all, li, block_table,
             q_offset, length, window=attn_window, seq_axis=seq_axis,
-            q_tile=q_tile)
+            q_tile=q_tile, ks_all=ks_all, vs_all=vs_all)
         xc = xc + y
         h2 = layers.rmsnorm(lp["ln2"], xc, cfg.norm_eps)
         if cfg.family == "moe":
             y2, _ = moe.moe_apply(lp["moe"], h2, cfg)
         else:
             y2 = layers.ffn(lp["ffn"], h2)
-        return (hint(xc + y2, "activation"), kp_all, vp_all), None
+        return (hint(xc + y2, "activation"), kp_all, vp_all, ks_all,
+                vs_all), None
 
-    (x, kp, vp), _ = lax.scan(
-        body, (x, state["attn"]["k_pages"], state["attn"]["v_pages"]),
+    (x, kp, vp, ks, vs), _ = lax.scan(
+        body, (x,) + _attn_pages_in(state),
         (params["layers"], jnp.arange(cfg.n_layers)))
-    state = {"attn": {"k_pages": kp, "v_pages": vp}}
+    state = {"attn": _attn_pages_out(kp, vp, ks, vs)}
     logits = _logits(cfg, params, _last_token(x, jnp.reshape(length, (1,))))
     return logits[:, 0], state
 
@@ -433,11 +455,16 @@ def copy_kv_page(state, src, dst):
     for prefix caching: a new request that matched a cached page chain up to
     mid-page duplicates the trailing shared page before overwriting its
     tail).  state holds pages [L, KvH, NB, BS, hd]; src/dst are page ids.
-    Non-paged state entries (a hybrid's slot state) pass through."""
+    Non-paged state entries (a hybrid's slot state) pass through.
+    With a quantized pool the per-page scales copy along with the pages."""
     kp, vp = state["attn"]["k_pages"], state["attn"]["v_pages"]
-    return {**state,
-            "attn": {"k_pages": kp.at[:, :, dst].set(kp[:, :, src]),
-                     "v_pages": vp.at[:, :, dst].set(vp[:, :, src])}}
+    att = {"k_pages": kp.at[:, :, dst].set(kp[:, :, src]),
+           "v_pages": vp.at[:, :, dst].set(vp[:, :, src])}
+    if "k_scales" in state["attn"]:
+        ks, vs = state["attn"]["k_scales"], state["attn"]["v_scales"]
+        att["k_scales"] = ks.at[:, :, dst].set(ks[:, :, src])
+        att["v_scales"] = vs.at[:, :, dst].set(vs[:, :, src])
+    return {**state, "attn": att}
 
 
 def extract_kv_pages(state, pages):
@@ -445,17 +472,23 @@ def extract_kv_pages(state, pages):
     swap (progress-preserving preemption parks a victim's live pages in the
     host ``serve/swap.py`` arena).
 
-    ``pages`` [P] int32 global page ids; returns ``(k, v)`` each
-    ``[L, KvH, P, BS, hd]``.  Callers pad ``pages`` to a power-of-two
-    bucket (extra entries repeat the null page 0) so the jitted gather
-    specializes to O(log max_pages) shapes; padded rows are discarded
-    host-side.  With a sequence-sharded pool the engine batches one call
-    per shard, so each gather touches a single shard's pages."""
+    ``pages`` [P] int32 global page ids; returns
+    ``(k, v, k_scales, v_scales)`` with pages ``[L, KvH, P, BS, hd]`` and
+    scales ``[L, KvH, P]`` (scales are None for an fp16 pool).  Callers pad
+    ``pages`` to a power-of-two bucket (extra entries repeat the null page
+    0) so the jitted gather specializes to O(log max_pages) shapes; padded
+    rows are discarded host-side.  With a sequence-sharded pool the engine
+    batches one call per shard, so each gather touches a single shard's
+    pages."""
     kp, vp = state["attn"]["k_pages"], state["attn"]["v_pages"]
-    return kp[:, :, pages], vp[:, :, pages]
+    ks = vs = None
+    if "k_scales" in state["attn"]:
+        ks = state["attn"]["k_scales"][:, :, pages]
+        vs = state["attn"]["v_scales"][:, :, pages]
+    return kp[:, :, pages], vp[:, :, pages], ks, vs
 
 
-def insert_kv_pages(state, pages, k, v):
+def insert_kv_pages(state, pages, k, v, k_scales=None, v_scales=None):
     """Scatter swapped-out KV pages back into the pool — the host->device
     half of a page swap (restore at re-admission).
 
@@ -464,11 +497,16 @@ def insert_kv_pages(state, pages, k, v):
     Padding entries may target page 0: that is the null sink, so the extra
     writes are harmless (duplicate indices resolve last-write-wins, which
     only ever races on the null page).  Non-paged state entries (a hybrid's
-    slot state) pass through."""
+    slot state) pass through.  ``k_scales``/``v_scales`` [L, KvH, P]
+    restore a quantized pool's per-page scales alongside the int8 pages."""
     kp, vp = state["attn"]["k_pages"], state["attn"]["v_pages"]
-    return {**state,
-            "attn": {"k_pages": kp.at[:, :, pages].set(k.astype(kp.dtype)),
-                     "v_pages": vp.at[:, :, pages].set(v.astype(vp.dtype))}}
+    att = {"k_pages": kp.at[:, :, pages].set(k.astype(kp.dtype)),
+           "v_pages": vp.at[:, :, pages].set(v.astype(vp.dtype))}
+    if "k_scales" in state["attn"]:
+        ks, vs = state["attn"]["k_scales"], state["attn"]["v_scales"]
+        att["k_scales"] = ks.at[:, :, pages].set(k_scales.astype(ks.dtype))
+        att["v_scales"] = vs.at[:, :, pages].set(v_scales.astype(vs.dtype))
+    return {**state, "attn": att}
 
 
 def decode_step_paged(cfg: ModelConfig, params, state, tokens, lengths,
@@ -490,24 +528,26 @@ def decode_step_paged(cfg: ModelConfig, params, state, tokens, lengths,
     x = layers.embed(params["embed"], tokens[:, None])
 
     def body(carry, xs):
-        xc, kp_all, vp_all = carry
+        xc, kp_all, vp_all, ks_all, vs_all = carry
         lp, li = xs
         h = layers.rmsnorm(lp["ln1"], xc, cfg.norm_eps)
-        y, kp_all, vp_all = layers.attention_decode_paged(
+        y, kp_all, vp_all, ks_all, vs_all = layers.attention_decode_paged(
             lp["attn"], h, cfg, kp_all, vp_all, li, lengths, block_tables,
-            window=attn_window, seq_axis=seq_axis)
+            window=attn_window, seq_axis=seq_axis, ks_all=ks_all,
+            vs_all=vs_all)
         xc = xc + y
         h2 = layers.rmsnorm(lp["ln2"], xc, cfg.norm_eps)
         if cfg.family == "moe":
             y2, _ = moe.moe_apply(lp["moe"], h2, cfg)
         else:
             y2 = layers.ffn(lp["ffn"], h2)
-        return (hint(xc + y2, "activation"), kp_all, vp_all), None
+        return (hint(xc + y2, "activation"), kp_all, vp_all, ks_all,
+                vs_all), None
 
-    (x, kp, vp), _ = lax.scan(
-        body, (x, state["attn"]["k_pages"], state["attn"]["v_pages"]),
+    (x, kp, vp, ks, vs), _ = lax.scan(
+        body, (x,) + _attn_pages_in(state),
         (params["layers"], jnp.arange(cfg.n_layers)))
-    state = {"attn": {"k_pages": kp, "v_pages": vp}}
+    state = {"attn": _attn_pages_out(kp, vp, ks, vs)}
     return _logits(cfg, params, x)[:, 0], state
 
 
@@ -606,26 +646,27 @@ def serve_prefill_chunk(cfg: ModelConfig, params, state, *, tokens, length,
             return hint(xc + y, "activation"), (cv1, h1)
 
         def group_body(carry, xs):
-            xc, kp_all, vp_all = carry
+            xc, kp_all, vp_all, ks_all, vs_all = carry
             gp, cv, hh, gi = xs
             xc, (cv1, h1) = lax.scan(mamba_body, xc, (gp, cv, hh))
             h = layers.rmsnorm(sp["ln1"], xc, cfg.norm_eps)
-            y, kp_all, vp_all = layers.attention_prefill_paged(
+            y, kp_all, vp_all, ks_all, vs_all = layers.attention_prefill_paged(
                 sp["attn"], h, positions, cfg, kp_all, vp_all, gi,
                 block_table, q_offset, length, window=attn_window,
-                seq_axis=seq_axis, q_tile=q_tile)
+                seq_axis=seq_axis, q_tile=q_tile, ks_all=ks_all,
+                vs_all=vs_all)
             xc = xc + y
             xc = xc + layers.ffn(sp["ffn"],
                                  layers.rmsnorm(sp["ln2"], xc, cfg.norm_eps))
-            return (hint(xc, "activation"), kp_all, vp_all), (cv1, h1)
+            return (hint(xc, "activation"), kp_all, vp_all, ks_all,
+                    vs_all), (cv1, h1)
 
-        (x, kp, vp), (conv_g, ssm_g) = lax.scan(
-            group_body,
-            (x, state["attn"]["k_pages"], state["attn"]["v_pages"]),
+        (x, kp, vp, ks, vs), (conv_g, ssm_g) = lax.scan(
+            group_body, (x,) + _attn_pages_in(state),
             (params["groups"], conv_g, ssm_g, jnp.arange(g)))
         new_state = {"conv_g": _slot_put(state["conv_g"], conv_g, slot, 2),
                      "ssm_g": _slot_put(state["ssm_g"], ssm_g, slot, 2),
-                     "attn": {"k_pages": kp, "v_pages": vp}}
+                     "attn": _attn_pages_out(kp, vp, ks, vs)}
         if tail:
             conv_t = _slot_slice(state["conv_t"], slot, 1)
             ssm_t = _slot_slice(state["ssm_t"], slot, 1)
@@ -673,23 +714,25 @@ def serve_decode_step(cfg: ModelConfig, params, state, tokens, lengths,
         return hint(xc + y, "activation"), (conv1, h1)
 
     def group_body(carry, xs):
-        xc, kp_all, vp_all = carry
+        xc, kp_all, vp_all, ks_all, vs_all = carry
         gp, conv, h, gi = xs
         xc, (conv1, h1) = lax.scan(mamba_body, xc, (gp, conv, h))
         hh = layers.rmsnorm(sp["ln1"], xc, cfg.norm_eps)
-        y, kp_all, vp_all = layers.attention_decode_paged(
+        y, kp_all, vp_all, ks_all, vs_all = layers.attention_decode_paged(
             sp["attn"], hh, cfg, kp_all, vp_all, gi, lengths, block_tables,
-            window=attn_window, seq_axis=seq_axis)
+            window=attn_window, seq_axis=seq_axis, ks_all=ks_all,
+            vs_all=vs_all)
         xc = xc + y
         xc = xc + layers.ffn(sp["ffn"],
                              layers.rmsnorm(sp["ln2"], xc, cfg.norm_eps))
-        return (hint(xc, "activation"), kp_all, vp_all), (conv1, h1)
+        return (hint(xc, "activation"), kp_all, vp_all, ks_all,
+                vs_all), (conv1, h1)
 
-    (x, kp, vp), (conv_g, ssm_g) = lax.scan(
-        group_body, (x, state["attn"]["k_pages"], state["attn"]["v_pages"]),
+    (x, kp, vp, ks, vs), (conv_g, ssm_g) = lax.scan(
+        group_body, (x,) + _attn_pages_in(state),
         (params["groups"], state["conv_g"], state["ssm_g"], jnp.arange(g)))
     new_state = {"conv_g": conv_g, "ssm_g": ssm_g,
-                 "attn": {"k_pages": kp, "v_pages": vp}}
+                 "attn": _attn_pages_out(kp, vp, ks, vs)}
     if tail:
         x, (conv_t, ssm_t) = lax.scan(mamba_body, x,
                                       (params["tail"], state["conv_t"],

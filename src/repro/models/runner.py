@@ -126,17 +126,23 @@ class ModelRunner:
     """
 
     def __init__(self, cfg: ModelConfig, slots: int, max_seq: int,
-                 q_tile: Optional[int] = None):
+                 q_tile: Optional[int] = None, kv_dtype: str = "fp16"):
+        if kv_dtype not in ("fp16", "int8"):
+            raise ValueError(
+                f"kv_dtype must be 'fp16' or 'int8', got {kv_dtype!r}")
         self.cfg = cfg
         self.slots = slots
         self.max_seq = max_seq
         self.q_tile = q_tile        # prefill-kernel query-tile override
+        self.kv_dtype = kv_dtype    # page storage: 'fp16' (= engine dtype)
+        #                             or 'int8' (+ per-page-per-head scales)
         self.spec = cache_spec(cfg)
 
     # -- state ---------------------------------------------------------
     def init_state(self, num_blocks: int, block_size: int, dtype):
         return M.init_serve_state(self.cfg, self.slots, num_blocks,
-                                  block_size, dtype=dtype)
+                                  block_size, dtype=dtype,
+                                  kv_dtype=self.kv_dtype)
 
     def init_dense_state(self, dtype):
         """The legacy dense ``[slots, max_seq]``-slab A/B baseline state."""
@@ -215,13 +221,14 @@ class ModelRunner:
 
     def extract_pages(self, state, pages):
         """Gather physical pages by id — the device->host half of a page
-        swap.  Returns (k, v) ``[A, KvH, P, BS, hd]``."""
+        swap.  Returns (k, v, k_scales, v_scales): pages
+        ``[A, KvH, P, BS, hd]``, scales ``[A, KvH, P]`` (None on fp16)."""
         return M.extract_kv_pages(state, pages)
 
-    def insert_pages(self, state, pages, k, v):
+    def insert_pages(self, state, pages, k, v, k_scales=None, v_scales=None):
         """Scatter swapped-out pages back — the host->device half of a
         page swap (non-paged state entries pass through untouched)."""
-        return M.insert_kv_pages(state, pages, k, v)
+        return M.insert_kv_pages(state, pages, k, v, k_scales, v_scales)
 
     # -- paged-component geometry -------------------------------------
     def page_shape(self, block_size: int) -> Tuple[int, ...]:
@@ -229,6 +236,14 @@ class ModelRunner:
         return comp.page_shape(block_size)
 
     def page_kv_bytes(self, block_size: int, itemsize: int) -> int:
+        """Bytes of ONE physical page across paged components, K and V.
+        ``itemsize`` is the *engine* dtype's width; with ``kv_dtype='int8'``
+        pages store 1-byte values plus a per-page-per-head f32 scale for
+        each of K and V."""
+        if self.kv_dtype == "int8":
+            return sum(c.page_kv_bytes(block_size, 1)
+                       + 2 * c.n_apps * c.kv_heads * 4
+                       for c in self.spec.paged)
         return sum(c.page_kv_bytes(block_size, itemsize)
                    for c in self.spec.paged)
 
@@ -247,6 +262,9 @@ class ModelRunner:
         for c in self.spec.paged:
             p = P(None, None, seq_axis)
             specs[c.name] = {"k_pages": p, "v_pages": p}
+            if self.kv_dtype == "int8":
+                # scales [A, KvH, NB]: page axis 2, same sharding as pages
+                specs[c.name].update(k_scales=p, v_scales=p)
         for s in self.spec.slot_state:
             specs[s.key] = P()
         return specs

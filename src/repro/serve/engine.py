@@ -172,11 +172,13 @@ def _next_pow2(n: int) -> int:
 
 
 def _page_digests(prompt: np.ndarray, block_size: int, n_pages: int,
-                  ) -> List[bytes]:
+                  seed: bytes = b"\x00" * 16) -> List[bytes]:
     """Chained (rolling) content hash per full prompt page: page i's digest
     commits to every token in [0, (i+1)*BS), so equal digests <=> equal
-    page *prefix* — exactly the sharing condition for causal KV."""
-    digests, parent = [], b"\x00" * 16
+    page *prefix* — exactly the sharing condition for causal KV.  ``seed``
+    starts the chain; the engine folds ``kv_dtype`` into it so pages stored
+    in different formats can never alias in the prefix registry."""
+    digests, parent = [], seed
     for i in range(n_pages):
         h = hashlib.blake2b(parent, digest_size=16)
         h.update(np.ascontiguousarray(
@@ -395,7 +397,8 @@ class ServeEngine:
                  swap_pages: Optional[int] = None,
                  class_weights: Optional[Dict[str, float]] = None,
                  proactive_horizon: int = 0,
-                 q_tile: Optional[int] = None):
+                 q_tile: Optional[int] = None,
+                 kv_dtype: str = "fp16"):
         """Stand up a serving engine over ``params``.
 
         Args:
@@ -459,6 +462,14 @@ class ServeEngine:
             the kernel's VMEM budget, so big buckets tile and small ones
             run single-tile).  Never changes results — only the kernel's
             VMEM footprint and dispatch granularity.
+          kv_dtype: KV-page storage format.  ``"fp16"`` (default) stores
+            pages in the engine dtype — bit-exact with the historical
+            behavior.  ``"int8"`` stores quantized pages plus a
+            per-page-per-head f32 scale for each of K and V: ~half (vs
+            bf16 params) the pool bytes per page, so the same byte budget
+            holds about twice the concurrent sequences, at a bounded
+            logit divergence.  The paged kernels dequantize in their
+            inner page loop; requires a paged KV component.
         """
         self.cfg = cfg
         self.params = params
@@ -466,10 +477,15 @@ class ServeEngine:
         self.slots = slots
         self.rng = jax.random.key(seed)
         self.dtype = jax.tree.leaves(params)[0].dtype
+        if kv_dtype not in ("fp16", "int8"):
+            raise ValueError(
+                f"kv_dtype must be 'fp16' or 'int8', got {kv_dtype!r}")
+        self.kv_dtype = kv_dtype
         # Family behavior is fully described by the CacheSpec contract —
         # cfg.family is never consulted past this constructor.
         self.q_tile = None if q_tile is None else int(q_tile)
-        self.runner = ModelRunner(cfg, slots, max_seq, q_tile=self.q_tile)
+        self.runner = ModelRunner(cfg, slots, max_seq, q_tile=self.q_tile,
+                                  kv_dtype=kv_dtype)
         spec = self.runner.spec
         if paged and not spec.has_paged:
             raise ValueError(
@@ -485,6 +501,10 @@ class ServeEngine:
         self.paged = (not self.dense_baseline) and spec.has_paged
         self.has_slot_state = ((not self.dense_baseline)
                                and spec.has_slot_state)
+        if self.kv_dtype == "int8" and not self.paged:
+            raise ValueError(
+                "kv_dtype='int8' quantizes the paged page pool — serve "
+                "with a paged KV component (or keep kv_dtype='fp16')")
         if prefix_caching and not self.paged:
             raise ValueError("prefix_caching requires a paged KV component")
         self.prefix_caching = self.paged if prefix_caching is None \
@@ -494,6 +514,11 @@ class ServeEngine:
         # prefill compute at admission: cached pages cannot reconstruct
         # the recurrent state that must advance through those tokens.
         self.prefix_attach = self.prefix_caching and not self.has_slot_state
+        # kv_dtype-salted digest-chain seed: int8 and fp16 pages can never
+        # alias in the prefix registry (their stored bytes differ even for
+        # identical token prefixes)
+        self._digest_seed = hashlib.blake2b(
+            b"kv_dtype:" + self.kv_dtype.encode(), digest_size=16).digest()
 
         self.seq_shards = int(seq_shards)
         if self.seq_shards < 1 or (self.seq_shards & (self.seq_shards - 1)):
@@ -642,6 +667,13 @@ class ServeEngine:
             # core.noc.softmax_combine_cost
             "noc_combines": 0, "noc_hops": 0, "noc_bytes": 0,
             "noc_energy_pj": 0.0,
+            # capacity accounting: kv_bytes_per_page is the static cost of
+            # ONE physical page at the engine's kv_dtype (int8: 1-byte
+            # values + per-page scales); peak_active is the high-water mark
+            # of concurrently occupied slots — the behavioral concurrency a
+            # byte-budgeted pool sustains
+            "kv_bytes_per_page": self._page_kv_bytes() if self.paged else 0,
+            "peak_active": 0,
         }
         self._prefill_fns: Dict[int, object] = {}
         self._decode = self._make_decode_fn()
@@ -800,7 +832,8 @@ class ServeEngine:
                 # so a hit can never dangle across an eviction while queued
                 req._digests = _page_digests(
                     prompt, self.block_size,
-                    self._plen(req) // self.block_size)
+                    self._plen(req) // self.block_size,
+                    seed=self._digest_seed)
         self.class_stats[req.priority]["submitted"] += 1
         self._queues[req.priority].append(req)
         return req.rid
@@ -1020,13 +1053,20 @@ class ServeEngine:
                 return False
             pages.append(page)
         if pages:
-            k, v = self._arena.read(handle.slots)
+            if self.kv_dtype == "int8":
+                k, v, ks, vs = self._arena.read(handle.slots)
+            else:
+                k, v = self._arena.read(handle.slots)
             for sh, idx in self._by_shard(pages):
                 ids = self._pad_pow2([pages[i] for i in idx])
-                self.state = self._insert_pages(
-                    self.state, jnp.asarray(ids),
-                    jnp.asarray(self._pad_pages(np.moveaxis(k[idx], 0, 2))),
-                    jnp.asarray(self._pad_pages(np.moveaxis(v[idx], 0, 2))))
+                args = [jnp.asarray(ids),
+                        jnp.asarray(self._pad_pages(np.moveaxis(k[idx], 0, 2))),
+                        jnp.asarray(self._pad_pages(np.moveaxis(v[idx], 0, 2)))]
+                if self.kv_dtype == "int8":
+                    args += [
+                        jnp.asarray(self._pad_pages(np.moveaxis(ks[idx], 0, 2))),
+                        jnp.asarray(self._pad_pages(np.moveaxis(vs[idx], 0, 2)))]
+                self.state = self._insert_pages(self.state, *args)
         if handle.state is not None:
             self.state = self.runner.insert_slot_state(self.state, slot,
                                                        handle.state)
@@ -1068,8 +1108,9 @@ class ServeEngine:
 
     @staticmethod
     def _pad_pages(kv: np.ndarray) -> np.ndarray:
-        """Zero-pad the page axis (2) of ``[L, KvH, P, BS, hd]`` to pow2 to
-        match :meth:`_pad_pow2`'s id padding."""
+        """Zero-pad the page axis (2) of ``[L, KvH, P, BS, hd]`` pages (or
+        ``[L, KvH, P]`` scales) to pow2 to match :meth:`_pad_pow2`'s id
+        padding."""
         p = kv.shape[2]
         b = _next_pow2(p)
         if b == p:
@@ -1311,8 +1352,9 @@ class ServeEngine:
             elif spare >= 1:
                 spare -= 1
                 live.append(i)
-        self.stats["occupancy_sum"] += (
-            sum(r is not None for r in self.active) / self.slots)
+        n_active = sum(r is not None for r in self.active)
+        self.stats["occupancy_sum"] += n_active / self.slots
+        self.stats["peak_active"] = max(self.stats["peak_active"], n_active)
         if live:
             runnable = []
             for i in live:
@@ -1552,7 +1594,10 @@ class ServeEngine:
         return self.runner.page_shape(self.block_size)
 
     def _page_kv_bytes(self) -> int:
-        """Bytes of one physical page across all applications, K and V."""
+        """Bytes of one physical page across all applications, K and V,
+        at the pool's *storage* width — int8 pools count 1-byte values
+        plus their per-page scales, so swap/restore link costs and the
+        preemption cost model price the bytes actually moved."""
         return self.runner.page_kv_bytes(self.block_size,
                                          jnp.dtype(self.dtype).itemsize)
 
@@ -1588,9 +1633,11 @@ class ServeEngine:
             if self._arena is None:
                 if self.swap_pages < 1:
                     return False
-                self._arena = swap.SwapArena(self.swap_pages,
-                                             self._page_shape(),
-                                             jnp.dtype(self.dtype))
+                quant = self.kv_dtype == "int8"
+                self._arena = swap.SwapArena(
+                    self.swap_pages, self._page_shape(),
+                    jnp.dtype(jnp.int8) if quant else jnp.dtype(self.dtype),
+                    quantized=quant)
             handle = self._arena.alloc(len(rest))
             if handle is None:
                 return False
@@ -1605,10 +1652,13 @@ class ServeEngine:
             handle.state_bytes = self._slot_state_bytes
         for sh, idx in self._by_shard(rest):
             ids = self._pad_pow2([rest[i] for i in idx])
-            k, v = self._extract_pages(self.state, jnp.asarray(ids))
+            k, v, ks, vs = self._extract_pages(self.state, jnp.asarray(ids))
             k = np.moveaxis(np.asarray(k), 2, 0)[:len(idx)]
             v = np.moveaxis(np.asarray(v), 2, 0)[:len(idx)]
-            self._arena.write([handle.slots[i] for i in idx], k, v)
+            if ks is not None:
+                ks = np.moveaxis(np.asarray(ks), 2, 0)[:len(idx)]
+                vs = np.moveaxis(np.asarray(vs), 2, 0)[:len(idx)]
+            self._arena.write([handle.slots[i] for i in idx], k, v, ks, vs)
         self.stats["swap_bytes"] += (len(rest) * self._page_kv_bytes()
                                      + handle.state_bytes)
         req._swap = handle
@@ -1624,7 +1674,8 @@ class ServeEngine:
         bs = self.block_size
         n_full = len(kv_seq) // bs
         if n_full > len(req._digests):
-            req._digests = _page_digests(kv_seq, bs, n_full)
+            req._digests = _page_digests(kv_seq, bs, n_full,
+                                         seed=self._digest_seed)
 
     def _publish_resume_pages(self, slot: int, req: Request,
                               live_tokens: int) -> None:
@@ -1678,6 +1729,8 @@ class ServeEngine:
         stays out of the timed run."""
         for k in self.stats:
             self.stats[k] = 0
+        self.stats["kv_bytes_per_page"] = (self._page_kv_bytes()
+                                           if self.paged else 0)
         self.class_stats = {cls: self._zero_class_stats()
                             for cls in self.class_order}
         if self.paged:

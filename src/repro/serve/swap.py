@@ -73,19 +73,32 @@ class SwapArena:
     falls back to the recompute policy for that victim.
     """
 
-    def __init__(self, capacity: int, page_shape: Tuple[int, ...], dtype):
+    def __init__(self, capacity: int, page_shape: Tuple[int, ...], dtype,
+                 quantized: bool = False):
         if capacity < 1:
             raise ValueError(f"swap arena needs capacity >= 1, got {capacity}")
         self.capacity = capacity
         self.page_shape = tuple(page_shape)
+        self.quantized = quantized
         self._k = np.zeros((capacity,) + self.page_shape, dtype)
         self._v = np.zeros_like(self._k)
+        if quantized:
+            # per-page-per-head scales [L, KvH] ride with each parked page
+            sshape = (capacity,) + self.page_shape[:2]
+            self._ks = np.ones(sshape, np.float32)
+            self._vs = np.ones(sshape, np.float32)
+        else:
+            self._ks = self._vs = None
         self._free = list(range(capacity - 1, -1, -1))  # pop lowest-id first
 
     @property
     def page_bytes(self) -> int:
-        """Bytes of ONE page counting both K and V."""
-        return 2 * self._k[0].nbytes
+        """Bytes of ONE page counting both K and V (and, for a quantized
+        arena, the per-page scales)."""
+        n = 2 * self._k[0].nbytes
+        if self.quantized:
+            n += 2 * self._ks[0].nbytes
+        return n
 
     @property
     def free_pages(self) -> int:
@@ -101,13 +114,22 @@ class SwapArena:
             return None
         return SwapHandle([self._free.pop() for _ in range(n_pages)])
 
-    def write(self, slots: List[int], k: np.ndarray, v: np.ndarray) -> None:
-        """Park pages: k/v are ``[n, L, KvH, BS, hd]`` (page axis leading)."""
+    def write(self, slots: List[int], k: np.ndarray, v: np.ndarray,
+              k_scales: Optional[np.ndarray] = None,
+              v_scales: Optional[np.ndarray] = None) -> None:
+        """Park pages: k/v are ``[n, L, KvH, BS, hd]`` (page axis leading);
+        a quantized arena also takes scales ``[n, L, KvH]``."""
         self._k[slots] = k
         self._v[slots] = v
+        if self.quantized:
+            self._ks[slots] = k_scales
+            self._vs[slots] = v_scales
 
-    def read(self, slots: List[int]) -> Tuple[np.ndarray, np.ndarray]:
-        """Page data for ``slots``, page axis leading (restore direction)."""
+    def read(self, slots: List[int]):
+        """Page data for ``slots``, page axis leading (restore direction):
+        ``(k, v)``, or ``(k, v, k_scales, v_scales)`` when quantized."""
+        if self.quantized:
+            return self._k[slots], self._v[slots], self._ks[slots], self._vs[slots]
         return self._k[slots], self._v[slots]
 
     def free(self, handle: SwapHandle) -> None:

@@ -1,0 +1,124 @@
+"""tools/check_bench_smoke.py: the consolidated CI benchmark gate.
+
+Synthetic BENCH_serve.json artifacts drive both lanes end-to-end through
+``main()`` — a healthy artifact exits 0, and each gated regression
+(token mismatch, capacity ratio below 2x, unbounded logit divergence,
+missing pool pressure) flips the exit code.  Keeping this tested means
+a ci.yml refactor can never silently drop an assertion the old inline
+heredocs enforced.
+"""
+import copy
+import json
+
+import pytest
+
+from tools import check_bench_smoke as cbs
+
+
+def _capacity():
+    return {
+        "page_bytes": {"fp16": 4096, "int8": 1056},
+        "capacity_ratio": 4.0, "outputs_match": True,
+        "logit_divergence": 0.02, "int8_tok_s": 1500.0,
+        "fp16": {"preemptions": 0},
+        "int8": {"preemptions": 0},
+        "fp16_overload": {"preemptions": 3},
+    }
+
+
+def _full_artifact():
+    classes = {
+        "interactive": {"ttft_p99_ticks": 4.0, "goodput_tok_s": 100.0},
+        "batch": {"ttft_p99_ticks": 9.0, "goodput_tok_s": 50.0},
+    }
+    pro_classes = {
+        "interactive": {"ttft_p99_ticks": 2.0, "goodput_tok_s": 120.0},
+        "batch": {"ttft_p99_ticks": 8.0, "goodput_tok_s": 60.0},
+    }
+    leg = {
+        "baseline": {"outputs_match": True, "classes": classes},
+        "proactive": {"outputs_match": True, "preempt_proactive": 2,
+                      "classes": pro_classes},
+    }
+    return {
+        "mixed": {"outputs_match": True},
+        "family": {"arch": "zamba2-7b", "outputs_match": True,
+                   "paged": True, "slot_state": True, "tok_s": 900.0},
+        "shared_prefix": {"outputs_match": True, "ttft_p50_speedup": 3.0,
+                          "cache_on": {"prefix_hit_rate": 0.9}},
+        "preempted": {
+            "outputs_match": True,
+            "swap": {"preemptions": 2, "swap_bytes": 4096,
+                     "restored_tokens": 30, "goodput_tok_s": 80.0},
+            "recompute": {"preemptions": 2, "goodput_tok_s": 70.0},
+        },
+        "traffic": {"poisson": copy.deepcopy(leg),
+                    "bursty": copy.deepcopy(leg)},
+        "capacity": _capacity(),
+    }
+
+
+def _sharded_artifact():
+    return {
+        "sharded": {"seq_shards": 4, "outputs_match": True,
+                    "sharded": {"noc_hops": 12}},
+        "preempted_sharded": {
+            "seq_shards": 4, "outputs_match": True,
+            "swap": {"preemptions": 1, "restored_ratio": 0.8},
+            "recompute": {"preemptions": 1, "restored_ratio": 0.0},
+        },
+        "capacity": _capacity(),
+    }
+
+
+def _run(tmp_path, artifact, lane):
+    p = tmp_path / "bench.json"
+    p.write_text(json.dumps(artifact))
+    return cbs.main([str(p), "--lane", lane])
+
+
+def test_full_lane_passes(tmp_path):
+    assert _run(tmp_path, _full_artifact(), "full") == 0
+
+
+def test_sharded_lane_passes(tmp_path):
+    assert _run(tmp_path, _sharded_artifact(), "sharded") == 0
+
+
+def test_capacity_leg_optional(tmp_path):
+    """Artifacts that predate the quantized leg still pass (the capacity
+    check skips, it does not fail) — mirrors the trajectory gate."""
+    art = _full_artifact()
+    del art["capacity"]
+    assert _run(tmp_path, art, "full") == 0
+
+
+@pytest.mark.parametrize("mutate", [
+    lambda a: a["mixed"].update(outputs_match=False),
+    lambda a: a["family"].update(outputs_match=False),
+    lambda a: a["shared_prefix"].update(ttft_p50_speedup=1.2),
+    lambda a: a["preempted"]["swap"].update(preemptions=0),
+    lambda a: a["traffic"]["poisson"]["proactive"]["classes"][
+        "interactive"].update(ttft_p99_ticks=99.0),
+    lambda a: a["capacity"].update(capacity_ratio=1.5),
+    lambda a: a["capacity"].update(logit_divergence=0.5),
+    lambda a: a["capacity"].update(outputs_match=False),
+    lambda a: a["capacity"]["int8"].update(preemptions=2),
+    lambda a: a["capacity"]["fp16_overload"].update(preemptions=0),
+])
+def test_full_lane_fails_on_regression(tmp_path, mutate):
+    art = _full_artifact()
+    mutate(art)
+    assert _run(tmp_path, art, "full") == 1
+
+
+@pytest.mark.parametrize("mutate", [
+    lambda a: a["sharded"].update(outputs_match=False),
+    lambda a: a["sharded"]["sharded"].update(noc_hops=0),
+    lambda a: a["preempted_sharded"]["swap"].update(preemptions=0),
+    lambda a: a["capacity"].update(capacity_ratio=1.0),
+])
+def test_sharded_lane_fails_on_regression(tmp_path, mutate):
+    art = _sharded_artifact()
+    mutate(art)
+    assert _run(tmp_path, art, "sharded") == 1

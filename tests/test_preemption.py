@@ -112,8 +112,9 @@ def test_kv_page_extract_insert_roundtrip(rng):
         "k_pages": jnp.asarray(rng.normal(size=(2, 1, 8, 4, 2)), jnp.float32),
         "v_pages": jnp.asarray(rng.normal(size=(2, 1, 8, 4, 2)), jnp.float32),
     }}
-    k, v = M.extract_kv_pages(state, jnp.asarray([2, 5], jnp.int32))
+    k, v, ks, vs = M.extract_kv_pages(state, jnp.asarray([2, 5], jnp.int32))
     assert k.shape == (2, 1, 2, 4, 2)
+    assert ks is None and vs is None      # fp16 pool carries no scales
     blank = jax.tree.map(jnp.zeros_like, state)
     back = M.insert_kv_pages(blank, jnp.asarray([7, 3], jnp.int32), k, v)
     np.testing.assert_array_equal(

@@ -1,0 +1,330 @@
+"""int8-quantized paged KV: kernel parity, engine round-trips, cost model.
+
+The pool stores KV pages as int8 with one f32 scale per (page, kv-head)
+for each of K and V; the paged kernels dequantize inside the inner page
+loop, so the (acc, m, l) partials contract, ``skip_null`` shard-local
+tables, q-tiling, and the NoC tree combine all compose unchanged.  Two
+oracles anchor every kernel test:
+
+* the *dequantized* oracle — ``ref`` over ``q8 * scale`` float pages —
+  must match near-bit-exactly (identical math, both f32);
+* the *float* oracle — ``ref`` over the original unquantized pages —
+  bounds the quantization error itself.
+
+Engine-level: the fp16 default stays token-identical (quantization is
+strictly opt-in), prefix-cache hits and COW splits round-trip scales,
+and swap preemption restores int8 pages + scales verbatim (token
+identity under pressure).  The ``core.noc`` cost model prices pages at
+their storage width, shifting the swap-vs-recompute crossover.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import noc
+from repro.kernels import decode_attention as da
+from repro.kernels import prefill_attention as pf
+from repro.kernels import ref
+from repro.models import model as M
+from repro.models.layers import KV_SCALE_EPS
+from repro.models.runner import ModelRunner
+from repro.serve import ServeEngine
+
+# worst-case per-element dequantization error on N(0,1) pages is about
+# amax/254 ~ 0.02; attention outputs are convex combinations of V rows
+# with K-side weight perturbations on top, so 0.1 is a loose but
+# meaningful bound for the float-oracle comparison
+QUANT_ATOL = 0.1
+
+
+def _quantize(pages):
+    """Per-(kv-head, page) symmetric int8 quantization of [KvH,NB,BS,d]."""
+    p = np.asarray(pages, np.float32)
+    s = np.maximum(np.abs(p).max(axis=(2, 3)) / 127.0, KV_SCALE_EPS)
+    q = np.clip(np.round(p / s[..., None, None]), -127, 127)
+    return jnp.asarray(q, jnp.int8), jnp.asarray(s, jnp.float32)
+
+
+def _dequant(q8, s):
+    return q8.astype(jnp.float32) * s[..., None, None]
+
+
+def _decode_case(rng, b=3, h=6, kvh=2, nb=10, bs=8, d=16, mb=4):
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(kvh, nb, bs, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(kvh, nb, bs, d)), jnp.float32)
+    bt = jnp.asarray(np.stack([rng.permutation(nb - 1)[:mb] + 1
+                               for _ in range(b)]), jnp.int32)
+    lengths = jnp.asarray(rng.integers(1, mb * bs + 1, b), jnp.int32)
+    return q, kp, vp, bt, lengths
+
+
+def _prefill_case(rng, kvh=2, nb=14, bs=8, d=16, h=6, c=12, n_pages=5):
+    q = jnp.asarray(rng.normal(size=(1, c, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(kvh, nb, bs, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(kvh, nb, bs, d)), jnp.float32)
+    bt = jnp.asarray(rng.permutation(nb - 1)[:n_pages] + 1, jnp.int32)
+    return q, kp, vp, bt
+
+
+# ---------------------------------------------------------------------------
+# kernel parity: interpret-mode Pallas vs the two oracles
+# ---------------------------------------------------------------------------
+
+def test_quant_decode_parity_gqa_sweep(rng):
+    """Decode kernel over an int8 pool: near-bit-exact vs the dequantized
+    oracle and boundedly off the float oracle, at every GQA shape (grouped,
+    MHA, one KV head serving all query heads)."""
+    for h, kvh in ((6, 2), (4, 4), (8, 1)):
+        q, kp, vp, bt, lengths = _decode_case(rng, h=h, kvh=kvh)
+        (k8, ks), (v8, vs) = _quantize(kp), _quantize(vp)
+        want = ref.paged_decode_attention(q, _dequant(k8, ks),
+                                          _dequant(v8, vs), bt,
+                                          lengths=lengths)
+        got_ref = ref.paged_decode_attention(q, k8, v8, bt, lengths=lengths,
+                                             k_scales=ks, v_scales=vs)
+        got_ker = da.paged_decode_attention(q, k8, v8, bt, lengths=lengths,
+                                            k_scales=ks, v_scales=vs,
+                                            interpret=True)
+        np.testing.assert_allclose(np.asarray(got_ref), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"h={h} kvh={kvh} (ref)")
+        np.testing.assert_allclose(np.asarray(got_ker), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"h={h} kvh={kvh} (kernel)")
+        oracle = ref.paged_decode_attention(q, kp, vp, bt, lengths=lengths)
+        err = np.max(np.abs(np.asarray(got_ker) - np.asarray(oracle)))
+        assert err < QUANT_ATOL, f"h={h} kvh={kvh}: quant error {err}"
+
+
+def test_quant_prefill_parity_qtile_sweep(rng):
+    """Prefill kernel over an int8 pool across q-tile choices (including
+    tiles that do not divide C) and (q_offset, length) dispatch shapes."""
+    c = 12
+    q, kp, vp, bt = _prefill_case(rng, c=c)
+    (k8, ks), (v8, vs) = _quantize(kp), _quantize(vp)
+    for qoff, ln in [(0, c), (5, c), (17, 3)]:
+        kw = dict(q_offset=jnp.int32(qoff), length=jnp.int32(ln))
+        want = ref.paged_prefill_attention(q, _dequant(k8, ks),
+                                           _dequant(v8, vs), bt, **kw)
+        oracle = ref.paged_prefill_attention(q, kp, vp, bt, **kw)
+        for t in (None, 4, 8, c):
+            got = pf.paged_prefill_attention(q, k8, v8, bt, q_tile=t,
+                                             k_scales=ks, v_scales=vs,
+                                             interpret=True, **kw)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=f"q_tile={t} {kw}")
+            err = np.max(np.abs(np.asarray(got) - np.asarray(oracle)))
+            assert err < QUANT_ATOL, f"q_tile={t} {kw}: quant error {err}"
+
+
+def test_quant_prefill_parity_gqa_corners(rng):
+    for h, kvh in ((4, 4), (8, 1)):
+        q, kp, vp, bt = _prefill_case(rng, h=h, kvh=kvh, c=10)
+        (k8, ks), (v8, vs) = _quantize(kp), _quantize(vp)
+        kw = dict(q_offset=jnp.int32(7), length=jnp.int32(10))
+        want = ref.paged_prefill_attention(q, _dequant(k8, ks),
+                                           _dequant(v8, vs), bt, **kw)
+        got = pf.paged_prefill_attention(q, k8, v8, bt, q_tile=5,
+                                         k_scales=ks, v_scales=vs,
+                                         interpret=True, **kw)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"h={h} kvh={kvh}")
+
+
+def test_quant_skip_null_all_foreign_qtile_identity(rng):
+    """A q-tile whose causal window is entirely foreign (zero table
+    entries, ``skip_null``) must emit the combine identity even when the
+    pool is quantized — and folding both shards' partials reproduces the
+    unsharded dequantized oracle."""
+    bs, c, t = 8, 16, 4
+    q, kp, vp, bt = _prefill_case(rng, c=c, n_pages=4)
+    (k8, ks), (v8, vs) = _quantize(kp), _quantize(vp)
+    kw = dict(q_offset=jnp.int32(0), length=jnp.int32(c))
+    want = ref.paged_prefill_attention(q, _dequant(k8, ks),
+                                       _dequant(v8, vs), bt, **kw)
+    bt_np = np.asarray(bt)
+    s0 = jnp.asarray(np.where(np.arange(4) < 2, bt_np, 0), jnp.int32)
+    s1 = jnp.asarray(np.where(np.arange(4) >= 2, bt_np, 0), jnp.int32)
+    quant = dict(k_scales=ks, v_scales=vs, skip_null=True, q_tile=t,
+                 interpret=True)
+    p0 = pf.paged_prefill_attention_partial(q, k8, v8, s0, **quant, **kw)
+    p1 = pf.paged_prefill_attention_partial(q, k8, v8, s1, **quant, **kw)
+    acc1, m1, l1 = (np.asarray(x) for x in p1)
+    rows = slice(0, t)       # q-tile 0's window sits wholly in page 0
+    assert np.all(acc1[0, rows] == 0.0)
+    assert np.all(m1[0, rows] == pf.NEG_INF)
+    assert np.all(l1[0, rows] == 0.0)
+    acc, m, l = ref.combine_partials(p0, p1)
+    merged = acc / jnp.maximum(l, 1e-30)[..., None]
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_quant_decode_partials_fold_four_shards(rng):
+    """4-way shard-local decode partials over an int8 pool fold (via
+    ``ref.combine_partials``, the reduction ``noc.tree_softmax_combine``
+    runs over the mesh) into the unsharded quantized output."""
+    q, kp, vp, bt, lengths = _decode_case(rng, mb=4)
+    (k8, ks), (v8, vs) = _quantize(kp), _quantize(vp)
+    want = ref.paged_decode_attention(q, k8, v8, bt, lengths=lengths,
+                                      k_scales=ks, v_scales=vs)
+    bt_np = np.asarray(bt)
+    parts = []
+    for s in range(4):
+        local = jnp.asarray(np.where(np.arange(4)[None] == s, bt_np, 0),
+                            jnp.int32)
+        parts.append(da.paged_decode_attention_partial(
+            q, k8, v8, local, lengths=lengths, skip_null=True,
+            k_scales=ks, v_scales=vs, interpret=True))
+    acc, m, l = parts[0]
+    for p in parts[1:]:
+        acc, m, l = ref.combine_partials((acc, m, l), p)
+    merged = acc / jnp.maximum(l, 1e-30)[..., None]
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine round-trips
+# ---------------------------------------------------------------------------
+
+def _cfg_params():
+    cfg = reduced(get_config("stablelm-1.6b"))
+    params = M.init_params(cfg, jax.random.key(0), dtype=jnp.float32)
+    return cfg, params
+
+
+def _reqs(cfg, n=3, plen=12, mnt=6, seed=0):
+    r = np.random.default_rng(seed)
+    return [(r.integers(0, cfg.vocab_size, plen).tolist(),
+             dict(max_new_tokens=mnt)) for _ in range(n)]
+
+
+def _drain(eng, reqs):
+    for p, kw in reqs:
+        eng.submit(p, **kw)
+    done = eng.run_until_drained()
+    return {r.rid: tuple(r.out_tokens) for r in done}
+
+
+def test_engine_kv_dtype_validation():
+    cfg, params = _cfg_params()
+    with pytest.raises(ValueError, match="kv_dtype"):
+        ServeEngine(cfg, params, paged=True, max_seq=32, slots=2,
+                    kv_dtype="int4")
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(cfg, params, paged=False, max_seq=32, slots=2,
+                    kv_dtype="int8")
+
+
+def test_engine_fp16_default_token_identity_and_int8_drains():
+    """``kv_dtype='fp16'`` is the default and must stay token-identical to
+    an engine that never mentions the knob; the int8 engine drains the
+    same stream with >2x cheaper pages."""
+    cfg, params = _cfg_params()
+    reqs = _reqs(cfg)
+    mk = dict(paged=True, max_seq=48, slots=2, block_size=8,
+              prefill_buckets=(16,))
+    toks_default = _drain(ServeEngine(cfg, params, **mk), reqs)
+    eng16 = ServeEngine(cfg, params, kv_dtype="fp16", **mk)
+    assert _drain(eng16, reqs) == toks_default
+    eng8 = ServeEngine(cfg, params, kv_dtype="int8", **mk)
+    toks8 = _drain(eng8, reqs)
+    assert sorted(toks8) == sorted(toks_default)       # same rids finish
+    assert all(len(t) == 6 for t in toks8.values())
+    assert eng8.stats["kv_bytes_per_page"] * 2 < \
+        eng16.stats["kv_bytes_per_page"]
+
+
+def test_engine_int8_prefix_hits_and_cow_round_trip_scales():
+    """Prefix caching over a quantized pool: a repeated prompt re-attaches
+    its int8 page chain by reference (the match cap lands mid-page, so
+    the trailing page is COW-split and its scales copied), and outputs
+    stay token-identical to the cache-off engine."""
+    cfg, params = _cfg_params()
+    # 16 tokens = two full pages at bs=8, but the match is capped at
+    # plen-1 = 15 (the final logits must come from a real prefill chunk),
+    # which lands mid-page -> the second shared page must COW-split
+    prompt = list(range(1, 17))
+    reqs = [(prompt, dict(max_new_tokens=5))] * 3
+    mk = dict(paged=True, max_seq=48, slots=2, block_size=8,
+              prefill_buckets=(32,), kv_dtype="int8")
+    toks_off = _drain(ServeEngine(cfg, params, prefix_caching=False, **mk),
+                      reqs)
+    eng = ServeEngine(cfg, params, prefix_caching=True, **mk)
+    toks_on = _drain(eng, reqs)
+    assert toks_on == toks_off
+    assert eng.stats["prefix_hits"] >= 1
+    assert eng.stats["cow_copies"] >= 1                # 16-token mid-page cap
+    assert eng.stats["pages_shared"] >= 1
+
+
+def test_engine_int8_swap_restore_preserves_tokens():
+    """Swap preemption on a quantized pool parks int8 pages + per-page
+    scales in the host arena and restores both verbatim: greedy outputs
+    under pressure stay token-identical to the unpressured int8 run."""
+    cfg, params = _cfg_params()
+    bs, plen, mnt = 8, 10, 14
+    pages = -(-(plen + mnt) // bs)
+    reqs = _reqs(cfg, n=3, plen=plen, mnt=mnt)
+    mk = dict(paged=True, max_seq=48, slots=2, block_size=bs,
+              prefill_buckets=(16,), kv_dtype="int8")
+    base = _drain(ServeEngine(cfg, params, **mk), reqs)
+    eng = ServeEngine(cfg, params, num_blocks=1 + (7 * pages) // 5,
+                      preempt_policy="swap", **mk)
+    toks = _drain(eng, reqs)
+    assert eng.stats["preempt_swaps"] >= 1
+    assert eng.stats["swap_bytes"] > 0
+    assert toks == base
+
+
+# ---------------------------------------------------------------------------
+# cost model: storage-width page bytes shift the preemption crossover
+# ---------------------------------------------------------------------------
+
+def test_runner_page_bytes_int8_accounting():
+    """int8 pages are priced at 1 byte per value plus one f32 scale per
+    (application, kv-head) for each of K and V."""
+    cfg, _ = _cfg_params()
+    bs, itemsize = 8, 4
+    r16 = ModelRunner(cfg, 1, 32, kv_dtype="fp16")
+    r8 = ModelRunner(cfg, 1, 32, kv_dtype="int8")
+    (comp,) = r16.spec.paged
+    pb16 = r16.page_kv_bytes(bs, itemsize)
+    pb8 = r8.page_kv_bytes(bs, itemsize)
+    assert pb16 == (2 * comp.n_apps * comp.kv_heads * bs * comp.head_dim
+                    * itemsize)
+    assert pb8 == pb16 // itemsize + 2 * comp.n_apps * comp.kv_heads * 4
+    assert pb8 * 2 < pb16
+
+
+def test_softmax_combine_cost_itemsize():
+    """Partials stay fp32 by default regardless of KV storage; the
+    ``itemsize`` knob scales payload bytes linearly."""
+    a = noc.softmax_combine_cost(4, 8, 64, 4)
+    b = noc.softmax_combine_cost(4, 8, 64, 4, itemsize=4)
+    c = noc.softmax_combine_cost(4, 8, 64, 4, itemsize=1)
+    assert a == b                                      # default is fp32
+    assert a["bytes"] == 4 * c["bytes"]
+    assert a["hops"] == c["hops"]
+
+
+def test_preempt_crossover_shifts_with_int8_page_bytes(monkeypatch):
+    """Regression pin for the hardcoded-fp16 bug: the cost model takes the
+    pool's STORAGE byte width, so the same victim that recomputes at fp16
+    page bytes swaps at int8 page bytes — the crossover the engine's
+    ``auto`` policy exploits moves with ``kv_dtype``."""
+    cfg, _ = _cfg_params()
+    bs = 8
+    pb16 = ModelRunner(cfg, 1, 32, kv_dtype="fp16").page_kv_bytes(bs, 4)
+    pb8 = ModelRunner(cfg, 1, 32, kv_dtype="int8").page_kv_bytes(bs, 4)
+    monkeypatch.setattr(noc, "SWAP_LINK_BYTES_PER_S", 3e5)
+    monkeypatch.setattr(noc, "RECOMPUTE_FLOPS_PER_S", 1e12)
+    kw = dict(n_pages=4, tokens=64, flops_per_token=1e9)
+    assert noc.preempt_decision(page_bytes=pb16, **kw) == "recompute"
+    assert noc.preempt_decision(page_bytes=pb8, **kw) == "swap"

@@ -1,0 +1,135 @@
+"""Consolidated CI assertions over the serve-benchmark smoke JSON.
+
+One checker shared by every CI lane instead of per-lane inline heredocs:
+
+  python tools/check_bench_smoke.py BENCH_serve.json --lane full
+  python tools/check_bench_smoke.py BENCH_serve_sharded.json --lane sharded
+
+``--lane full`` gates the single-device smoke artifact (paged-vs-dense
+token identity, prefix caching, preemption, SLO traffic, the hybrid
+family leg, and the quantized-KV capacity leg); ``--lane sharded`` gates
+the 4-way sequence-sharded artifact (token identity vs 1 shard, NoC
+traffic, sharded preemption).  Both lanes gate the quantized capacity
+leg when the artifact carries one — int8 pages must buy >= 2x the
+concurrent sequences of fp16 on the same byte budget, with the fp16
+path token-identical and the int8 greedy logits boundedly divergent.
+
+Exit 0 when every gate holds; any failed assertion exits non-zero with
+the offending values in the message.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# mirrored from benchmarks.serve_throughput.run_capacity — the benchmark
+# asserts the same bound at run time; the checker re-asserts it on the
+# artifact so a stale/forged JSON cannot slip past the gate
+LOGIT_DIVERGENCE_BOUND = 0.05
+CAPACITY_RATIO_FLOOR = 2.0
+
+
+def check_capacity(r: dict) -> None:
+    """Quantized paged-KV capacity leg (int8 pages vs fp16, one budget)."""
+    cap = r.get("capacity")
+    if cap is None:
+        print("capacity: leg missing from artifact; skipping")
+        return
+    assert cap["capacity_ratio"] >= CAPACITY_RATIO_FLOOR, (
+        f"int8 capacity ratio {cap['capacity_ratio']:.2f} < "
+        f"{CAPACITY_RATIO_FLOOR}")
+    assert cap["page_bytes"]["int8"] < cap["page_bytes"]["fp16"], cap
+    assert cap["outputs_match"], "capacity: fp16 legs changed tokens"
+    assert cap["logit_divergence"] < LOGIT_DIVERGENCE_BOUND, (
+        f"int8 logit divergence {cap['logit_divergence']:.4f} >= "
+        f"{LOGIT_DIVERGENCE_BOUND}")
+    assert cap["fp16"]["preemptions"] == 0, cap["fp16"]
+    assert cap["int8"]["preemptions"] == 0, cap["int8"]
+    assert cap["fp16_overload"]["preemptions"] >= 1, (
+        "capacity: fp16 overload leg never pressured the pool")
+    assert cap["int8_tok_s"] > 0, cap
+    print("capacity ratio int8/fp16:", cap["capacity_ratio"],
+          "logit divergence:", cap["logit_divergence"],
+          "int8 tok/s:", cap["int8_tok_s"])
+
+
+def check_full(r: dict) -> None:
+    """Single-device smoke lane (tier1 matrix, deps=full)."""
+    assert r["mixed"]["outputs_match"], "paged != dense tokens"
+    fam = r["family"]
+    assert fam["arch"] == "zamba2-7b", fam
+    assert fam["outputs_match"], "hybrid tokens != decode_step ref"
+    assert fam["paged"] and fam["slot_state"], fam
+    assert fam["tok_s"] > 0, fam
+    print("hybrid serve tok/s:", fam["tok_s"])
+    sp = r["shared_prefix"]
+    assert sp["outputs_match"], "prefix caching changed tokens"
+    assert sp["cache_on"]["prefix_hit_rate"] > 0.5, sp
+    assert sp["ttft_p50_speedup"] >= 2.0, sp["ttft_p50_speedup"]
+    print("ttft_p50_speedup:", sp["ttft_p50_speedup"])
+    pe = r["preempted"]
+    assert pe["outputs_match"], "preemption changed tokens"
+    for pol in ("swap", "recompute"):
+        assert pe[pol]["preemptions"] >= 1, (pol, pe)
+    assert pe["swap"]["swap_bytes"] > 0, pe
+    assert pe["swap"]["restored_tokens"] > 0, pe
+    print("preempt goodput swap/recompute:",
+          pe["swap"]["goodput_tok_s"], pe["recompute"]["goodput_tok_s"])
+    tr = r["traffic"]
+    for proc in ("poisson", "bursty"):
+        leg = tr[proc]
+        for side in ("baseline", "proactive"):
+            assert leg[side]["outputs_match"], (
+                f"traffic/{proc}/{side}: tokens diverged")
+        assert leg["proactive"]["preempt_proactive"] >= 1, leg
+        base = leg["baseline"]["classes"]["interactive"]
+        pro = leg["proactive"]["classes"]["interactive"]
+        assert pro["ttft_p99_ticks"] < base["ttft_p99_ticks"], (
+            f"traffic/{proc}: proactive p99 TTFT "
+            f"{pro['ttft_p99_ticks']} !< {base['ttft_p99_ticks']}")
+        for cls in ("interactive", "batch"):
+            assert leg["proactive"]["classes"][cls][
+                "goodput_tok_s"] > 0, (proc, cls)
+        print(f"traffic/{proc} interactive p99 ttft ticks:",
+              base["ttft_p99_ticks"], "->", pro["ttft_p99_ticks"])
+    check_capacity(r)
+
+
+def check_sharded(r: dict) -> None:
+    """Multidevice lane (4-way sequence-sharded smoke)."""
+    sh = r["sharded"]
+    assert sh["seq_shards"] == 4, sh
+    assert sh["outputs_match"], "sharded tokens != 1-shard tokens"
+    assert sh["sharded"]["noc_hops"] > 0, sh
+    print("sharded outputs_match, noc_hops:", sh["sharded"]["noc_hops"])
+    ps = r["preempted_sharded"]
+    assert ps["seq_shards"] == 4 and ps["outputs_match"], ps
+    assert ps["swap"]["preemptions"] >= 1, ps
+    assert ps["recompute"]["preemptions"] >= 1, ps
+    print("sharded preemption outputs_match, restored ratios:",
+          ps["swap"]["restored_ratio"], ps["recompute"]["restored_ratio"])
+    check_capacity(r)
+
+
+LANES = {"full": check_full, "sharded": check_sharded}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("json_path", help="serve benchmark smoke artifact")
+    ap.add_argument("--lane", choices=sorted(LANES), default="full")
+    args = ap.parse_args(argv)
+    with open(args.json_path) as f:
+        r = json.load(f)
+    try:
+        LANES[args.lane](r)
+    except AssertionError as e:
+        print(f"[bench-smoke] FAIL ({args.lane}): {e}")
+        return 1
+    print(f"[bench-smoke] OK ({args.lane})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -67,6 +67,11 @@ def main() -> int:
         # skips gracefully on artifacts that predate it
         ("long-prompt big-bucket TTFT p50 ms",
          ("long_prompt", "big", "ttft_p50_ms"), False),
+        # quantized paged-KV capacity leg: how many concurrent sequences
+        # int8 pages buy per fp16 sequence on one byte budget, and the
+        # int8 engine's decode throughput — skips on older artifacts
+        ("int8 capacity ratio", ("capacity", "capacity_ratio"), True),
+        ("int8 serve tok/s", ("capacity", "int8_tok_s"), True),
     ]
     failures = []
     for name, path, up in metrics:
