@@ -675,6 +675,157 @@ def _quant_logit_divergence(cfg, params, plen: int = 24, steps: int = 8,
     return div
 
 
+def _zipf_skewed_router(params, skew: float):
+    """Return ``params`` with every MoE router column ``e`` scaled by
+    ``(E - e) ** -skew`` — a Zipf weighting that makes the HIGH-index
+    experts win top-k most often (larger column scale => larger logit
+    variance => more argmax wins).  Hot experts at high indices make the
+    static residency (experts ``[0, capacity)``) maximally cold, so the
+    leg measures the placement policy, not a lucky initial placement."""
+    router = params["layers"]["moe"]["router"]     # [L, d_model, E_pad]
+    e_pad = router.shape[-1]
+    scale = (e_pad - np.arange(e_pad, dtype=np.float64)) ** -skew
+    out = dict(params)
+    out["layers"] = dict(params["layers"])
+    out["layers"]["moe"] = dict(params["layers"]["moe"])
+    out["layers"]["moe"]["router"] = router * jnp.asarray(
+        scale, router.dtype)
+    return out
+
+
+def run_moe_skew(slots: int, max_seq: int, n_requests: int, seed: int = 0,
+                 skew: float = 0.8, arch: str = "olmoe-1b-7b") -> dict:
+    """Placement-aware vs static expert residency under Zipf-skewed
+    routing (the CompAir hot/cold expert tiering A/B).
+
+    A reduced MoE arch serves a request stream with its router columns
+    Zipf(``skew``)-weighted so a few experts take most of the routed
+    tokens.  Two engines, identical device compute: ``static`` freezes
+    experts ``[0, capacity)`` in SRAM-PIM residency (deliberately cold —
+    the hot experts sit at the high indices), ``placement`` runs the
+    adaptive LRU/EMA cache of ``serve/expert_cache.py``.  Hard asserts
+    (the CI smoke lane runs this):
+
+    * greedy outputs token-identical across the two engines — placement
+      is host-side accounting and must never perturb device results;
+    * identical routed expert loads (same dispatch, same telemetry);
+    * cache accounting invariants: ``hits + misses == lookups`` and
+      ``migration_bytes == migrations x expert_bytes``; the static engine
+      never migrates;
+    * the adaptive engine lands ``sram_hit_rate > 0.5`` and beats the
+      static placement's hit rate.
+
+    Wall tok/s is reported for both engines but is NOT the A/B metric —
+    both engines run byte-identical device work, so the wall delta is
+    pure host noise.  The placement win is the *modeled* expert-memory
+    service time (``core.noc.expert_placement_cost``: SRAM hits vs DRAM
+    misses plus migration link transfers), reported as ``tok_s_model``
+    (tokens per modeled expert-service second) and ``speedup_model``.
+    """
+    header(f"serve moe skew: placement-aware vs static expert residency "
+           f"(zipf {skew:g})")
+    from repro.core import noc
+    cfg = reduced(get_config(arch))
+    params = _zipf_skewed_router(
+        M.init_params(cfg, jax.random.key(seed)), skew)
+    capacity = max(1, cfg.n_experts // 2)
+    rng = np.random.default_rng(seed)
+    reqs = [(rng.integers(0, cfg.vocab_size,
+                          int(rng.integers(4, max(5, max_seq // 8)))).tolist(),
+             dict(max_new_tokens=12)) for _ in range(n_requests)]
+
+    def _engine(placement):
+        eng = ServeEngine(cfg, params, max_seq=max_seq, slots=slots,
+                          expert_cache_size=capacity,
+                          expert_placement=placement)
+        # warmup: trace the jits and (adaptive) let the EMA find the hot
+        # set before the timed run — reset_stats keeps residency + EMA
+        eng.submit(list(range(1, 9)), max_new_tokens=4)
+        eng.run_until_drained()
+        eng.reset_stats()
+        return eng
+
+    legs = {}
+    for name in ("static", "placement"):
+        eng = _engine("adaptive" if name == "placement" else "static")
+        r = _drive(eng, reqs)
+        cache = eng.expert_cache
+        cnt = dict(cache.counters)
+        assert cnt["hits"] + cnt["misses"] == cnt["lookups"], (
+            f"moe_skew/{name}: hits {cnt['hits']} + misses {cnt['misses']} "
+            f"!= lookups {cnt['lookups']}")
+        assert (cnt["migration_bytes"]
+                == cnt["migrations"] * cache.expert_bytes), (
+            f"moe_skew/{name}: migration_bytes {cnt['migration_bytes']} != "
+            f"migrations {cnt['migrations']} x {cache.expert_bytes}")
+        c = noc.expert_placement_cost(cache.expert_bytes)
+        expert_s = (cnt["hits"] * c["sram"]["seconds"]
+                    + cnt["misses"] * c["dram"]["seconds"]
+                    + cnt["migrations"] * c["migrate"]["seconds"])
+        new_tokens = sum(len(t) for t in r["tokens"].values())
+        legs[name] = {
+            "engine": eng, "drive": r,
+            "tok_s": r["tok_s"],
+            "tok_s_model": new_tokens / expert_s if expert_s else 0.0,
+            "expert_service_s": expert_s,
+            "sram_hit_rate": cache.sram_hit_rate,
+            "hits": cnt["hits"], "misses": cnt["misses"],
+            "lookups": cnt["lookups"],
+            "migrations": int(cnt["migrations"]),
+            "migration_bytes": int(cnt["migration_bytes"]),
+            "prefetches": int(cnt["prefetches"]),
+            "expert_bytes": int(cache.expert_bytes),
+            "expert_skew": float(eng.stats["expert_skew"]),
+            "expert_gini": float(eng.stats["expert_gini"]),
+            "expert_load": np.asarray(eng.stats["expert_load"],
+                                      np.float64).tolist(),
+            "expert_routed_tokens": int(eng.stats["expert_routed_tokens"]),
+            "expert_dropped_tokens": float(
+                eng.stats["expert_dropped_tokens"]),
+        }
+
+    st, ad = legs["static"], legs["placement"]
+    assert st["drive"]["tokens"] == ad["drive"]["tokens"], (
+        "moe_skew: outputs diverged between static and placement-aware "
+        "engines — placement accounting must not touch device results")
+    assert st["expert_load"] == ad["expert_load"], (
+        "moe_skew: routed expert loads differ between identical dispatches")
+    assert st["migrations"] == 0, (
+        f"moe_skew/static: {st['migrations']} migrations on a frozen "
+        f"placement")
+    assert ad["sram_hit_rate"] > 0.5, (
+        f"moe_skew: adaptive hit rate {ad['sram_hit_rate']:.3f} <= 0.5 — "
+        f"the placement policy is not capturing the hot set")
+    assert ad["sram_hit_rate"] > st["sram_hit_rate"], (
+        f"moe_skew: adaptive {ad['sram_hit_rate']:.3f} did not beat the "
+        f"static placement {st['sram_hit_rate']:.3f}")
+    assert ad["tok_s_model"] >= st["tok_s_model"], (
+        f"moe_skew: modeled tok/s {ad['tok_s_model']:.1f} < static "
+        f"{st['tok_s_model']:.1f} — migrations cost more than the hits won")
+    speedup = (st["expert_service_s"] / ad["expert_service_s"]
+               if ad["expert_service_s"] else 0.0)
+
+    for name, leg in legs.items():
+        emit(f"serve_moe_skew_{name}", 0.0,
+             f"tok_s={leg['tok_s']:.1f};tok_s_model={leg['tok_s_model']:.0f};"
+             f"hit_rate={leg['sram_hit_rate']:.3f};"
+             f"migrations={leg['migrations']};"
+             f"migration_bytes={leg['migration_bytes']}")
+    emit("serve_moe_skew_speedup", 0.0,
+         f"speedup_model={speedup:.2f};capacity={capacity};"
+         f"gini={ad['expert_gini']:.3f};outputs_match=True")
+    out = {"arch": arch, "skew": skew, "capacity": capacity,
+           "n_experts": int(cfg.n_experts), "top_k": int(cfg.top_k),
+           "outputs_match": True, "speedup_model": speedup}
+    for name, leg in legs.items():
+        out[name] = {k: v for k, v in leg.items()
+                     if k not in ("engine", "drive")}
+        out[name].update(_jsonable(
+            {k: leg["drive"][k] for k in ("dt", "tok_s", "occupancy",
+                                          "prefill_tokens")}))
+    return out
+
+
 def run_capacity(cfg, params, max_seq: int, seed: int = 0) -> dict:
     """Quantized paged KV capacity A/B: ``kv_dtype='int8'`` pages (1-byte
     values + per-page-per-head f32 scales) vs fp16 pages on the SAME
@@ -808,6 +959,9 @@ def run(slots: int = 8, max_seq: int = 128, n_requests: int = 32,
         "long_prompt": run_long_prompt(cfg, params, lp_small, lp_big,
                                        max(8, n_requests), seed,
                                        big_buckets=lp_buckets),
+        # placement-aware vs static expert residency under zipf routing
+        # (its own reduced MoE arch + two engines)
+        "moe_skew": run_moe_skew(slots, max_seq, n_requests, seed),
         # last: the quantized-capacity leg stands up four extra engines
         # (two pools, logit-divergence probes) — enough allocator churn to
         # skew the wall-clock TTFT comparison above if it ran first

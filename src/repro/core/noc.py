@@ -245,6 +245,71 @@ def restore_cost_seconds(n_pages: int, page_bytes: int, tokens: int,
     return min(s, r)
 
 
+# hot/cold expert placement cost model --------------------------------
+#
+# CompAir's hybrid premise for MoE: hot experts live in the sub-10ns
+# SRAM-PIM tier, cold ones in the high-capacity DRAM-PIM tier, and every
+# promotion moves the expert's weights over the CXL/NoC link (the
+# NeuPIMs/DynaNDE line models the same decision cycle-accurately).  The
+# serving-side expert cache (``serve/expert_cache.py``) prices its
+# promotions with this arm.  Per-bank stream rates: the SRAM tier feeds
+# weights over hybrid bonds (~6.4x the GDDR6 bank read-out), so a hot
+# expert's dispatch is proportionally cheaper — worth a migration once
+# its predicted traffic amortizes the link transfer.  Module-level
+# constants so tests and operators can re-point them at measured hardware
+# (same pattern as the swap/recompute model above).
+
+EXPERT_SRAM_BYTES_PER_S = _SRAM.hb_bw_per_bank
+EXPERT_SRAM_E_PJ_PER_BIT = _SRAM.e_access_pj_per_bit
+EXPERT_DRAM_BYTES_PER_S = _DRAM.bank_bw
+EXPERT_DRAM_E_PJ_PER_BIT = _DRAM.e_access_pj_per_bit
+EXPERT_LINK_BYTES_PER_S = _CXL.p2p_bw
+EXPERT_LINK_E_PJ_PER_BIT = _CXL.e_pj_per_bit + E_HOP_PJ_PER_BIT
+
+
+def expert_placement_cost(expert_bytes: int, accesses: float = 1.0) -> dict:
+    """Price serving ``accesses`` routed-token dispatches of ONE expert
+    from each placement arm.
+
+    ``expert_bytes`` is the routed expert's weight footprint (gate + up +
+    down projections); ``accesses`` the number of token dispatches that
+    stream it (each dispatch re-reads the weights from its tier — the
+    worst-case, un-batched bound the placement decision conservatively
+    prices).  Returns three arms::
+
+        {"sram":    {"seconds", "energy_pj"},   # resident hit, per tier
+         "dram":    {"seconds", "energy_pj"},   # cold access in DRAM-PIM
+         "migrate": {"seconds", "bytes", "energy_pj"}}  # one link move
+
+    The migrate arm is a one-time DRAM->SRAM transfer over the CXL/NoC
+    link; with the default constants the sram-vs-dram gap scales with
+    ``accesses`` while the migration does not, so the crossover is a pure
+    access-count threshold (independent of ``expert_bytes``)."""
+    bits = 8.0 * expert_bytes
+    return {
+        "sram": {"seconds": accesses * expert_bytes / EXPERT_SRAM_BYTES_PER_S,
+                 "energy_pj": accesses * bits * EXPERT_SRAM_E_PJ_PER_BIT},
+        "dram": {"seconds": accesses * expert_bytes / EXPERT_DRAM_BYTES_PER_S,
+                 "energy_pj": accesses * bits * EXPERT_DRAM_E_PJ_PER_BIT},
+        "migrate": {"seconds": expert_bytes / EXPERT_LINK_BYTES_PER_S,
+                    "bytes": expert_bytes,
+                    "energy_pj": bits * EXPERT_LINK_E_PJ_PER_BIT},
+    }
+
+
+def expert_promotion_worthwhile(expert_bytes: int,
+                                predicted_accesses: float) -> bool:
+    """Should a cold expert migrate to the SRAM-PIM tier?  True when the
+    one-time link transfer plus its predicted SRAM-resident serving time
+    beats leaving it in DRAM-PIM — the promotion gate the expert cache
+    applies to its EMA-predicted hot candidates (an anti-thrash guard:
+    experts whose predicted traffic cannot amortize the migration stay
+    cold)."""
+    c = expert_placement_cost(expert_bytes, predicted_accesses)
+    return (c["migrate"]["seconds"] + c["sram"]["seconds"]
+            < c["dram"]["seconds"])
+
+
 def distributed_softmax(x, axis_name: str):
     """Softmax over a feature axis sharded across ``axis_name`` (e.g. the
     vocab-sharded LM head).  max and sum statistics ride the butterfly."""

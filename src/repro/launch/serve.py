@@ -74,6 +74,23 @@ def main():
                     help="fraction of the synthetic stream submitted as "
                          "the 'batch' latency class (longer decodes, "
                          "weight 1) instead of 'interactive' (weight 8)")
+    ap.add_argument("--expert-parallel", type=int, default=None,
+                    help="shard a MoE family's routed experts over N "
+                         "devices on an 'expert' mesh axis (composes with "
+                         "--seq-shards; the device count must cover the "
+                         "product)")
+    ap.add_argument("--expert-cache", type=int, default=None,
+                    help="SRAM-PIM-resident experts per layer for the "
+                         "placement-aware hot/cold expert cache (MoE "
+                         "families; default off)")
+    ap.add_argument("--no-expert-prefetch", action="store_true",
+                    help="commit expert promotions immediately instead of "
+                         "double-buffered staging")
+    ap.add_argument("--expert-placement", default="adaptive",
+                    choices=["adaptive", "static"],
+                    help="adaptive migrates hot experts into SRAM residency "
+                         "per the NoC cost model; static freezes the "
+                         "initial placement (the A/B baseline)")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore trained params (repro.checkpoint layout)")
     args = ap.parse_args()
@@ -107,7 +124,11 @@ def main():
                       preempt_policy=args.preempt_policy,
                       swap_pages=args.swap_pages,
                       proactive_horizon=args.proactive_horizon,
-                      q_tile=args.q_tile, kv_dtype=args.kv_dtype, **ekw)
+                      q_tile=args.q_tile, kv_dtype=args.kv_dtype,
+                      expert_parallel=args.expert_parallel,
+                      expert_cache_size=args.expert_cache,
+                      expert_prefetch=not args.no_expert_prefetch,
+                      expert_placement=args.expert_placement, **ekw)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for i in range(args.requests):
@@ -132,6 +153,8 @@ def main():
         mode += f"/{eng.kv_dtype}"
     if eng.seq_shards > 1:
         mode += f"/seq{eng.seq_shards}"
+    if eng.expert_parallel:
+        mode += f"/ep{eng.expert_parallel}"
     print(f"[serve] {len(done)} requests, {total} tokens, {dt:.2f}s "
           f"({total / dt:.1f} tok/s)  kv={mode} "
           f"({eng.kv_cache_bytes() / 1e6:.1f} MB), "
@@ -169,6 +192,23 @@ def main():
               f"hops={eng.stats['noc_hops']:.0f}, "
               f"bytes={eng.stats['noc_bytes'] / 1e6:.2f}MB, "
               f"energy={eng.stats['noc_energy_pj'] / 1e6:.2f}uJ")
+    if eng._moe_stats:
+        ep = eng.expert_parallel or 1
+        print(f"[serve] experts (ep={ep}): "
+              f"routed_tokens={eng.stats['expert_routed_tokens']:.0f}, "
+              f"dropped={eng.stats['expert_dropped_tokens']:.1f}, "
+              f"skew={eng.stats['expert_skew']:.2f}, "
+              f"gini={eng.stats['expert_gini']:.3f}")
+        if eng.expert_cache is not None:
+            print(f"[serve] expert cache "
+                  f"(capacity={eng.expert_cache.capacity}/layer, "
+                  f"{'adaptive' if eng.expert_cache.adaptive else 'static'}"
+                  f"): sram_hit_rate="
+                  f"{eng.stats['expert_sram_hit_rate']:.3f}, "
+                  f"migrations={eng.stats['expert_migrations']:.0f}, "
+                  f"migration_bytes="
+                  f"{eng.stats['expert_migration_bytes'] / 1e6:.2f}MB, "
+                  f"prefetches={eng.stats['expert_prefetches']:.0f}")
 
 
 if __name__ == "__main__":

@@ -399,7 +399,9 @@ def _last_token(x, lengths):
 
 def prefill_paged(cfg: ModelConfig, params, state, *, tokens, length,
                   q_offset, block_table, attn_window: Optional[int] = None,
-                  seq_axis: Optional[str] = None, q_tile: Optional[int] = None):
+                  seq_axis: Optional[str] = None, q_tile: Optional[int] = None,
+                  expert_axis: Optional[str] = None,
+                  expert_stats: bool = False):
     """One *chunk* of a single-sequence prefill into the paged KV cache.
 
     tokens [1, C] (right-padded chunk); length (scalar int32) = valid rows;
@@ -417,9 +419,19 @@ def prefill_paged(cfg: ModelConfig, params, state, *, tokens, length,
     ``seq_axis``: run as one shard of a sequence-sharded page pool (inside
     ``shard_map``) — ``state`` is the local page shard, ``block_table`` the
     shard-local table, and attention partials combine over the named axis
-    via ``core.noc.tree_softmax_combine``."""
+    via ``core.noc.tree_softmax_combine``.
+
+    ``expert_axis``: (moe) run as one shard of an expert-parallel mesh
+    axis — the routed expert banks in ``params`` arrive pre-sliced
+    ``[L, E_loc, ...]`` and each layer's expert outputs psum over the
+    axis.  ``expert_stats``: (moe) additionally return a third value
+    ``{"expert_load" [L, E_pad], "frac_dropped" scalar}`` — the per-layer
+    routed-token counts of this chunk (the serving telemetry)."""
     if cfg.family not in PAGED_FAMILIES:
         raise ValueError(f"prefill_paged: unsupported family {cfg.family!r}")
+    if (expert_axis or expert_stats) and cfg.family != "moe":
+        raise ValueError(f"expert_axis/expert_stats need a moe family, "
+                         f"got {cfg.family!r}")
     x = layers.embed(params["embed"], tokens)
     x = hint(x, "activation")
     _, c, _ = x.shape
@@ -435,18 +447,28 @@ def prefill_paged(cfg: ModelConfig, params, state, *, tokens, length,
             q_tile=q_tile, ks_all=ks_all, vs_all=vs_all)
         xc = xc + y
         h2 = layers.rmsnorm(lp["ln2"], xc, cfg.norm_eps)
+        ys = None
         if cfg.family == "moe":
-            y2, _ = moe.moe_apply(lp["moe"], h2, cfg)
+            y2, a2 = moe.moe_apply(lp["moe"], h2, cfg,
+                                   expert_axis=expert_axis,
+                                   return_stats=expert_stats)
+            if expert_stats:
+                ys = {"expert_load": a2["expert_load"],
+                      "frac_dropped": a2["frac_dropped"]}
         else:
             y2 = layers.ffn(lp["ffn"], h2)
         return (hint(xc + y2, "activation"), kp_all, vp_all, ks_all,
-                vs_all), None
+                vs_all), ys
 
-    (x, kp, vp, ks, vs), _ = lax.scan(
+    (x, kp, vp, ks, vs), estats = lax.scan(
         body, (x,) + _attn_pages_in(state),
         (params["layers"], jnp.arange(cfg.n_layers)))
     state = {"attn": _attn_pages_out(kp, vp, ks, vs)}
     logits = _logits(cfg, params, _last_token(x, jnp.reshape(length, (1,))))
+    if expert_stats:
+        return logits[:, 0], state, {
+            "expert_load": estats["expert_load"],
+            "frac_dropped": estats["frac_dropped"].mean()}
     return logits[:, 0], state
 
 
@@ -511,7 +533,9 @@ def insert_kv_pages(state, pages, k, v, k_scales=None, v_scales=None):
 
 def decode_step_paged(cfg: ModelConfig, params, state, tokens, lengths,
                       block_tables, *, attn_window: Optional[int] = None,
-                      seq_axis: Optional[str] = None):
+                      seq_axis: Optional[str] = None,
+                      expert_axis: Optional[str] = None,
+                      expert_stats: bool = False):
     """Batched one-token decode over the paged KV cache.
 
     tokens [B] int32; lengths [B] = cache fill level; block_tables [B, MB].
@@ -522,9 +546,16 @@ def decode_step_paged(cfg: ModelConfig, params, state, tokens, lengths,
     ``seq_axis``: run as one shard of a sequence-sharded page pool (inside
     ``shard_map``); ``block_tables`` is then shard-local (foreign pages ->
     null page 0) and per-shard partials merge over the named axis via
-    ``core.noc.tree_softmax_combine``."""
+    ``core.noc.tree_softmax_combine``.
+
+    ``expert_axis``/``expert_stats``: expert-parallel dispatch and
+    per-layer expert-load telemetry, exactly as in :func:`prefill_paged`
+    (``expert_stats`` makes this return a third value)."""
     if cfg.family not in PAGED_FAMILIES:
         raise ValueError(f"decode_step_paged: unsupported family {cfg.family!r}")
+    if (expert_axis or expert_stats) and cfg.family != "moe":
+        raise ValueError(f"expert_axis/expert_stats need a moe family, "
+                         f"got {cfg.family!r}")
     x = layers.embed(params["embed"], tokens[:, None])
 
     def body(carry, xs):
@@ -537,18 +568,28 @@ def decode_step_paged(cfg: ModelConfig, params, state, tokens, lengths,
             vs_all=vs_all)
         xc = xc + y
         h2 = layers.rmsnorm(lp["ln2"], xc, cfg.norm_eps)
+        ys = None
         if cfg.family == "moe":
-            y2, _ = moe.moe_apply(lp["moe"], h2, cfg)
+            y2, a2 = moe.moe_apply(lp["moe"], h2, cfg,
+                                   expert_axis=expert_axis,
+                                   return_stats=expert_stats)
+            if expert_stats:
+                ys = {"expert_load": a2["expert_load"],
+                      "frac_dropped": a2["frac_dropped"]}
         else:
             y2 = layers.ffn(lp["ffn"], h2)
         return (hint(xc + y2, "activation"), kp_all, vp_all, ks_all,
-                vs_all), None
+                vs_all), ys
 
-    (x, kp, vp, ks, vs), _ = lax.scan(
+    (x, kp, vp, ks, vs), estats = lax.scan(
         body, (x,) + _attn_pages_in(state),
         (params["layers"], jnp.arange(cfg.n_layers)))
     state = {"attn": _attn_pages_out(kp, vp, ks, vs)}
-    return _logits(cfg, params, x)[:, 0], state
+    logits = _logits(cfg, params, x)[:, 0]
+    if expert_stats:
+        return logits, state, {"expert_load": estats["expert_load"],
+                               "frac_dropped": estats["frac_dropped"].mean()}
+    return logits, state
 
 
 # ---------------------------------------------------------------------------
@@ -571,7 +612,9 @@ def serve_prefill_chunk(cfg: ModelConfig, params, state, *, tokens, length,
                         q_offset, block_table, slot,
                         attn_window: Optional[int] = None,
                         seq_axis: Optional[str] = None,
-                        q_tile: Optional[int] = None):
+                        q_tile: Optional[int] = None,
+                        expert_axis: Optional[str] = None,
+                        expert_stats: bool = False):
     """One chunk of a single-sequence prefill against the serve state.
 
     tokens [1, C] (right-padded); length (scalar int32) = valid rows;
@@ -584,12 +627,18 @@ def serve_prefill_chunk(cfg: ModelConfig, params, state, *, tokens, length,
     Padding rows are state-neutral (``length`` masking in ssm/rwkv) and
     attention chunks attend to the already-paged prefix, so calling this
     repeatedly with growing ``q_offset`` reproduces an unpadded monolithic
-    prefill.  Returns ``(logits_at_chunk_end [1, V], state)``."""
+    prefill.  Returns ``(logits_at_chunk_end [1, V], state)`` — plus a
+    third expert-telemetry value with ``expert_stats=True`` (moe only;
+    see :func:`prefill_paged`)."""
     if cfg.family in PAGED_FAMILIES:
         return prefill_paged(cfg, params, state, tokens=tokens, length=length,
                              q_offset=q_offset, block_table=block_table,
                              attn_window=attn_window, seq_axis=seq_axis,
-                             q_tile=q_tile)
+                             q_tile=q_tile, expert_axis=expert_axis,
+                             expert_stats=expert_stats)
+    if expert_axis or expert_stats:
+        raise ValueError(f"expert_axis/expert_stats need a moe family, "
+                         f"got {cfg.family!r}")
     x = layers.embed(params["embed"], tokens)
     x = hint(x, "activation")
     if cfg.rwkv:
@@ -685,7 +734,9 @@ def serve_prefill_chunk(cfg: ModelConfig, params, state, *, tokens, length,
 def serve_decode_step(cfg: ModelConfig, params, state, tokens, lengths,
                       block_tables=None, *,
                       attn_window: Optional[int] = None,
-                      seq_axis: Optional[str] = None):
+                      seq_axis: Optional[str] = None,
+                      expert_axis: Optional[str] = None,
+                      expert_stats: bool = False):
     """Batched one-token decode against the serve state (all families).
 
     tokens [B] int32; lengths [B] = cached tokens per slot; block_tables
@@ -693,11 +744,17 @@ def serve_decode_step(cfg: ModelConfig, params, state, tokens, lengths,
     Returns (logits [B, V], state).  NOTE: recurrent slot state is updated
     for *every* row — the caller (``models.runner.ModelRunner.decode``)
     masks non-runnable slots so a mid-prefill neighbour's carried state is
-    never clobbered by the batched decode."""
+    never clobbered by the batched decode.  With ``expert_stats=True``
+    (moe only) a third expert-telemetry value is returned — see
+    :func:`decode_step_paged`."""
     if cfg.family in PAGED_FAMILIES:
         return decode_step_paged(cfg, params, state, tokens, lengths,
                                  block_tables, attn_window=attn_window,
-                                 seq_axis=seq_axis)
+                                 seq_axis=seq_axis, expert_axis=expert_axis,
+                                 expert_stats=expert_stats)
+    if expert_axis or expert_stats:
+        raise ValueError(f"expert_axis/expert_stats need a moe family, "
+                         f"got {cfg.family!r}")
     if cfg.family == "ssm":
         return decode_step(cfg, params, state, tokens, lengths,
                            attn_window=attn_window)

@@ -55,10 +55,11 @@ def moe_init(rng, cfg: ModelConfig, dtype=jnp.bfloat16):
 
 
 def moe_apply(p, x, cfg: ModelConfig, *, capacity_factor: float = None,
+              expert_axis: str = None, return_stats: bool = False,
               ) -> Tuple[jax.Array, dict]:
     """x [B, S, d] -> (y [B, S, d], aux dict).
 
-    Two dispatch paths:
+    Three dispatch paths:
       * single-program GSPMD scatter (default; 1-device tests, smoke) — but
         under a sharded mesh the scatter into the model-sharded expert
         buffer all-reduces ~E*cap*d fp32 per layer (measured 7.3e12 B/dev
@@ -66,8 +67,20 @@ def moe_apply(p, x, cfg: ModelConfig, *, capacity_factor: float = None,
       * explicit EP under shard_map (enabled via shardhints.set_moe_ep):
         activations are replicated over 'model', so each model shard
         dispatches ONLY to its local experts with zero collective traffic;
-        one [T_loc, d] psum combines expert outputs — §Perf iteration 2.
+        one [T_loc, d] psum combines expert outputs — §Perf iteration 2;
+      * EP-local (``expert_axis`` set): the same local dispatch for callers
+        *already inside* a shard_map whose mesh carries that axis — the
+        serving engine's ``expert_parallel`` path, where ``p``'s expert
+        banks arrive pre-sliced ``[E_loc, ...]`` and the router replicated.
+
+    ``return_stats`` adds ``aux["expert_load"]`` — per-expert routed-token
+    counts [E_pad] for this dispatch (replicated across expert shards:
+    routing is computed from the full replicated router) — the serving
+    telemetry behind the expert placement cache.
     """
+    if expert_axis is not None:
+        return _moe_apply_ep_local(p, x, cfg, expert_axis, capacity_factor,
+                                   return_stats)
     from repro.core import shardhints
     ep = shardhints.get_moe_ep()
     if ep is not None:
@@ -132,6 +145,8 @@ def moe_apply(p, x, cfg: ModelConfig, *, capacity_factor: float = None,
     z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
     frac_dropped = 1.0 - keep.mean()
     aux = {"lb_loss": lb_loss, "z_loss": z_loss, "frac_dropped": frac_dropped}
+    if return_stats:
+        aux["expert_load"] = assign.sum(0).astype(jnp.float32)   # [E_pad]
     return y.reshape(b, s, d), aux
 
 
@@ -230,3 +245,106 @@ def _moe_apply_ep(p, x, cfg: ModelConfig, ep, capacity_factor=None):
         y = y + layers.ffn(p["shared"], x.reshape(b * s, d)).reshape(b, s, d)
     aux = {"lb_loss": aux_v[0], "z_loss": aux_v[1], "frac_dropped": aux_v[2]}
     return y, aux
+
+
+# ---------------------------------------------------------------------------
+# EP-local dispatch (for callers already inside shard_map) — the serving
+# engine's expert_parallel path
+# ---------------------------------------------------------------------------
+
+def _moe_apply_ep_local(p, x, cfg: ModelConfig, axis_name: str,
+                        capacity_factor=None, return_stats: bool = False):
+    """Expert-parallel dispatch for use INSIDE an existing ``shard_map``
+    whose mesh carries ``axis_name``: ``p``'s routed expert banks arrive
+    pre-sliced to this shard's ``[E_loc, ...]`` (the engine's in_specs
+    shard them over the axis), the router and activations replicated.
+    Each shard routes the full token set against the full router, keeps
+    only its local experts' assignments, and one psum over ``axis_name``
+    combines the partial outputs — the ``_moe_apply_ep`` body without the
+    train path's FSDP gather and dp-mean, and with an axis of size 1
+    degenerating to the single-program dispatch exactly."""
+    from jax import lax
+
+    b, s, d = x.shape
+    t = b * s
+    e_pad = p["router"].shape[1]
+    e_real = cfg.n_experts
+    k = cfg.top_k
+    e_loc = p["w_gate"].shape[0]                 # this shard's slice
+    cf = capacity_factor or cfg.capacity_factor
+    cap = int(min(t, max(t * k * cf / e_pad, 4)))
+
+    xt = x.reshape(t, d)
+    logits = jnp.dot(xt.astype(jnp.float32), p["router"])
+    if e_pad > e_real:
+        logits = jnp.where((jnp.arange(e_pad) >= e_real)[None], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True),
+                                        1e-9)
+    e0 = lax.axis_index(axis_name) * e_loc
+    local = (idx >= e0) & (idx < e0 + e_loc)
+    idx_loc = jnp.where(local, idx - e0, e_loc)          # e_loc = drop
+    onehot = jax.nn.one_hot(idx_loc, e_loc + 1, dtype=jnp.int32)
+    assign = onehot[..., :e_loc].sum(1)                  # [T, E_loc]
+    pos_in_e = jnp.cumsum(assign, axis=0) - assign
+    pos = jnp.einsum("tke,te->tk", onehot[..., :e_loc], pos_in_e)
+    keep = local & (pos < cap)
+    flat_idx = jnp.where(keep, idx_loc * cap + pos, e_loc * cap)
+    buf = jnp.zeros((e_loc * cap + 1, d), x.dtype)
+    tok_rep = jnp.repeat(xt[:, None, :], k, axis=1).reshape(t * k, d)
+    buf = buf.at[flat_idx.reshape(-1)].set(tok_rep)
+    expert_in = buf[:-1].reshape(e_loc, cap, d)
+
+    def one_expert(wi_g, wi_u, wi_d, xin):
+        from repro.kernels import ops as _ops
+        g = jnp.dot(xin, wi_g.astype(xin.dtype))
+        u = jnp.dot(xin, wi_u.astype(xin.dtype))
+        return jnp.dot(_ops.silu_mul(g, u), wi_d.astype(xin.dtype))
+
+    expert_out = jax.vmap(one_expert)(p["w_gate"], p["w_up"], p["w_down"],
+                                      expert_in)
+    flat_out = jnp.concatenate(
+        [expert_out.reshape(e_loc * cap, d),
+         jnp.zeros((1, d), expert_out.dtype)])
+    gathered = flat_out[flat_idx.reshape(-1)].reshape(t, k, d)
+    gates_eff = jnp.where(keep, gate_vals, 0.0)
+    y = jnp.einsum("tk,tkd->td", gates_eff.astype(jnp.float32),
+                   gathered.astype(jnp.float32)).astype(x.dtype)
+    y = lax.psum(y, axis_name)                           # combine experts
+    if "shared" in p:
+        y = y + layers.ffn(p["shared"], xt)              # after the psum:
+        #                                  every shard adds it exactly once
+    # aux: losses from the replicated routing; the GLOBAL drop fraction is
+    # the psum of per-shard kept assignments over the full T*k slots (each
+    # shard's `keep` covers only its local experts)
+    me = probs.mean(axis=0)
+    full_assign = jax.nn.one_hot(idx, e_pad, dtype=jnp.float32).sum(1)
+    ce = full_assign.mean(axis=0) * e_real / k
+    lb_loss = (me * ce)[:e_real].sum()
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    kept = lax.psum(keep.sum().astype(jnp.float32), axis_name)
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss,
+           "frac_dropped": 1.0 - kept / (t * k)}
+    if return_stats:
+        aux["expert_load"] = full_assign.sum(0)          # [E_pad], replicated
+    return y.reshape(b, s, d), aux
+
+
+def expert_param_specs(params, expert_axis: str = "expert"):
+    """``PartitionSpec`` pytree for a serve ``params`` tree under expert
+    parallelism: the layer-stacked routed expert banks ``[L, E_pad, ...]``
+    shard over ``expert_axis`` (axis 1); the router, shared experts and
+    every non-moe leaf stay replicated.  Feed this to the engine's
+    ``shard_map`` in_specs so each shard's ``_moe_apply_ep_local`` sees
+    its pre-sliced ``[L, E_loc, ...]`` banks."""
+    from jax.sharding import PartitionSpec as P
+
+    def spec(path, _leaf):
+        ks = compat.keystr(path).split(".")
+        if len(ks) >= 2 and ks[-2] == "moe" and ks[-1] in ("w_gate", "w_up",
+                                                           "w_down"):
+            return P(None, expert_axis)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, params)

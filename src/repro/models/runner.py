@@ -151,33 +151,46 @@ class ModelRunner:
 
     # -- compute -------------------------------------------------------
     def decode(self, params, state, tokens, lengths, block_tables, mask, *,
-               seq_axis: Optional[str] = None):
+               seq_axis: Optional[str] = None,
+               expert_axis: Optional[str] = None,
+               expert_stats: bool = False):
         """Batched one-token decode.  ``mask`` [B] bool gates slot-state
         updates: a non-runnable slot (mid-chunked-prefill, or empty) keeps
         its carried recurrent state verbatim — without this, the batched
         decode would advance a prefilling neighbour's conv/ssm/wkv state
         with a garbage token.  Paged components need no gating: retired
         and mid-prefill rows scatter into pages the next prefill chunk
-        overwrites (or the null page)."""
-        logits, new = M.serve_decode_step(self.cfg, params, state, tokens,
-                                          lengths, block_tables,
-                                          seq_axis=seq_axis)
+        overwrites (or the null page).
+
+        ``expert_axis``/``expert_stats`` (moe): expert-parallel dispatch
+        over a mesh axis and per-layer expert-load telemetry — with
+        ``expert_stats=True`` a third telemetry value is returned."""
+        out = M.serve_decode_step(self.cfg, params, state, tokens,
+                                  lengths, block_tables, seq_axis=seq_axis,
+                                  expert_axis=expert_axis,
+                                  expert_stats=expert_stats)
+        logits, new = out[:2]
         for s in self.spec.slot_state:
             a = new[s.key]
             m = mask.reshape((1,) * s.batch_axis + (-1,)
                              + (1,) * (a.ndim - s.batch_axis - 1))
             new[s.key] = jnp.where(m, a, state[s.key])
-        return logits, new
+        return (logits, new) + out[2:]
 
     def prefill_chunk(self, params, state, tokens, length, q_offset,
-                      block_table, slot, *, seq_axis: Optional[str] = None):
+                      block_table, slot, *, seq_axis: Optional[str] = None,
+                      expert_axis: Optional[str] = None,
+                      expert_stats: bool = False):
         """One right-padded chunk of a single-sequence prefill: attention
         K/V land in ``slot``'s pages, recurrent state reads/advances
-        ``slot``'s rows (padding rows are state-neutral)."""
+        ``slot``'s rows (padding rows are state-neutral).
+        ``expert_axis``/``expert_stats`` as in :meth:`decode`."""
         return M.serve_prefill_chunk(self.cfg, params, state, tokens=tokens,
                                      length=length, q_offset=q_offset,
                                      block_table=block_table, slot=slot,
-                                     seq_axis=seq_axis, q_tile=self.q_tile)
+                                     seq_axis=seq_axis, q_tile=self.q_tile,
+                                     expert_axis=expert_axis,
+                                     expert_stats=expert_stats)
 
     # -- slot-state lifecycle (admission / preemption / restore) -------
     def reset_slot(self, state, slot):
@@ -252,6 +265,26 @@ class ModelRunner:
         """Attention applications per token (NoC combine count per
         dispatched sharded attention pass)."""
         return sum(c.n_apps for c in self.spec.paged)
+
+    # -- expert parallelism (moe) --------------------------------------
+    def padded_experts(self) -> int:
+        """Routed expert count as the dispatch pads it (the divisibility
+        unit for the engine's ``expert_parallel`` knob)."""
+        from repro.models import moe
+        return moe.moe_padded_experts(self.cfg)
+
+    def expert_weight_bytes(self, itemsize: int) -> int:
+        """One routed expert's weight footprint (gate + up + down
+        projections) at the engine dtype — the unit the placement cache
+        prices every SRAM<->DRAM migration in."""
+        return 3 * self.cfg.d_model * self.cfg.moe_d_ff * itemsize
+
+    def expert_param_specs(self, params, expert_axis: str = "expert"):
+        """shard_map in_specs for ``params`` under expert parallelism:
+        routed expert banks sharded over ``expert_axis``, everything else
+        replicated (see ``models.moe.expert_param_specs``)."""
+        from repro.models import moe
+        return moe.expert_param_specs(params, expert_axis)
 
     def state_partition_specs(self, seq_axis: str = "seq"):
         """shard_map specs for the serve state: pages sharded over the

@@ -60,6 +60,7 @@ class SramPim:
     feed_bw_decoupled: float = 128e9  # §3.4 decoupled column decoder (8:1)
     hb_bw_per_bank: float = 204.8e9  # 256 bonds x 6.4 Gb/s
     e_hb_pj_per_bit: float = 0.5     # hybrid bonding 0.05-0.88 pJ/b
+    e_access_pj_per_bit: float = 0.15  # SRAM array read (est., ~1/20 GDDR6)
 
     @property
     def macs_per_access(self) -> int:

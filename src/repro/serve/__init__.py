@@ -1,2 +1,3 @@
 from repro.serve.engine import Request, ServeEngine  # noqa: F401
+from repro.serve.expert_cache import ExpertCache  # noqa: F401
 from repro.serve.swap import SwapArena, SwapHandle  # noqa: F401

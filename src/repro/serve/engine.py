@@ -118,6 +118,7 @@ from repro.kernels import ops
 from repro.kernels import prefill_attention as pf_kernel
 from repro.models import model as M
 from repro.models.runner import ModelRunner
+from repro.serve.expert_cache import ExpertCache
 
 # Latency classes and their default preemption weights.  A victim's
 # eviction score is ``pages x restore_cost x weight``, so a heavier class
@@ -385,6 +386,17 @@ class BlockAllocator:
         self._unref(page)
 
 
+def _gini(x: np.ndarray) -> float:
+    """Gini coefficient of a nonnegative load vector (0 = perfectly
+    balanced, -> 1 = all load on one expert)."""
+    x = np.sort(np.asarray(x, np.float64))
+    n, tot = x.size, float(x.sum())
+    if n < 2 or tot <= 0.0:
+        return 0.0
+    i = np.arange(1, n + 1)
+    return float(2.0 * (i * x).sum() / (n * tot) - (n + 1.0) / n)
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_seq: int = 512,
                  slots: int = 8, seed: int = 0,
@@ -398,7 +410,11 @@ class ServeEngine:
                  class_weights: Optional[Dict[str, float]] = None,
                  proactive_horizon: int = 0,
                  q_tile: Optional[int] = None,
-                 kv_dtype: str = "fp16"):
+                 kv_dtype: str = "fp16",
+                 expert_parallel: Optional[int] = None,
+                 expert_cache_size: Optional[int] = None,
+                 expert_prefetch: bool = True,
+                 expert_placement: str = "adaptive"):
         """Stand up a serving engine over ``params``.
 
         Args:
@@ -470,6 +486,28 @@ class ServeEngine:
             holds about twice the concurrent sequences, at a bounded
             logit divergence.  The paged kernels dequantize in their
             inner page loop; requires a paged KV component.
+          expert_parallel: shard the routed experts of a MoE family over
+            an N-way ``expert`` mesh axis (each shard applies its local
+            expert bank, outputs merge with one ``psum``).  Composes with
+            ``seq_shards`` as a ``(seq, expert)`` mesh — the device count
+            must cover the product.  ``expert_parallel=1`` runs the EP
+            dispatch on a 1-shard mesh (useful for parity testing).
+            Requires ``cfg.n_experts > 0`` and the runner path; padded
+            expert count must divide evenly.  Greedy outputs are
+            token-identical to the unsharded engine.
+          expert_cache_size: SRAM-PIM-resident experts per layer for the
+            placement-aware hot/cold expert cache
+            (``serve/expert_cache.py``); None (default) disables
+            placement accounting.  The cache is a host-side model driven
+            by per-tick expert-load telemetry — it never changes device
+            results, only the ``expert_*`` stats.
+          expert_prefetch: double-buffered promotion staging (promoted
+            experts land one tick later, never served mid-flight); False
+            commits promotions at end of tick.
+          expert_placement: ``"adaptive"`` (default) migrates hot experts
+            into SRAM residency per ``core.noc.expert_placement_cost``;
+            ``"static"`` freezes the initial placement — the A/B baseline
+            of ``benchmarks/serve_throughput.py run_moe_skew``.
         """
         self.cfg = cfg
         self.params = params
@@ -525,19 +563,78 @@ class ServeEngine:
             raise ValueError(
                 f"seq_shards must be a power of two, got {seq_shards} "
                 "(the NoC butterfly combine is a recursive-doubling tree)")
-        if self.seq_shards > 1:
-            if not self.paged:
-                raise ValueError("seq_shards > 1 requires the paged KV cache")
-            ndev = jax.device_count()
-            if ndev < self.seq_shards:
+        if self.seq_shards > 1 and not self.paged:
+            raise ValueError("seq_shards > 1 requires the paged KV cache")
+
+        # expert parallelism + placement-aware expert cache (MoE serving)
+        if expert_placement not in ("adaptive", "static"):
+            raise ValueError(
+                f"expert_placement must be 'adaptive' or 'static', got "
+                f"{expert_placement!r}")
+        self.expert_parallel = (None if expert_parallel is None
+                                else int(expert_parallel))
+        if self.expert_parallel is not None:
+            if self.expert_parallel < 1:
                 raise ValueError(
-                    f"seq_shards={self.seq_shards} needs that many devices "
-                    f"but only {ndev} are visible — set XLA_FLAGS="
-                    f"--xla_force_host_platform_device_count="
-                    f"{self.seq_shards} before importing jax, or shard less")
+                    f"expert_parallel must be >= 1, got {expert_parallel}")
+            if cfg.n_experts <= 0:
+                raise ValueError(
+                    f"expert_parallel requires a MoE family "
+                    f"(cfg.n_experts > 0); {cfg.family!r} has none")
+            if self.dense_baseline:
+                raise ValueError(
+                    "expert_parallel shards the runner dispatch — it is "
+                    "incompatible with the dense-slab baseline "
+                    "(paged=False)")
+            e_pad = self.runner.padded_experts()
+            if e_pad % self.expert_parallel:
+                raise ValueError(
+                    f"expert_parallel={self.expert_parallel} must divide "
+                    f"the padded expert count ({e_pad})")
+        ep = self.expert_parallel or 1
+        ndev = jax.device_count()
+        if self.seq_shards * ep > ndev:
+            raise ValueError(
+                f"seq_shards={self.seq_shards} x expert_parallel={ep} "
+                f"needs {self.seq_shards * ep} devices but only {ndev} "
+                f"are visible — set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count="
+                f"{self.seq_shards * ep} before importing jax, or shard "
+                f"less")
+        if self.seq_shards > 1 and ep > 1:
+            self.mesh = compat.make_mesh((self.seq_shards, ep),
+                                         ("seq", "expert"))
+        elif self.seq_shards > 1:
             self.mesh = compat.make_mesh((self.seq_shards,), ("seq",))
+        elif self.expert_parallel is not None:
+            self.mesh = compat.make_mesh((ep,), ("expert",))
         else:
             self.mesh = None
+        self._expert_axis = ("expert" if self.expert_parallel is not None
+                             else None)
+
+        self.expert_cache: Optional[ExpertCache] = None
+        if expert_cache_size is not None:
+            if cfg.n_experts <= 0:
+                raise ValueError(
+                    f"expert_cache_size requires a MoE family "
+                    f"(cfg.n_experts > 0); {cfg.family!r} has none")
+            if self.dense_baseline:
+                raise ValueError(
+                    "expert_cache_size needs the runner path's expert "
+                    "telemetry — incompatible with paged=False")
+            self.expert_cache = ExpertCache(
+                cfg.n_layers, self.runner.padded_experts(),
+                int(expert_cache_size),
+                self.runner.expert_weight_bytes(
+                    jnp.dtype(self.dtype).itemsize),
+                prefetch=expert_prefetch,
+                adaptive=(expert_placement == "adaptive"))
+        # telemetry is opt-in: it adds a third output to the jitted
+        # dispatch, so engines without EP or a cache keep the 2-tuple
+        self._moe_stats = ((not self.dense_baseline) and cfg.n_experts > 0
+                           and (self._expert_axis is not None
+                                or self.expert_cache is not None))
 
         # prefill chunk buckets; always include max_seq so any admissible
         # prompt fits some bucket
@@ -667,6 +764,20 @@ class ServeEngine:
             # core.noc.softmax_combine_cost
             "noc_combines": 0, "noc_hops": 0, "noc_bytes": 0,
             "noc_energy_pj": 0.0,
+            # expert-placement telemetry (MoE, opt-in via expert_parallel
+            # or expert_cache_size): expert_load is the cumulative routed
+            # token count per padded expert (summed over layers);
+            # expert_skew = max load / mean load, expert_gini the Gini
+            # coefficient of the per-expert loads; the expert_* cache
+            # counters mirror serve/expert_cache.py's accounting
+            "expert_load": (np.zeros(self.runner.padded_experts())
+                            if self._moe_stats else 0.0),
+            "expert_routed_tokens": 0, "expert_dropped_tokens": 0.0,
+            "expert_skew": 0.0, "expert_gini": 0.0,
+            "expert_hits": 0.0, "expert_misses": 0.0,
+            "expert_sram_hit_rate": 0.0,
+            "expert_migrations": 0, "expert_migration_bytes": 0,
+            "expert_prefetches": 0,
             # capacity accounting: kv_bytes_per_page is the static cost of
             # ONE physical page at the engine's kv_dtype (int8: 1-byte
             # values + per-page scales); peak_active is the high-water mark
@@ -708,22 +819,42 @@ class ServeEngine:
         return sum(len(q) for q in self._queues.values())
 
     # -- jit caches ----------------------------------------------------
+    def _shard_specs(self):
+        """(param, state, table, estats) partition specs for the engine
+        mesh.  State and block tables shard over ``seq`` only (every
+        expert shard holds the full KV slice of its seq shard); expert
+        params shard their leading expert axis over ``expert``; routing
+        is replicated so the telemetry comes back replicated (``P()``)."""
+        from jax.sharding import PartitionSpec as P
+        seq = self.seq_shards > 1
+        sspec = self.runner.state_partition_specs("seq") if seq else P()
+        pspec = (self.runner.expert_param_specs(self.params,
+                                                self._expert_axis)
+                 if self._expert_axis else P())
+        tspec = P("seq") if seq else P()
+        return pspec, sspec, tspec, P()
+
     def _make_decode_fn(self):
         cfg, runner = self.cfg, self.runner
+        estats, eax = self._moe_stats, self._expert_axis
 
-        if self.paged and self.seq_shards > 1:
+        if self.mesh is not None:
             from jax.sharding import PartitionSpec as P
-            sspec = runner.state_partition_specs("seq")
+            seq = self.seq_shards > 1
+            pspec, sspec, tspec, espec = self._shard_specs()
 
-            def body(params, state, toks, lens, tables_local, mask):
-                # tables_local arrives [1, B, MB] (this shard's slice)
+            def body(params, state, toks, lens, tables, mask):
+                # seq-sharded tables arrive [1, B, MB] (this shard's slice)
                 return runner.decode(params, state, toks, lens,
-                                     tables_local[0], mask, seq_axis="seq")
+                                     tables[0] if seq else tables, mask,
+                                     seq_axis="seq" if seq else None,
+                                     expert_axis=eax, expert_stats=estats)
 
             smapped = compat.shard_map(
                 body, mesh=self.mesh,
-                in_specs=(P(), sspec, P(), P(), P("seq"), P()),
-                out_specs=(P(), sspec), check_vma=False)
+                in_specs=(pspec, sspec, P(), P(), tspec, P()),
+                out_specs=(espec, sspec) + ((espec,) if estats else ()),
+                check_vma=False)
 
             def f(params, state, toks, lens, tables, mask):
                 self.stats["decode_traces"] += 1
@@ -733,7 +864,8 @@ class ServeEngine:
             # families (no paged component to address)
             def f(params, state, toks, lens, tables, mask):
                 self.stats["decode_traces"] += 1
-                return runner.decode(params, state, toks, lens, tables, mask)
+                return runner.decode(params, state, toks, lens, tables, mask,
+                                     expert_stats=estats)
         else:
             def f(params, state, toks, lens, tables, mask):
                 self.stats["decode_traces"] += 1
@@ -750,29 +882,38 @@ class ServeEngine:
         cfg, dtype, max_seq = self.cfg, self.dtype, self.max_seq
         runner = self.runner
 
-        if self.paged and self.seq_shards > 1:
+        if self.mesh is not None:
             from jax.sharding import PartitionSpec as P
-            sspec = runner.state_partition_specs("seq")
+            seq = self.seq_shards > 1
+            estats, eax = self._moe_stats, self._expert_axis
+            pspec, sspec, tspec, espec = self._shard_specs()
 
-            def body(params, state, toks, length, q_offset, bt_local, slot):
+            def body(params, state, toks, length, q_offset, bt, slot):
                 return runner.prefill_chunk(params, state, toks, length,
-                                            q_offset, bt_local[0], slot,
-                                            seq_axis="seq")
+                                            q_offset,
+                                            bt[0] if seq else bt, slot,
+                                            seq_axis="seq" if seq else None,
+                                            expert_axis=eax,
+                                            expert_stats=estats)
 
             smapped = compat.shard_map(
                 body, mesh=self.mesh,
-                in_specs=(P(), sspec, P(), P(), P(), P("seq"), P()),
-                out_specs=(P(), sspec), check_vma=False)
+                in_specs=(pspec, sspec, P(), P(), P(), tspec, P()),
+                out_specs=(espec, sspec) + ((espec,) if estats else ()),
+                check_vma=False)
 
             def f(params, state, toks, length, q_offset, bt_row, slot):
                 self.stats["prefill_traces"] += 1
                 return smapped(params, state, toks, length, q_offset, bt_row,
                                slot)
         elif not self.dense_baseline:
+            estats = self._moe_stats
+
             def f(params, state, toks, length, q_offset, bt_row, slot):
                 self.stats["prefill_traces"] += 1
                 return runner.prefill_chunk(params, state, toks, length,
-                                            q_offset, bt_row, slot)
+                                            q_offset, bt_row, slot,
+                                            expert_stats=estats)
         else:
             def f(params, toks, lens):
                 self.stats["prefill_traces"] += 1
@@ -1253,10 +1394,15 @@ class ServeEngine:
                     self.stats["gather_page_volume"] += (2 * self._n_apps
                                                          * mb * S)
                 bt = jnp.asarray(bt)
-            logits, self.state = fn(
+            out = fn(
                 self.params, self.state, jnp.asarray(padded[None]),
                 jnp.int32(n), jnp.int32(req.prefill_pos), bt,
                 jnp.int32(slot))
+            if self._moe_stats:
+                logits, self.state, est = out
+                self._account_expert(est, rows=bucket)
+            else:
+                logits, self.state = out
             return logits
         # dense baseline: single-sequence prefill scattered into the slab
         logits, one_state = fn(self.params, jnp.asarray(padded[None]),
@@ -1276,6 +1422,33 @@ class ServeEngine:
         self.stats["noc_hops"] += self._n_apps * c["hops"]
         self.stats["noc_bytes"] += self._n_apps * c["bytes"]
         self.stats["noc_energy_pj"] += self._n_apps * c["energy_pj"]
+
+    def _account_expert(self, est, rows: int) -> None:
+        """Fold one dispatch's expert telemetry (``est`` from the jitted
+        path: per-layer per-expert routed counts + drop fraction) into the
+        engine stats and, when configured, the placement cache.  ``rows``
+        is the dispatch's token rows (runnable slots for decode, the chunk
+        bucket for prefill) — padded rows route too, so they count."""
+        load = np.asarray(est["expert_load"], np.float64)   # [L, E_pad]
+        cfg = self.cfg
+        self.stats["expert_load"] = self.stats["expert_load"] + load.sum(0)
+        self.stats["expert_routed_tokens"] += rows
+        self.stats["expert_dropped_tokens"] += (float(est["frac_dropped"])
+                                                * rows * cfg.top_k)
+        cum = self.stats["expert_load"][:cfg.n_experts]
+        tot = float(cum.sum())
+        if tot > 0.0:
+            self.stats["expert_skew"] = float(cum.max() * cum.size / tot)
+            self.stats["expert_gini"] = _gini(cum)
+        if self.expert_cache is not None:
+            tick = self.expert_cache.observe(load)
+            self.stats["expert_hits"] += tick["hits"]
+            self.stats["expert_misses"] += tick["misses"]
+            self.stats["expert_migrations"] += tick["migrations"]
+            self.stats["expert_migration_bytes"] += tick["migration_bytes"]
+            self.stats["expert_prefetches"] += tick["prefetches"]
+            self.stats["expert_sram_hit_rate"] = \
+                self.expert_cache.sram_hit_rate
 
     def _sample(self, logits, req: Request) -> int:
         logits = logits.reshape(-1)
@@ -1383,10 +1556,18 @@ class ServeEngine:
                     tables = jnp.asarray(self.alloc.table.copy())
                 # the mask gates recurrent slot-state updates: batched
                 # decode must not advance a mid-prefill neighbour's state
-                logits, self.state = self._decode(
+                out = self._decode(
                     self.params, self.state, jnp.asarray(toks),
                     jnp.asarray(self.lengths.copy()), tables,
                     jnp.asarray(mask))
+                if self._moe_stats:
+                    logits, self.state, est = out
+                    # the batched dispatch routes every slot row (masked
+                    # neighbours included), so the whole batch counts:
+                    # sum(expert_load) == n_layers * top_k * routed_tokens
+                    self._account_expert(est, rows=self.slots)
+                else:
+                    logits, self.state = out
                 for i in runnable:
                     req = self.active[i]
                     self.lengths[i] += 1
@@ -1731,10 +1912,17 @@ class ServeEngine:
             self.stats[k] = 0
         self.stats["kv_bytes_per_page"] = (self._page_kv_bytes()
                                            if self.paged else 0)
+        if self._moe_stats:
+            self.stats["expert_load"] = np.zeros(
+                self.runner.padded_experts())
         self.class_stats = {cls: self._zero_class_stats()
                             for cls in self.class_order}
         if self.paged:
             self.alloc.reset_counters()
+        if self.expert_cache is not None:
+            # counters only — residency, staging and the hotness EMA are
+            # placement state, not statistics
+            self.expert_cache.reset_counters()
 
     @property
     def prefix_hit_rate(self) -> float:

@@ -1,0 +1,193 @@
+"""Placement-aware hot/cold expert cache for MoE serving.
+
+CompAir's hybrid tiering applied to routed experts: per layer, a small
+"resident" set lives in the sub-10ns SRAM-PIM tier while the rest stay in
+high-capacity DRAM-PIM; every promotion moves the expert's weights over
+the CXL/NoC link.  The cache is a host-side model — like the engine's
+``BlockAllocator`` it never touches device arrays, it consumes the
+per-tick expert-load telemetry the dispatch already produces and accounts
+what a placement-aware memory system would have done (hits, misses,
+migrations, bytes), priced by ``core.noc.expert_placement_cost``.
+
+Policy (DynaNDE-style):
+
+* **LRU residency** — within a layer the resident set is ordered by last
+  touch; the eviction victim is always the least-recently-used expert.
+* **EMA promotion** — per-expert routing counts feed an exponential
+  moving average; the hottest non-resident expert by EMA is the promotion
+  candidate each tick, gated by ``noc.expert_promotion_worthwhile`` (its
+  predicted traffic must amortize the link transfer) and by being hotter
+  than the LRU victim.
+* **Prefetch + double buffering** — with ``prefetch=True`` a promotion is
+  *staged* into a per-layer shadow buffer and only becomes resident at
+  the next tick's buffer swap, so a mid-flight expert is never served
+  from SRAM (lookups against it stay misses until the swap).  One shadow
+  buffer per layer = at most one in-flight promotion per layer per tick.
+* **Static placement** (``adaptive=False``) — the A/B baseline: residency
+  is frozen at the initial set (experts ``[0, capacity)``), only
+  hit/miss accounting runs, no migrations ever happen.
+
+Accounting invariants (pinned by ``tests/test_expert_cache.py``):
+``hits + misses == lookups`` (in routed tokens) and, because the cache is
+constructed full (the initial residents are pre-placed, not migrated),
+every committed promotion evicts exactly one victim — so
+``promotions == demotions`` and
+``migration_bytes == demotions * expert_bytes``.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import noc
+
+COUNTER_KEYS = ("lookups", "hits", "misses", "promotions", "demotions",
+                "migrations", "migration_bytes", "prefetches")
+
+
+class ExpertCache:
+    """Per-layer LRU cache of SRAM-PIM-resident experts (see module doc).
+
+    Args:
+      n_layers: moe layers tracked (one residency set + EMA row each).
+      n_experts: routed experts per layer (the padded count the dispatch
+        telemetry reports).
+      capacity: SRAM-resident experts per layer, clamped to
+        ``[1, n_experts]``; the initial resident set is ``[0, capacity)``.
+      expert_bytes: one routed expert's weight footprint in bytes (prices
+        every migration; see the accounting invariant above).
+      ema_decay: routing-count EMA decay per tick (0.8: ~5-tick horizon).
+      prefetch: double-buffered staging (promotions land next tick) vs
+        immediate commit at end of tick.
+      adaptive: False freezes the initial placement (the static baseline).
+    """
+
+    def __init__(self, n_layers: int, n_experts: int, capacity: int,
+                 expert_bytes: int, *, ema_decay: float = 0.8,
+                 prefetch: bool = True, adaptive: bool = True):
+        if n_layers < 1 or n_experts < 1:
+            raise ValueError(f"need n_layers, n_experts >= 1, got "
+                             f"{n_layers}, {n_experts}")
+        if not (0.0 <= ema_decay < 1.0):
+            raise ValueError(f"ema_decay must be in [0, 1), got {ema_decay}")
+        self.n_layers = int(n_layers)
+        self.n_experts = int(n_experts)
+        self.capacity = max(1, min(int(capacity), self.n_experts))
+        self.expert_bytes = int(expert_bytes)
+        self.ema_decay = float(ema_decay)
+        self.prefetch = bool(prefetch)
+        self.adaptive = bool(adaptive)
+        # residency: OrderedDict per layer, LRU -> MRU front-to-back
+        self._resident: List[OrderedDict] = [
+            OrderedDict((e, None) for e in range(self.capacity))
+            for _ in range(self.n_layers)]
+        # shadow buffer: at most one staged (in-flight) promotion per layer
+        self._staged: List[Optional[int]] = [None] * self.n_layers
+        self.ema = np.zeros((self.n_layers, self.n_experts), np.float64)
+        self.counters: Dict[str, float] = {k: 0 for k in COUNTER_KEYS}
+
+    # -- introspection -------------------------------------------------
+    def is_resident(self, layer: int, expert: int) -> bool:
+        """SRAM residency probe (no accounting side effects).  A staged
+        expert is NOT resident — it is mid-flight until the buffer swap."""
+        return expert in self._resident[layer]
+
+    def residents(self, layer: int) -> List[int]:
+        """Resident experts, LRU-first (index 0 is the next victim)."""
+        return list(self._resident[layer])
+
+    def staged(self, layer: int) -> Optional[int]:
+        return self._staged[layer]
+
+    @property
+    def sram_hit_rate(self) -> float:
+        lk = self.counters["lookups"]
+        return self.counters["hits"] / lk if lk else 0.0
+
+    def reset_counters(self) -> None:
+        """Zero the accounting (residency, staging and EMA persist — the
+        same contract as the engine's ``reset_stats``)."""
+        self.counters = {k: 0 for k in COUNTER_KEYS}
+
+    # -- the per-tick update -------------------------------------------
+    def _commit(self, layer: int, expert: int, tick: Dict[str, float]):
+        """Make a promoted expert resident, evicting the LRU victim."""
+        res = self._resident[layer]
+        victim, _ = res.popitem(last=False)            # LRU head
+        res[expert] = None                             # insert as MRU
+        tick["promotions"] += 1
+        tick["demotions"] += 1
+        tick["migrations"] += 1
+        tick["migration_bytes"] += self.expert_bytes
+        return victim
+
+    def observe(self, counts) -> Dict[str, float]:
+        """Account one dispatch's routing against the placement.
+
+        ``counts`` [n_layers, n_experts]: routed-token counts per expert
+        per layer (the ``expert_load`` telemetry of one decode tick or
+        prefill chunk).  Order within the tick: (1) staged prefetches from
+        the *previous* tick become resident (the double-buffer swap);
+        (2) this tick's tokens count as SRAM hits or DRAM misses against
+        the now-current residency; (3) the EMA advances; (4) the next
+        promotion is staged (or committed immediately without
+        ``prefetch``).  Returns this tick's accounting deltas."""
+        counts = np.asarray(counts, np.float64)
+        if counts.shape != (self.n_layers, self.n_experts):
+            raise ValueError(f"counts shape {counts.shape} != "
+                             f"{(self.n_layers, self.n_experts)}")
+        tick: Dict[str, float] = {k: 0 for k in COUNTER_KEYS}
+        for li in range(self.n_layers):
+            res = self._resident[li]
+            # (1) buffer swap: last tick's staged expert lands now
+            if self._staged[li] is not None:
+                self._commit(li, self._staged[li], tick)
+                self._staged[li] = None
+            # (2) hit/miss accounting, touching residents MRU-ward
+            row = counts[li]
+            for e in np.nonzero(row)[0]:
+                c = float(row[e])
+                tick["lookups"] += c
+                if int(e) in res:
+                    tick["hits"] += c
+                    res.move_to_end(int(e))
+                else:
+                    tick["misses"] += c
+            # (3) EMA of routing counts — the hotness predictor
+            self.ema[li] = (self.ema_decay * self.ema[li]
+                            + (1.0 - self.ema_decay) * row)
+            # (4) placement decision
+            if not self.adaptive:
+                continue
+            cand = self._hottest_cold(li)
+            if cand is None:
+                continue
+            victim = next(iter(res))                   # LRU head
+            if self.ema[li, cand] <= self.ema[li, victim]:
+                continue                               # not hotter: stay
+            if not noc.expert_promotion_worthwhile(self.expert_bytes,
+                                                   self.ema[li, cand]):
+                continue                               # can't amortize link
+            if self.prefetch:
+                self._staged[li] = cand                # lands next tick
+                tick["prefetches"] += 1
+            else:
+                self._commit(li, cand, tick)
+        for k in COUNTER_KEYS:
+            self.counters[k] += tick[k]
+        return tick
+
+    def _hottest_cold(self, layer: int) -> Optional[int]:
+        """Hottest-by-EMA expert that is neither resident nor staged."""
+        res = self._resident[layer]
+        best, best_ema = None, 0.0
+        for e in np.argsort(-self.ema[layer]):
+            e = int(e)
+            if e in res or e == self._staged[layer]:
+                continue
+            if self.ema[layer, e] > best_ema:
+                best, best_ema = e, self.ema[layer, e]
+            break                                      # argsort: first cold
+        return best

@@ -1,0 +1,258 @@
+"""Property tests for the placement-aware expert cache and its NoC cost
+arm.
+
+The cache (``serve/expert_cache.py``) is a pure host-side model, so its
+contracts are testable exhaustively: LRU eviction order, the accounting
+invariants (``hits + misses == lookups``,
+``migration_bytes == demotions x expert_bytes``, residency always full),
+double-buffered prefetch never serving a mid-flight expert, and the
+``core.noc.expert_placement_cost`` promotion gate — monkeypatched to
+both extremes and swept across its access-count crossover (which is
+independent of ``expert_bytes``: both sides of the comparison scale
+linearly in the transfer size).
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
+from repro.core import noc
+from repro.serve.expert_cache import COUNTER_KEYS, ExpertCache
+
+
+# ---------------------------------------------------------------------------
+# construction + validation
+# ---------------------------------------------------------------------------
+
+def test_ctor_validation():
+    with pytest.raises(ValueError, match="n_layers"):
+        ExpertCache(0, 4, 2, 64)
+    with pytest.raises(ValueError, match="n_experts"):
+        ExpertCache(2, 0, 2, 64)
+    with pytest.raises(ValueError, match="ema_decay"):
+        ExpertCache(1, 4, 2, 64, ema_decay=1.0)
+    # capacity clamps to [1, n_experts]
+    assert ExpertCache(1, 4, 0, 64).capacity == 1
+    assert ExpertCache(1, 4, 99, 64).capacity == 4
+    cache = ExpertCache(2, 6, 3, 64)
+    for li in range(2):
+        assert cache.residents(li) == [0, 1, 2]     # pre-placed, full
+    with pytest.raises(ValueError, match="shape"):
+        cache.observe(np.zeros((2, 5)))
+
+
+# ---------------------------------------------------------------------------
+# LRU eviction order (deterministic trace, immediate commits)
+# ---------------------------------------------------------------------------
+
+def test_lru_eviction_order():
+    cache = ExpertCache(1, 4, 2, 100, prefetch=False)
+    assert cache.residents(0) == [0, 1]
+    # tick 1: expert 1 hits (touched MRU-ward), expert 3 misses hot ->
+    # promoted, evicting the LRU head 0
+    t1 = cache.observe([[0, 5, 0, 9]])
+    assert t1 == {"lookups": 14, "hits": 5, "misses": 9, "promotions": 1,
+                  "demotions": 1, "migrations": 1, "migration_bytes": 100,
+                  "prefetches": 0}
+    assert cache.residents(0) == [1, 3]
+    # tick 2: expert 0 misses hot -> promoted; the LRU victim is now 1
+    # (3 was inserted MRU), so residency becomes [3, 0]
+    t2 = cache.observe([[7, 0, 0, 0]])
+    assert t2["misses"] == 7 and t2["promotions"] == 1
+    assert cache.residents(0) == [3, 0]
+    # the cache never shrinks or duplicates
+    assert len(set(cache.residents(0))) == cache.capacity
+    c = cache.counters
+    assert c["hits"] + c["misses"] == c["lookups"] == 21
+    assert c["migration_bytes"] == c["demotions"] * 100 == 200
+
+
+def test_lru_touch_protects_recently_hit_experts():
+    cache = ExpertCache(1, 6, 3, 10, prefetch=False)
+    assert cache.residents(0) == [0, 1, 2]
+    cache.observe([[9, 0, 1, 0, 0, 0]])      # touch 0 then 2; 1 untouched
+    # LRU order: untouched 1 first, then 0 and 2 in count order... the
+    # touch order within a tick is index order, so [1, 0, 2]
+    assert cache.residents(0) == [1, 0, 2]
+    cache.observe([[0, 0, 0, 0, 0, 8]])      # 5 promoted, victim = 1
+    assert cache.residents(0) == [0, 2, 5]
+
+
+# ---------------------------------------------------------------------------
+# double-buffered prefetch: a staged expert is never served from SRAM
+# ---------------------------------------------------------------------------
+
+def test_prefetch_never_serves_stale_expert():
+    cache = ExpertCache(1, 2, 1, 50, prefetch=True)
+    assert cache.residents(0) == [0]
+    # tick 1: expert 1 misses and is STAGED, not resident — its lookups
+    # this tick are all misses, no migration happens yet
+    t1 = cache.observe([[0, 5]])
+    assert t1["hits"] == 0 and t1["misses"] == 5
+    assert t1["prefetches"] == 1 and t1["migrations"] == 0
+    assert cache.staged(0) == 1
+    assert not cache.is_resident(0, 1)
+    # tick 2: the buffer swap lands FIRST, so this tick's lookups hit,
+    # and the migration is accounted at commit time
+    t2 = cache.observe([[0, 5]])
+    assert t2["hits"] == 5 and t2["misses"] == 0
+    assert t2["migrations"] == 1 and t2["migration_bytes"] == 50
+    assert cache.is_resident(0, 1) and cache.staged(0) is None
+
+
+def test_static_placement_never_migrates():
+    cache = ExpertCache(2, 4, 2, 64, adaptive=False)
+    for _ in range(6):
+        cache.observe(np.full((2, 4), 7))
+    c = cache.counters
+    assert c["migrations"] == c["promotions"] == c["prefetches"] == 0
+    assert cache.residents(0) == cache.residents(1)
+    assert sorted(cache.residents(0)) == [0, 1]
+    # hits only from the frozen residents: 2 of 4 experts
+    assert c["hits"] == c["lookups"] / 2
+
+
+def test_reset_counters_keeps_placement_state():
+    cache = ExpertCache(1, 4, 2, 64, prefetch=False)
+    cache.observe([[0, 0, 9, 9]])
+    residents, ema = cache.residents(0), cache.ema.copy()
+    assert cache.counters["lookups"] > 0
+    cache.reset_counters()
+    assert cache.counters == {k: 0 for k in COUNTER_KEYS}
+    assert cache.residents(0) == residents
+    np.testing.assert_array_equal(cache.ema, ema)
+
+
+# ---------------------------------------------------------------------------
+# property tests: invariants over random traces
+# ---------------------------------------------------------------------------
+
+@hypothesis.settings(max_examples=40, deadline=None)
+@hypothesis.given(data=st.data(),
+                  n_layers=st.integers(1, 3),
+                  n_experts=st.integers(2, 8),
+                  capacity=st.integers(1, 8),
+                  prefetch=st.booleans(),
+                  adaptive=st.booleans())
+def test_accounting_invariants(data, n_layers, n_experts, capacity,
+                               prefetch, adaptive):
+    eb = 96
+    cache = ExpertCache(n_layers, n_experts, capacity, eb,
+                        prefetch=prefetch, adaptive=adaptive)
+    n_ticks = data.draw(st.integers(1, 8), label="n_ticks")
+    for _ in range(n_ticks):
+        counts = np.array(data.draw(
+            st.lists(st.lists(st.integers(0, 9), min_size=n_experts,
+                              max_size=n_experts),
+                     min_size=n_layers, max_size=n_layers), label="counts"))
+        tick = cache.observe(counts)
+        # per-tick: every routed token is a hit or a miss, nothing else
+        assert tick["hits"] + tick["misses"] == tick["lookups"]
+        assert tick["lookups"] == counts.sum()
+        # the cache is always full: promotions pair with demotions 1:1
+        assert tick["promotions"] == tick["demotions"] == tick["migrations"]
+        for li in range(n_layers):
+            res = cache.residents(li)
+            assert len(res) == len(set(res)) == cache.capacity
+            assert all(0 <= e < n_experts for e in res)
+            stg = cache.staged(li)
+            assert stg is None or (0 <= stg < n_experts
+                                   and stg not in res)
+    c = cache.counters
+    assert c["hits"] + c["misses"] == c["lookups"]
+    assert c["migration_bytes"] == c["demotions"] * eb
+    assert 0.0 <= cache.sram_hit_rate <= 1.0
+    if not adaptive:
+        assert c["migrations"] == 0 and c["prefetches"] == 0
+    if not prefetch:
+        assert c["prefetches"] == 0
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(data=st.data())
+def test_full_capacity_cache_always_hits(data):
+    """capacity == n_experts: everything is resident, nothing migrates."""
+    e = data.draw(st.integers(1, 6), label="experts")
+    cache = ExpertCache(1, e, e, 32)
+    for _ in range(data.draw(st.integers(1, 5), label="ticks")):
+        counts = np.array([data.draw(
+            st.lists(st.integers(0, 9), min_size=e, max_size=e),
+            label="row")])
+        cache.observe(counts)
+    c = cache.counters
+    assert c["misses"] == 0 and c["migrations"] == 0
+    assert c["hits"] == c["lookups"]
+
+
+# ---------------------------------------------------------------------------
+# the NoC cost arm: placement pricing + promotion gate
+# ---------------------------------------------------------------------------
+
+def test_expert_placement_cost_shape():
+    c = noc.expert_placement_cost(1 << 20, accesses=3.0)
+    assert set(c) == {"sram", "dram", "migrate"}
+    # SRAM-PIM is strictly the faster, cheaper tier per access
+    assert c["sram"]["seconds"] < c["dram"]["seconds"]
+    assert c["sram"]["energy_pj"] < c["dram"]["energy_pj"]
+    assert c["migrate"]["bytes"] == 1 << 20
+    for arm in c.values():
+        assert all(v > 0 for v in arm.values())
+    # access costs scale linearly in the access count
+    c1 = noc.expert_placement_cost(1 << 20, accesses=1.0)
+    assert c["sram"]["seconds"] == pytest.approx(3 * c1["sram"]["seconds"])
+    assert c["dram"]["seconds"] == pytest.approx(3 * c1["dram"]["seconds"])
+    assert c["migrate"]["seconds"] == c1["migrate"]["seconds"]
+
+
+def test_promotion_gate_monkeypatched_extremes(monkeypatch):
+    """Same pattern as the preempt_decision tests: force each arm of the
+    comparison with implausible constants and watch the decision flip."""
+    # free SRAM + free link: any predicted traffic amortizes instantly
+    monkeypatch.setattr(noc, "EXPERT_SRAM_BYTES_PER_S", 1e30)
+    monkeypatch.setattr(noc, "EXPERT_LINK_BYTES_PER_S", 1e30)
+    assert noc.expert_promotion_worthwhile(1 << 20, 1e-6)
+    # an impossibly slow link can never be amortized
+    monkeypatch.setattr(noc, "EXPERT_LINK_BYTES_PER_S", 1e-3)
+    assert not noc.expert_promotion_worthwhile(1 << 20, 1e9)
+
+
+def test_promotion_gate_crossover_flips_exactly_once():
+    """Sweep predicted accesses: below the crossover DRAM is cheaper
+    (don't migrate), above it SRAM + the one-time link transfer wins —
+    and the threshold is a pure access count, independent of the
+    expert's byte size (both sides scale linearly in bytes)."""
+    sweep = np.linspace(0.01, 5.0, 200)
+    decisions = [noc.expert_promotion_worthwhile(4096, a) for a in sweep]
+    assert not decisions[0] and decisions[-1]
+    flips = sum(a != b for a, b in zip(decisions, decisions[1:]))
+    assert flips == 1
+    for other_bytes in (128, 1 << 22):
+        assert decisions == [noc.expert_promotion_worthwhile(other_bytes, a)
+                             for a in sweep]
+
+
+def test_cache_respects_promotion_gate(monkeypatch):
+    """With the link priced out, the adaptive cache stops migrating no
+    matter how hot the cold experts run."""
+    monkeypatch.setattr(noc, "EXPERT_LINK_BYTES_PER_S", 1e-9)
+    cache = ExpertCache(1, 4, 1, 1024, prefetch=False)
+    for _ in range(5):
+        cache.observe([[0, 9, 9, 9]])
+    assert cache.counters["migrations"] == 0
+    assert cache.residents(0) == [0]
+
+
+def test_cache_promotes_through_gate(monkeypatch):
+    """Inverse: a free link makes any hot expert promotion-worthy, but
+    the candidate must still out-EMA the LRU victim (no thrashing on
+    uniformly hot traffic)."""
+    monkeypatch.setattr(noc, "EXPERT_LINK_BYTES_PER_S", 1e30)
+    cache = ExpertCache(1, 4, 2, 1024, prefetch=False)
+    cache.observe([[0, 0, 0, 9]])
+    assert 3 in cache.residents(0)
+    # uniform traffic: resident EMAs match the cold ones -> no churn
+    cache2 = ExpertCache(1, 4, 2, 1024, prefetch=False)
+    for _ in range(3):
+        cache2.observe([[5, 5, 5, 5]])
+    assert cache2.counters["migrations"] == 0

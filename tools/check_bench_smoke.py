@@ -54,6 +54,37 @@ def check_capacity(r: dict) -> None:
           "int8 tok/s:", cap["int8_tok_s"])
 
 
+def check_moe_skew(r: dict) -> None:
+    """Placement-aware vs static expert residency leg (zipf routing).
+    Both engines run byte-identical device compute, so the gate is the
+    *modeled* expert-memory service throughput (``tok_s_model``), not the
+    host-noise-dominated wall tok/s."""
+    ms = r.get("moe_skew")
+    if ms is None:
+        print("moe_skew: leg missing from artifact; skipping")
+        return
+    assert ms["outputs_match"], (
+        "moe_skew: placement accounting changed tokens")
+    ad, st = ms["placement"], ms["static"]
+    assert ad["sram_hit_rate"] > 0.5, (
+        f"moe_skew: adaptive sram_hit_rate {ad['sram_hit_rate']:.3f} "
+        f"<= 0.5")
+    assert ad["sram_hit_rate"] > st["sram_hit_rate"], (
+        f"moe_skew: adaptive hit rate {ad['sram_hit_rate']:.3f} !> static "
+        f"{st['sram_hit_rate']:.3f}")
+    assert ad["tok_s_model"] >= st["tok_s_model"], (
+        f"moe_skew: placement-aware modeled tok/s {ad['tok_s_model']:.0f} "
+        f"< static {st['tok_s_model']:.0f}")
+    assert ad["hits"] + ad["misses"] == ad["lookups"], ad
+    assert (ad["migration_bytes"]
+            == ad["migrations"] * ad["expert_bytes"]), ad
+    assert st["migrations"] == 0, st
+    assert ad["tok_s"] > 0 and st["tok_s"] > 0, ms
+    print("moe_skew hit rate static -> placement:",
+          f"{st['sram_hit_rate']:.3f} -> {ad['sram_hit_rate']:.3f}",
+          "modeled speedup:", f"{ms['speedup_model']:.2f}")
+
+
 def check_full(r: dict) -> None:
     """Single-device smoke lane (tier1 matrix, deps=full)."""
     assert r["mixed"]["outputs_match"], "paged != dense tokens"
@@ -93,6 +124,7 @@ def check_full(r: dict) -> None:
                 "goodput_tok_s"] > 0, (proc, cls)
         print(f"traffic/{proc} interactive p99 ttft ticks:",
               base["ttft_p99_ticks"], "->", pro["ttft_p99_ticks"])
+    check_moe_skew(r)
     check_capacity(r)
 
 
@@ -109,6 +141,7 @@ def check_sharded(r: dict) -> None:
     assert ps["recompute"]["preemptions"] >= 1, ps
     print("sharded preemption outputs_match, restored ratios:",
           ps["swap"]["restored_ratio"], ps["recompute"]["restored_ratio"])
+    check_moe_skew(r)
     check_capacity(r)
 
 

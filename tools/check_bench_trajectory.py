@@ -72,6 +72,10 @@ def main() -> int:
         # int8 engine's decode throughput — skips on older artifacts
         ("int8 capacity ratio", ("capacity", "capacity_ratio"), True),
         ("int8 serve tok/s", ("capacity", "int8_tok_s"), True),
+        # expert-placement leg: placement-aware engine wall throughput
+        # under zipf-skewed routing — skips on older artifacts
+        ("moe-skew placement-aware tok/s",
+         ("moe_skew", "placement", "tok_s"), True),
     ]
     failures = []
     for name, path, up in metrics:
