@@ -245,6 +245,59 @@ def restore_cost_seconds(n_pages: int, page_bytes: int, tokens: int,
     return min(s, r)
 
 
+# prefill -> decode handoff cost model (disaggregated serving) -----------
+#
+# Role-disaggregated serving (serve/disagg.py) streams a finished
+# prefill's KV page chain + recurrent slot state from the prefill worker
+# to the decode worker over the same CXL-class link the swap arena
+# models — Sangam's CXL-attached KV movement, one way instead of the
+# swap round trip.  Two effects make a handoff cheaper than its naive
+# byte count: int8 pools transfer at storage width (``page_bytes`` is
+# priced by the caller at the pool's width, as for ``swap_cost``), and
+# pages whose digests the decode pool already holds registered
+# (prefix-cached chains) never ride the link at all.
+
+def handoff_cost(n_pages: int, page_bytes: int, state_bytes: int = 0,
+                 cached_pages: int = 0, n_hops: int = 1) -> dict:
+    """One-way cost of streaming one finished prefill to the decode role.
+
+    ``n_pages`` is the full KV chain; ``cached_pages`` leading pages are
+    already resident in the decode pool's prefix registry and transfer
+    zero bytes (they re-attach by reference at admission).
+    ``page_bytes`` is one page's K+V at the pool's *storage* width
+    (``ServeEngine._page_kv_bytes()`` — int8 pools move 1-byte values
+    plus per-page scales).  ``state_bytes`` adds the family's fixed-size
+    recurrent slot state (ssm/rwkv/hybrid), which always transfers.
+    ``n_hops`` counts link traversals between the two workers (1 for a
+    point-to-point CXL pair; mesh-slice pairs may sit further apart —
+    each extra hop adds router energy, not serialized bandwidth).
+    Returns ``{"bytes", "hops", "seconds", "energy_pj"}``."""
+    moved = max(n_pages - cached_pages, 0)
+    b = moved * page_bytes + state_bytes
+    return {"bytes": b, "hops": n_hops,
+            "seconds": b / SWAP_LINK_BYTES_PER_S,
+            "energy_pj": b * 8 * (SWAP_E_PJ_PER_BIT
+                                  + max(n_hops - 1, 0) * E_HOP_PJ_PER_BIT)}
+
+
+def handoff_admission_cost(n_pages: int, page_bytes: int, free_pages: int,
+                           state_bytes: int = 0,
+                           cached_pages: int = 0) -> dict:
+    """The decode-pool admission arm: price admitting one staged handoff
+    into a decode pool with ``free_pages`` grantable pages *right now*.
+
+    The link cost is :func:`handoff_cost`'s one-way transfer of the
+    uncached remainder; ``deferred`` flags a pool that cannot grant the
+    remainder yet — the handoff stays staged in the arena (backpressure,
+    never failure) and the decode engine retries next tick.  Returns
+    ``handoff_cost(...)`` plus ``{"need_pages", "deferred"}``."""
+    c = handoff_cost(n_pages, page_bytes, state_bytes, cached_pages)
+    need = max(n_pages - cached_pages, 0)
+    c["need_pages"] = need
+    c["deferred"] = free_pages < need
+    return c
+
+
 # hot/cold expert placement cost model --------------------------------
 #
 # CompAir's hybrid premise for MoE: hot experts live in the sub-10ns

@@ -193,28 +193,44 @@ def _paged_kernel(bt_ref, len_ref, *refs, scale: float, block_s: int,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
+    # K-axis blocking: a big-page pool (block_s > 64) would otherwise hold
+    # a whole [BS, D] f32 K and V tile live through the softmax update; a
+    # static K-tile loop *under* the page step runs the identical online-
+    # softmax recurrence per 64-row subtile (the carry (acc, m, l) is the
+    # same state, updated more often), bounding live VMEM values at
+    # [64, D] regardless of pool block size.  block_s stays the DMA grain.
+    kt = block_s if (block_s <= 64 or block_s % 64) else 64
+
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32)                  # [G, D]
-        k = k_ref[0, 0].astype(jnp.float32)                  # [BS, D]
-        v = v_ref[0, 0].astype(jnp.float32)                  # [BS, D]
         if quantized:
             page = bt_ref[ib, ibk]
-            k = k * ks_ref[ih, page]
-            v = v * vs_ref[ih, page]
-        s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale  # [G, BS]
-        kpos = kv_offset + ibk * block_s + lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        valid = kpos < len_ref[ib]
-        s = jnp.where(valid, s, NEG_INF)
-        m_prev = m_scr[...]
-        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
-        p = jnp.exp(s - m_new)
-        corr = jnp.exp(m_prev - m_new)
-        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
-        acc_scr[...] = acc_scr[...] * corr + lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        m_scr[...] = m_new
+        m_c = m_scr[...]
+        l_c = l_scr[...]
+        acc_c = acc_scr[...]
+        for t in range(block_s // kt):
+            k = k_ref[0, 0, pl.ds(t * kt, kt)].astype(jnp.float32)  # [kt, D]
+            v = v_ref[0, 0, pl.ds(t * kt, kt)].astype(jnp.float32)
+            if quantized:
+                k = k * ks_ref[ih, page]
+                v = v * vs_ref[ih, page]
+            s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+            kpos = (kv_offset + ibk * block_s + t * kt
+                    + lax.broadcasted_iota(jnp.int32, s.shape, 1))
+            valid = kpos < len_ref[ib]
+            s = jnp.where(valid, s, NEG_INF)                 # [G, kt]
+            m_new = jnp.maximum(m_c, s.max(axis=1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            corr = jnp.exp(m_c - m_new)
+            l_c = l_c * corr + p.sum(axis=1, keepdims=True)
+            acc_c = acc_c * corr + lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            m_c = m_new
+        m_scr[...] = m_c
+        l_scr[...] = l_c
+        acc_scr[...] = acc_c
 
     if skip_null:
         # shard-local table: entry 0 = a page another shard owns (or dead

@@ -147,33 +147,47 @@ def _paged_prefill_kernel(bt_ref, qlen_ref, *refs, scale: float,
         # another shard of the sequence-sharded pool owns — skip it too
         live &= bt_ref[ibk] != 0
 
+    # K-axis blocking (mirrors decode_attention._paged_kernel): for pools
+    # with block_s > 64 the identical online-softmax recurrence runs per
+    # 64-row K-subtile under the page step, so live f32 K/V values stay
+    # [64, D] however big the page is.  block_s stays the DMA grain.
+    kt = block_s if (block_s <= 64 or block_s % 64) else 64
+
     @pl.when(live)
     def _compute():
         q = q_ref[0].astype(jnp.float32)                     # [T*G, D]
-        k = k_ref[0, 0].astype(jnp.float32)                  # [BS, D]
-        v = v_ref[0, 0].astype(jnp.float32)                  # [BS, D]
         if quantized:
             # compute only runs for live steps, whose bt entry IS the page
             page = bt_ref[ibk]
-            k = k * ks_ref[ih, page]
-            v = v * vs_ref[ih, page]
-        s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
-        # row r of tile iq is (chunk position iq*T + r // G, head r % G)
-        qpos = (qoff + iq * q_tile
-                + lax.broadcasted_iota(jnp.int32, s.shape, 0) // group)
-        kpos = ibk * block_s + lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        valid = (kpos <= qpos) & (kpos < total)
-        s = jnp.where(valid, s, NEG_INF)
-        m_prev = m_scr[...]
-        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
-        p = jnp.exp(s - m_new)
-        corr = jnp.exp(m_prev - m_new)
-        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
-        acc_scr[...] = acc_scr[...] * corr + lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        m_scr[...] = m_new
+        m_c = m_scr[...]
+        l_c = l_scr[...]
+        acc_c = acc_scr[...]
+        for ti in range(block_s // kt):
+            k = k_ref[0, 0, pl.ds(ti * kt, kt)].astype(jnp.float32)
+            v = v_ref[0, 0, pl.ds(ti * kt, kt)].astype(jnp.float32)
+            if quantized:
+                k = k * ks_ref[ih, page]
+                v = v * vs_ref[ih, page]
+            s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+            # row r of tile iq is (position iq*T + r // G, head r % G)
+            qpos = (qoff + iq * q_tile
+                    + lax.broadcasted_iota(jnp.int32, s.shape, 0) // group)
+            kpos = (ibk * block_s + ti * kt
+                    + lax.broadcasted_iota(jnp.int32, s.shape, 1))
+            valid = (kpos <= qpos) & (kpos < total)
+            s = jnp.where(valid, s, NEG_INF)                 # [T*G, kt]
+            m_new = jnp.maximum(m_c, s.max(axis=1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            corr = jnp.exp(m_c - m_new)
+            l_c = l_c * corr + p.sum(axis=1, keepdims=True)
+            acc_c = acc_c * corr + lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            m_c = m_new
+        m_scr[...] = m_c
+        l_scr[...] = l_c
+        acc_scr[...] = acc_c
 
     @pl.when(ibk == nb - 1)
     def _finalize():

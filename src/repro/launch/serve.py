@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.configs import ARCHS, get_config, reduced as reduce_cfg
 from repro.models import model
-from repro.serve import ServeEngine
+from repro.serve import DisaggServer, ServeEngine
 
 
 def main():
@@ -70,6 +70,19 @@ def main():
                     help="preempt on predicted page-pool exhaustion this "
                          "many ticks ahead (0 = deadlock-only, the "
                          "pre-SLO behavior)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="serve through a prefill/decode-disaggregated "
+                         "pair (DisaggServer): --slots split between the "
+                         "roles, finished prefills stream page chains + "
+                         "slot state over the CXL-priced handoff link")
+    ap.add_argument("--handoff-pages", type=int, default=None,
+                    help="pinned handoff-arena capacity in pages (the "
+                         "in-flight prefill->decode window; default: the "
+                         "prefill pool's full slot coverage)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="interactive-class SLO deadline in wall ms (the "
+                         "batch class gets 10x); finishes past the "
+                         "effective deadline count as slo_violations")
     ap.add_argument("--batch-frac", type=float, default=0.0,
                     help="fraction of the synthetic stream submitted as "
                          "the 'batch' latency class (longer decodes, "
@@ -115,31 +128,51 @@ def main():
     if args.prefill_buckets:
         ekw["prefill_buckets"] = tuple(
             int(b) for b in args.prefill_buckets.split(","))
-    eng = ServeEngine(cfg, params, max_seq=args.max_seq, slots=args.slots,
-                      paged=paged, block_size=args.block_size,
-                      num_blocks=args.num_blocks,
-                      max_tokens_per_tick=args.token_budget,
-                      prefix_caching=prefix_caching,
-                      seq_shards=args.seq_shards,
-                      preempt_policy=args.preempt_policy,
-                      swap_pages=args.swap_pages,
-                      proactive_horizon=args.proactive_horizon,
-                      q_tile=args.q_tile, kv_dtype=args.kv_dtype,
-                      expert_parallel=args.expert_parallel,
-                      expert_cache_size=args.expert_cache,
-                      expert_prefetch=not args.no_expert_prefetch,
-                      expert_placement=args.expert_placement, **ekw)
+    if args.deadline_ms is not None:
+        ekw["class_deadlines_ms"] = {"interactive": args.deadline_ms,
+                                     "batch": 10.0 * args.deadline_ms}
+    ekw.update(max_seq=args.max_seq, paged=paged,
+               block_size=args.block_size,
+               max_tokens_per_tick=args.token_budget,
+               prefix_caching=prefix_caching,
+               seq_shards=args.seq_shards,
+               swap_pages=args.swap_pages,
+               proactive_horizon=args.proactive_horizon,
+               q_tile=args.q_tile, kv_dtype=args.kv_dtype,
+               expert_parallel=args.expert_parallel,
+               expert_cache_size=args.expert_cache,
+               expert_prefetch=not args.no_expert_prefetch,
+               expert_placement=args.expert_placement)
+    if args.disagg:
+        if args.dense:
+            ap.error("--disagg serves through the paged/slot-state "
+                     "engines; drop --dense")
+        p_slots = max(1, args.slots // 2)
+        # the decode role never prefills, so swap is the only preemption
+        # policy that can restore its victims
+        srv = DisaggServer(
+            cfg, params,
+            prefill=dict(slots=p_slots, num_blocks=args.num_blocks),
+            decode=dict(slots=max(1, args.slots - p_slots),
+                        num_blocks=args.num_blocks,
+                        preempt_policy="swap"),
+            handoff_pages=args.handoff_pages, **ekw)
+        eng = srv.decode                 # decode owns the finished stream
+    else:
+        srv = eng = ServeEngine(cfg, params, slots=args.slots,
+                                num_blocks=args.num_blocks,
+                                preempt_policy=args.preempt_policy, **ekw)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for i in range(args.requests):
         plen = int(rng.integers(2, min(24, args.max_seq // 4)))
         batch = rng.random() < args.batch_frac
-        eng.submit(rng.integers(0, cfg.vocab_size, plen).tolist(),
+        srv.submit(rng.integers(0, cfg.vocab_size, plen).tolist(),
                    max_new_tokens=(2 * args.max_new_tokens if batch
                                    else args.max_new_tokens),
                    temperature=args.temperature,
                    priority="batch" if batch else "interactive")
-    done = eng.run_until_drained()
+    done = srv.run_until_drained()
     dt = time.perf_counter() - t0
     total = sum(len(r.out_tokens) for r in done)
     for r in sorted(done, key=lambda r: r.rid)[:5]:
@@ -169,8 +202,41 @@ def main():
           f"{eng.stats['preempted_tokens']:.0f} preempted tokens, "
           f"swap_bytes={eng.stats['swap_bytes']:.0f}), "
           f"gather_volume={eng.stats['gather_page_volume']:.0f}")
+    engines = (srv.prefill, srv.decode) if args.disagg else (eng,)
+    if args.disagg:
+        hs = srv.stats
+        payload = srv.prefill.runner.handoff_payload_bytes(
+            srv.prefill.block_size,
+            np.dtype(np.int8 if srv.prefill.kv_dtype == "int8"
+                     else srv.prefill.dtype).itemsize,
+            int(hs["handoff_pages"]) + int(hs["handoff_cached_pages"]),
+            int(hs["handoff_cached_pages"]))
+        print(f"[serve] disagg: prefill={srv.prefill.slots} slots / "
+              f"decode={srv.decode.slots} slots, "
+              f"arena={srv.handoff_pages} pages; "
+              f"handoffs={hs['handoffs']:.0f} "
+              f"({hs['handoff_pages']:.0f} pages moved + "
+              f"{hs['handoff_cached_pages']:.0f} decode-cached), "
+              f"link={hs['handoff_bytes'] / 1e6:.2f}MB "
+              f"(paged payload {payload / 1e6:.2f}MB), "
+              f"energy={hs['handoff_energy_pj'] / 1e6:.2f}uJ, "
+              f"arena_stalls={hs['arena_stalls']:.0f}, "
+              f"handoff_stalls="
+              f"{srv.decode.stats['handoff_stalls']:.0f}")
+        print(f"[serve] disagg prefill side: "
+              f"prefill_traces={srv.prefill.stats['prefill_traces']:.0f}, "
+              f"prefill_dispatches="
+              f"{srv.prefill.stats['prefill_dispatches']:.0f}, "
+              f"occupancy={srv.prefill.mean_occupancy:.2f}, "
+              f"worker_s={srv.stats['prefill_step_seconds']:.2f} vs "
+              f"decode worker_s={srv.stats['decode_step_seconds']:.2f}")
     for cls in eng.class_order:
-        cs = eng.class_stats[cls]
+        cs = {k: sum(e.class_stats[cls][k] for e in engines)
+              for k in eng.class_stats[cls]}
+        if args.disagg:
+            # a handed-off rid counts as submitted on BOTH engines; the
+            # prefill front door alone is the true arrival count
+            cs["submitted"] = srv.prefill.class_stats[cls]["submitted"]
         if not cs["submitted"]:
             continue
         lat = [r for r in done if r.priority == cls and r.ttft is not None]
@@ -180,7 +246,13 @@ def main():
               f"finished={cs['finished']:.0f}/{cs['submitted']:.0f}, "
               f"tokens={cs['finished_tokens']:.0f}, "
               f"preemptions={cs['preemptions']:.0f}, "
+              f"slo_violations={cs['slo_violations']:.0f}, "
               f"ttft_p50={p50:.1f}ms")
+    if args.deadline_ms is not None:
+        viol = sum(e.stats["slo_violations"] for e in engines)
+        print(f"[serve] slo: interactive deadline {args.deadline_ms:g}ms "
+              f"(batch {10 * args.deadline_ms:g}ms): "
+              f"{viol:.0f} of {len(done)} finished requests violated")
     if eng.stats["preempt_proactive"]:
         print(f"[serve] proactive preemptions (horizon="
               f"{eng.proactive_horizon}): "

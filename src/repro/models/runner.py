@@ -226,6 +226,23 @@ class ModelRunner:
             total += (a.size // a.shape[s.batch_axis]) * a.dtype.itemsize
         return total
 
+    def handoff_payload_bytes(self, block_size: int, itemsize: int,
+                              n_pages: int, cached_pages: int = 0,
+                              state=None) -> int:
+        """Bytes ONE prefill->decode handoff moves over the link: the
+        page chain's *uncached remainder* at the pool's storage width
+        plus the family's fixed-size recurrent slot-state blob (sized
+        from ``state`` when the family has one).  Prefix-cached pages
+        re-attach by reference decode-side and move nothing — this is
+        the payload ``core.noc.handoff_cost`` prices."""
+        pages = 0
+        if self.spec.paged:
+            pages = (max(0, n_pages - cached_pages)
+                     * self.page_kv_bytes(block_size, itemsize))
+        blob = (self.slot_state_bytes(state)
+                if state is not None and self.spec.slot_state else 0)
+        return pages + blob
+
     # -- paged-component page ops (COW + swap halves) ------------------
     def copy_page(self, state, src, dst):
         """Device-side physical-page copy across every paged component

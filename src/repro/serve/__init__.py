@@ -1,3 +1,4 @@
-from repro.serve.engine import Request, ServeEngine  # noqa: F401
+from repro.serve.disagg import DisaggServer  # noqa: F401
+from repro.serve.engine import Request, RequestFuture, ServeEngine  # noqa: F401
 from repro.serve.expert_cache import ExpertCache  # noqa: F401
-from repro.serve.swap import SwapArena, SwapHandle  # noqa: F401
+from repro.serve.swap import HandoffHandle, SwapArena, SwapHandle  # noqa: F401

@@ -1,0 +1,263 @@
+"""Disaggregated prefill/decode serving: two role-restricted engines and
+the CXL-priced paged-KV handoff between them.
+
+CompAir splits work by memory-compute intensity — prefill-shaped matrix
+work on the SRAM-PIM lane, bandwidth-bound decode on DRAM-PIM — and the
+serving analogue is **role disaggregation**: prefill bursts must stop
+stalling decode TPOT.  A :class:`DisaggServer` owns
+
+* a **prefill engine** (``ServeEngine(role="prefill")``) that admits
+  prompts, runs chunked prefill, samples each request's first token, and
+  then *parks* the request instead of decoding;
+* a **decode engine** (``ServeEngine(role="decode")``) that admits
+  exclusively from staged :class:`~repro.serve.swap.HandoffHandle`s and
+  runs the batched decode loop (restores/preemption as usual);
+* the **transfer channel** between them: a pinned
+  :class:`~repro.serve.swap.SwapArena` the server owns.  A parked prefill
+  is staged all-or-nothing — its page chain's *uncached remainder* plus
+  any recurrent slot-state blob — and priced per handoff by
+  ``core.noc.handoff_cost`` (int8 pages ride the link at storage width;
+  prefix-cached chains transfer only the uncached remainder, Sangam's
+  CXL-attached KV-movement centerpiece).
+
+Handoff lifecycle (one request)::
+
+    submit() -> prefill admit -> chunked prefill -> first token sampled
+      -> slot parks (_await_handoff)
+      -> DisaggServer matches the digest chain against the DECODE pool's
+         prefix registry, acquires the hits (eviction-proof in flight)
+      -> stage_handoff(): uncached remainder extracted into the arena,
+         prefill slot retired (its registered pages park in the prefill
+         LRU for future local hits)
+      -> submit_handoff(): decode engine adopts the rid and queues it
+      -> decode _admit_handoff(): cached pages share by reference, the
+         remainder copies out of the arena, slot state re-inserts, and
+         decode resumes by feeding the prefill-sampled token — no sampled
+         token is ever replayed or re-sampled across the link.
+
+Backpressure chains end-to-end: a full decode pool defers admission
+(``decode.stats["handoff_stalls"]``, the arm ``noc.
+handoff_admission_cost`` prices), which keeps arena slots occupied; a
+full arena defers staging (``stats["arena_stalls"]``), which keeps the
+parked request's pages resident prefill-side and throttles prefill
+admission through ordinary pool pressure.
+
+Both shapes speak the same **async API**: ``submit()`` returns a
+:class:`~repro.serve.engine.RequestFuture` whose ``result()``/``stream()``
+drive :meth:`DisaggServer.step` — host-side staging and admission overlap
+the asynchronously dispatched device steps of both engines.  Greedy
+outputs are token-identical to a monolithic ``ServeEngine`` run.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+
+from repro.core import noc
+from repro.serve import swap
+from repro.serve.engine import Request, RequestFuture, ServeEngine
+
+
+class DisaggServer:
+    """A prefill-role and a decode-role :class:`ServeEngine` pair plus the
+    pinned handoff arena between them, behind the single-engine API
+    (``submit`` / ``step`` / ``run_until_drained`` / futures)."""
+
+    def __init__(self, cfg, params, *,
+                 prefill: Optional[Dict] = None,
+                 decode: Optional[Dict] = None,
+                 handoff_pages: Optional[int] = None,
+                 handoff_hops: int = 1,
+                 **shared):
+        """Stand up the pair over one set of ``params``.
+
+        Args:
+          prefill / decode: per-role ``ServeEngine`` kwarg overrides
+            (slots, num_blocks, max_tokens_per_tick, seq_shards, ...)
+            layered over the ``shared`` kwargs.  ``role`` is forced.
+          handoff_pages: arena capacity in pages (the in-flight handoff
+            window).  Default: the prefill pool's full slot coverage, so
+            staging alone can never deadlock the prefill side.
+          handoff_hops: NoC hops the handoff link crosses (pricing only).
+          **shared: kwargs applied to both engines (block_size, kv_dtype,
+            prefix_caching, ...).
+        """
+        pkw = dict(shared); pkw.update(prefill or {})
+        dkw = dict(shared); dkw.update(decode or {})
+        for kw in (pkw, dkw):
+            if kw.pop("role", None) is not None:
+                raise ValueError("DisaggServer assigns engine roles itself")
+        self.prefill = ServeEngine(cfg, params, role="prefill", **pkw)
+        self.decode = ServeEngine(cfg, params, role="decode", **dkw)
+        if self.prefill.paged != self.decode.paged:
+            raise ValueError("prefill and decode engines must agree on "
+                             "paged vs slot-state-only serving")
+        if self.prefill.paged:
+            if self.prefill.block_size != self.decode.block_size:
+                raise ValueError(
+                    f"handoff pages must be layout-identical: prefill "
+                    f"block_size={self.prefill.block_size} != decode "
+                    f"block_size={self.decode.block_size}")
+            if self.prefill.kv_dtype != self.decode.kv_dtype:
+                raise ValueError(
+                    f"handoff pages must be layout-identical: prefill "
+                    f"kv_dtype={self.prefill.kv_dtype!r} != decode "
+                    f"kv_dtype={self.decode.kv_dtype!r}")
+        self.handoff_pages = (int(handoff_pages) if handoff_pages is not None
+                              else (self.prefill.slots
+                                    * self.prefill.blocks_per_slot
+                                    if self.prefill.paged else 0))
+        self.handoff_hops = int(handoff_hops)
+        self._arena: Optional[swap.SwapArena] = None
+        # the handoff ledger — the link traffic the CXL model prices
+        self.stats: Dict[str, float] = {
+            "handoffs": 0, "handoff_pages": 0, "handoff_cached_pages": 0,
+            "handoff_bytes": 0, "handoff_hops": 0,
+            "handoff_seconds": 0.0, "handoff_energy_pj": 0.0,
+            "arena_stalls": 0,
+            # per-role worker clocks: the two engines model two separate
+            # workers, so each role's step time is attributed separately —
+            # the decode worker's clock never includes prefill compute
+            # (that isolation IS the disaggregation win)
+            "decode_step_seconds": 0.0, "prefill_step_seconds": 0.0,
+        }
+
+    # -- submission (front door) ---------------------------------------
+    def submit(self, prompt, **kw) -> RequestFuture:
+        """Queue one request on the prefill role; returns a future over
+        *this* server (its ``result()``/``stream()`` drive both engines
+        and the staging loop)."""
+        rid = int(self.prefill.submit(prompt, **kw))
+        return RequestFuture(rid, self)
+
+    # -- handoff staging -----------------------------------------------
+    def _get_arena(self) -> swap.SwapArena:
+        if self._arena is None:
+            quant = self.prefill.kv_dtype == "int8"
+            self._arena = swap.SwapArena(
+                self.handoff_pages, self.prefill._page_shape(),
+                jnp.dtype(jnp.int8) if quant
+                else jnp.dtype(self.prefill.dtype),
+                quantized=quant)
+        return self._arena
+
+    def _stage_handoffs(self) -> None:
+        """Stream every parked prefill that fits the arena across to the
+        decode engine's queue, matching its digest chain against the
+        *decode* pool's prefix registry first so already-resident pages
+        never ride the link."""
+        for slot in self.prefill.poll_handoffs():
+            req = self.prefill.active[slot]
+            cached: List[int] = []
+            if (self.prefill.paged and self.decode.prefix_caching
+                    and req._digests):
+                full = (int(self.prefill.lengths[slot])
+                        // self.prefill.block_size)
+                for dg in req._digests[:full]:
+                    page = self.decode.alloc.lookup(dg)
+                    if page is None:
+                        break
+                    cached.append(page)
+                # acquire each hit NOW: a parked (refcount-0) registered
+                # page could otherwise be LRU-evicted between this match
+                # and decode-side admission, dangling the handle
+                for page in cached:
+                    self.decode.alloc.acquire(page)
+            arena = self._get_arena() if self.prefill.paged else None
+            handle = self.prefill.stage_handoff(slot, arena, cached)
+            if handle is None:
+                # arena full: slot stays parked (holding its prefill
+                # pages — backpressure), retry next tick
+                for page in cached:
+                    self.decode.alloc.unpin(page)
+                self.stats["arena_stalls"] += 1
+                continue
+            page_bytes = (self.prefill._page_kv_bytes()
+                          if self.prefill.paged else 0)
+            c = noc.handoff_cost(handle.total_pages, page_bytes,
+                                 state_bytes=handle.state_bytes,
+                                 cached_pages=len(handle.cached),
+                                 n_hops=self.handoff_hops)
+            self.stats["handoffs"] += 1
+            self.stats["handoff_pages"] += handle.n_pages
+            self.stats["handoff_cached_pages"] += len(handle.cached)
+            self.stats["handoff_bytes"] += c["bytes"]
+            self.stats["handoff_hops"] += c["hops"]
+            self.stats["handoff_seconds"] += c["seconds"]
+            self.stats["handoff_energy_pj"] += c["energy_pj"]
+            self.decode.submit_handoff(handle)
+
+    # -- server tick ---------------------------------------------------
+    def step(self) -> List[Request]:
+        """One server tick: stage parked prefills across (host-side work
+        that overlaps the engines' asynchronously dispatched device
+        steps), then tick decode, then prefill.  Returns every request
+        finished this tick (decode completions plus prefill-side
+        immediate finishes — EOS on the first token)."""
+        self._stage_handoffs()
+        t0 = time.perf_counter()
+        done = self.decode.step()
+        t1 = time.perf_counter()
+        done.extend(self.prefill.step())
+        self.stats["decode_step_seconds"] += t1 - t0
+        self.stats["prefill_step_seconds"] += time.perf_counter() - t1
+        return done
+
+    def run_until_drained(self, max_ticks: int = 10_000,
+                          strict: bool = True) -> List[Request]:
+        """Step until both engines are idle and nothing is parked or in
+        flight; returns every finished request."""
+        done: List[Request] = []
+        for _ in range(max_ticks):
+            done.extend(self.step())
+            if self._drained():
+                return done
+        if strict:
+            raise RuntimeError(
+                f"disagg server not drained after {max_ticks} ticks "
+                f"(prefill queued={self.prefill.queued} "
+                f"active={sum(r is not None for r in self.prefill.active)} "
+                f"parked={len(self.prefill.poll_handoffs())}, decode "
+                f"queued={self.decode.queued} "
+                f"active={sum(r is not None for r in self.decode.active)}, "
+                f"arena_stalls={self.stats['arena_stalls']:.0f}, "
+                f"handoff_stalls="
+                f"{self.decode.stats['handoff_stalls']:.0f})")
+        return done
+
+    def _drained(self) -> bool:
+        for eng in (self.prefill, self.decode):
+            if (eng.queued or eng.restore_queue
+                    or any(r is not None for r in eng.active)):
+                return False
+        return True
+
+    def reset_stats(self) -> None:
+        """Zero the handoff ledger and both engines' counters (benchmark
+        warmup passes stay out of the timed run)."""
+        for k in self.stats:
+            self.stats[k] = 0
+        self.prefill.reset_stats()
+        self.decode.reset_stats()
+
+    # -- async future driver protocol ----------------------------------
+    def _lookup(self, rid: int) -> Request:
+        # a handed-off rid lives in BOTH engines' registries; the decode
+        # copy is authoritative (it owns the token stream post-handoff).
+        # Prefill-only rids: still prefilling, staged-but-unadmitted, or
+        # finished before handoff (EOS / single-token requests).
+        req = self.decode._reqs.get(rid)
+        if req is not None:
+            return req
+        return self.prefill._reqs[rid]
+
+    def _future_done(self, rid: int) -> bool:
+        return self._lookup(rid).done
+
+    def _future_tokens(self, rid: int) -> List[int]:
+        return self._lookup(rid).out_tokens
+
+    def _future_step(self) -> None:
+        self.step()

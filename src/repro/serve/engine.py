@@ -43,16 +43,39 @@ standard production mechanisms:
   priority over new work; no decoded token is ever replayed or re-sampled,
   so greedy outputs are token-identical to an unpressured run.
 * **SLO-aware scheduling** — every request carries a *latency class*
-  (``submit(..., priority="interactive"|"batch")``); admission orders the
-  queue by class then age, preemption-victim selection scores candidates
-  by ``pages held x restore cost x class weight`` (restore cost priced by
-  ``core.noc.restore_cost_seconds`` — the same swap-vs-recompute model
-  ``preempt_decision`` uses), and with ``proactive_horizon > 0`` the
-  engine preempts on *predicted* page-pool exhaustion (free + reclaimable
-  pages vs the next-K-ticks page demand of active slots) instead of
-  waiting for a fully stalled tick.  Per-class counters live in
-  ``engine.class_stats``; per-request TTFT/TPOT (wall and tick clocks)
-  ride the :class:`Request`.
+  (``submit(..., priority="interactive"|"batch")``); fresh admissions
+  interleave classes by **deficit-weighted round-robin** over
+  ``class_weights`` (weight-proportional goodput shares under sustained
+  contention; no positive-weight class is ever fully starved), restores
+  re-admit first with class barriers, preemption-victim selection scores
+  candidates by ``pages held x restore cost x class weight`` (restore
+  cost priced by ``core.noc.restore_cost_seconds`` — the same
+  swap-vs-recompute model ``preempt_decision`` uses), and with
+  ``proactive_horizon > 0`` the engine preempts on *predicted* page-pool
+  exhaustion (free + reclaimable pages vs the next-K-ticks page demand
+  of active slots) instead of waiting for a fully stalled tick.
+  Deadlines (``submit(deadline_ms=...)`` or per-class
+  ``class_deadlines_ms``) are checked at finish on the wall clock;
+  misses land in ``stats["slo_violations"]`` and per-class in
+  ``class_stats``.  Per-request TTFT/TPOT (wall and tick clocks) ride
+  the :class:`Request`.
+* **Async submission** — ``submit()`` returns a :class:`RequestFuture`
+  (an ``int`` subclass, so rid-keyed callers are unchanged):
+  ``done()``/``tokens()`` poll without stepping, ``result()`` steps the
+  engine to completion, ``stream()`` yields tokens as ticks produce
+  them.  The same future API fronts the disaggregated
+  ``serve.disagg.DisaggServer``, so harnesses drive both shapes
+  identically.
+* **Prefill/decode disaggregation** (``role="prefill"|"decode"``) — the
+  serving analogue of the paper's SRAM-PIM/DRAM-PIM split: a
+  prefill-role engine terminates at handoff (first token sampled, slot
+  parked until ``stage_handoff()`` streams its page chain + recurrent
+  slot state into a shared pinned arena), a decode-role engine admits
+  exclusively from staged :class:`~repro.serve.swap.HandoffHandle`s
+  (``submit_handoff()``), re-attaching prefix-cached chains by reference
+  so only the uncached remainder rides the link —
+  ``core.noc.handoff_cost`` prices each transfer at storage width.
+  ``serve/disagg.py`` owns the pairing, staging loop and accounting.
 * **Sequence-sharded page pool** (``seq_shards=N``) — the physical pool is
   split over an N-device ``seq`` mesh axis; ``BlockAllocator`` places a
   slot's pages round-robin across shards (fill-local under pressure), and
@@ -146,6 +169,7 @@ class Request:
     temperature: float = 0.0            # 0 => greedy
     eos_id: Optional[int] = None
     priority: str = "interactive"       # latency class (LATENCY_CLASSES)
+    deadline_ms: Optional[float] = None  # SLO deadline, submit -> finish
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
     prefill_pos: int = 0                # tokens already prefilled (chunked)
@@ -163,6 +187,63 @@ class Request:
     _published: int = 0                 # this slot's pages already registered
     _resume_tokens: Optional[np.ndarray] = None  # [resume_len] int32
     _swap: Optional[object] = None      # swap.SwapHandle while parked
+    _await_handoff: bool = False        # prefill role: parked post-prefill
+    _handoff: Optional[object] = None   # decode role: staged HandoffHandle
+
+
+class RequestFuture(int):
+    """Async handle returned by ``submit()`` — the engine API the
+    disaggregated server forced onto the single-role engine too.
+
+    It subclasses ``int`` and *is* the request id, so every existing
+    rid-keyed consumer (dict keys, equality, formatting) is untouched;
+    on top of that it carries future/stream semantics over the owning
+    driver (a :class:`ServeEngine` or ``serve.disagg.DisaggServer`` —
+    anything with the ``_future_done/_future_tokens/_future_step``
+    protocol).  ``result()``/``stream()`` *drive* the server loop: each
+    wait tick advances every in-flight request (continuous batching), so
+    awaiting one future never idles the engine."""
+
+    def __new__(cls, rid: int, driver):
+        self = super().__new__(cls, rid)
+        self._driver = driver
+        return self
+
+    @property
+    def rid(self) -> int:
+        return int(self)
+
+    def done(self) -> bool:
+        return self._driver._future_done(int(self))
+
+    def tokens(self) -> List[int]:
+        """Tokens produced so far (a snapshot; grows until ``done()``)."""
+        return list(self._driver._future_tokens(int(self)))
+
+    def result(self, max_ticks: int = 10_000) -> List[int]:
+        """Block (stepping the driver) until this request finishes;
+        returns its completed token list."""
+        for _ in range(max_ticks):
+            if self.done():
+                return self.tokens()
+            self._driver._future_step()
+        raise RuntimeError(
+            f"request {int(self)} unfinished after {max_ticks} ticks")
+
+    def stream(self, max_ticks: int = 10_000):
+        """Yield tokens as they are produced, stepping the driver while
+        the request is unfinished (the streaming half of the async API)."""
+        sent = 0
+        for _ in range(max_ticks):
+            toks = self._driver._future_tokens(int(self))
+            while sent < len(toks):
+                yield toks[sent]
+                sent += 1
+            if self.done():
+                return
+            self._driver._future_step()
+        raise RuntimeError(
+            f"request {int(self)} unfinished after {max_ticks} ticks")
 
 
 def _next_pow2(n: int) -> int:
@@ -382,6 +463,20 @@ class BlockAllocator:
             raise RuntimeError(f"pin of unreferenced physical page {page}")
         self.refcount[page] += 1
 
+    def acquire(self, page: int) -> None:
+        """Like :meth:`pin`, but may resurrect a *parked* (refcount-0,
+        LRU-registered) page — handoff staging acquires the decode pool's
+        cached chain prefix so LRU eviction cannot invalidate the match
+        between staging and admission.  Only registered pages may be
+        acquired from refcount 0 (an unregistered refcount-0 page lives on
+        the free list and could be granted to anyone)."""
+        if self.refcount[page] == 0:
+            if page not in self._page_hash:
+                raise RuntimeError(
+                    f"acquire of free unregistered physical page {page}")
+            self._lru.pop(page, None)
+        self.refcount[page] += 1
+
     def unpin(self, page: int) -> None:
         self._unref(page)
 
@@ -408,7 +503,9 @@ class ServeEngine:
                  seq_shards: int = 1, preempt_policy: str = "auto",
                  swap_pages: Optional[int] = None,
                  class_weights: Optional[Dict[str, float]] = None,
+                 class_deadlines_ms: Optional[Dict[str, float]] = None,
                  proactive_horizon: int = 0,
+                 role: Optional[str] = None,
                  q_tile: Optional[int] = None,
                  kv_dtype: str = "fp16",
                  expert_parallel: Optional[int] = None,
@@ -460,11 +557,21 @@ class ServeEngine:
           swap_pages: host swap-arena capacity in pages (default: one full
             pool's worth).  A full arena degrades ``swap`` to
             ``recompute`` for that victim instead of failing.
-          class_weights: latency-class name -> preemption weight map
-            (default ``CLASS_WEIGHTS``: interactive=8, batch=1).  Classes
-            admit in descending-weight order (age-ordered within a
-            class) and a victim's eviction score scales with its weight,
-            so heavier classes are admitted sooner and evicted later.
+          class_weights: latency-class name -> weight map (default
+            ``CLASS_WEIGHTS``: interactive=8, batch=1).  Admission is a
+            deficit-weighted round-robin over the classes — each class
+            earns quantum proportional to its weight, so goodput shares
+            converge to the weight ratio under sustained load and no
+            class is ever fully starved (age-ordered within a class) —
+            and a victim's eviction score scales with its weight, so
+            heavier classes are admitted sooner and evicted later.
+          class_deadlines_ms: latency-class name -> default SLO deadline
+            (milliseconds, submit -> finish, wall clock).  A request may
+            override with ``submit(..., deadline_ms=)``; a finished
+            request past its deadline counts into
+            ``stats["slo_violations"]`` and its class's
+            ``class_stats[cls]["slo_violations"]``.  None (default):
+            no deadline for classes not in the map.
           proactive_horizon: look-ahead in ticks for *proactive*
             preemption (0 = off, the deadlock-only legacy behavior).
             When the active slots' predicted page demand over the next
@@ -473,6 +580,16 @@ class ServeEngine:
             ``pages x restore cost x class weight`` is preempted *before*
             anything stalls — progress-preserving, so greedy outputs stay
             token-identical either way.
+          role: restrict the engine to one half of a disaggregated
+            prefill/decode pair (``serve/disagg.py`` owns the pairing).
+            ``"prefill"`` runs admission + chunked prefill but
+            *terminates at handoff*: a finished prefill samples its first
+            token, then parks awaiting ``stage_handoff()`` instead of
+            decoding.  ``"decode"`` admits only staged
+            :class:`~repro.serve.swap.HandoffHandle`s
+            (``submit_handoff()``; plain ``submit()`` raises) and runs
+            batched decode — restores/preemption work as usual.  None
+            (default): the monolithic engine, both phases.
           q_tile: prefill-kernel query-tile size in chunk positions
             (default None = auto: largest power of two whose scratch fits
             the kernel's VMEM budget, so big buckets tile and small ones
@@ -660,16 +777,32 @@ class ServeEngine:
         self.max_tokens_per_tick = (max_tokens_per_tick if max_tokens_per_tick
                                     else slots + self.prefill_buckets[-1])
         if self.max_tokens_per_tick < self.prefill_buckets[0]:
-            raise ValueError(
-                f"max_tokens_per_tick={self.max_tokens_per_tick} can never "
-                f"afford the smallest prefill bucket "
-                f"({self.prefill_buckets[0]}); no request could ever start")
+            # a decode-role engine under swap-only preemption never runs a
+            # prefill chunk (handoff admission and swap restores insert
+            # pages directly), so its budget only has to cover decodes
+            if not (role == "decode" and preempt_policy == "swap"):
+                raise ValueError(
+                    f"max_tokens_per_tick={self.max_tokens_per_tick} can "
+                    f"never afford the smallest prefill bucket "
+                    f"({self.prefill_buckets[0]}); no request could ever "
+                    f"start (role='decode' with preempt_policy='swap' is "
+                    f"exempt: it admits handoffs, never prefill chunks)")
 
         if preempt_policy not in ("swap", "recompute", "auto"):
             raise ValueError(
                 f"preempt_policy must be 'swap', 'recompute' or 'auto', "
                 f"got {preempt_policy!r}")
         self.preempt_policy = preempt_policy
+
+        if role not in (None, "prefill", "decode"):
+            raise ValueError(
+                f"role must be None, 'prefill' or 'decode', got {role!r}")
+        if role is not None and self.dense_baseline:
+            raise ValueError(
+                "role-restricted engines hand KV progress across workers "
+                "— the dense-slab baseline (paged=False) has no "
+                "extract/insert page path; serve it monolithic")
+        self.role = role
 
         self.class_weights = dict(CLASS_WEIGHTS)
         if class_weights:
@@ -680,6 +813,16 @@ class ServeEngine:
         # admission order: heaviest class first, name-stable on ties
         self.class_order = tuple(sorted(
             self.class_weights, key=lambda c: (-self.class_weights[c], c)))
+        self.class_deadlines_ms = dict(class_deadlines_ms or {})
+        unknown = set(self.class_deadlines_ms) - set(self.class_weights)
+        if unknown:
+            raise ValueError(
+                f"class_deadlines_ms names unknown classes {sorted(unknown)}"
+                f"; this engine serves {sorted(self.class_weights)}")
+        # deficit-weighted round-robin credit per class (fresh admissions;
+        # restores bypass it — they outrank all fresh work of their class)
+        self._deficit: Dict[str, float] = {
+            cls: 0.0 for cls in self.class_order}
         self.proactive_horizon = int(proactive_horizon)
         if self.proactive_horizon < 0:
             raise ValueError(
@@ -727,6 +870,9 @@ class ServeEngine:
                                  if self.paged else 0))
         self._arena = None              # serve.swap.SwapArena, lazily built
         self._rid = itertools.count()
+        # rid -> Request for the async future API (futures poll by rid;
+        # entries persist after finish so .result() works post-drain)
+        self._reqs: Dict[int, Request] = {}
         self._tick = 0
         self._stalled_this_tick = False
         self.class_stats: Dict[str, Dict[str, float]] = {
@@ -785,6 +931,14 @@ class ServeEngine:
             # byte-budgeted pool sustains
             "kv_bytes_per_page": self._page_kv_bytes() if self.paged else 0,
             "peak_active": 0,
+            # disaggregated serving (role-restricted engines): handoffs is
+            # decode-side admissions from a HandoffHandle; handoff_stalls
+            # counts admission attempts deferred by decode-pool pressure
+            # (the backpressure arm of noc.handoff_admission_cost).
+            # slo_violations counts finished requests that missed their
+            # effective deadline (per-request deadline_ms, else the
+            # class_deadlines_ms entry for their class)
+            "handoffs": 0, "handoff_stalls": 0, "slo_violations": 0,
         }
         self._prefill_fns: Dict[int, object] = {}
         self._decode = self._make_decode_fn()
@@ -804,13 +958,15 @@ class ServeEngine:
     @staticmethod
     def _zero_class_stats() -> Dict[str, float]:
         return {"submitted": 0, "finished": 0, "finished_tokens": 0,
-                "preemptions": 0}
+                "preemptions": 0, "slo_violations": 0}
 
     @property
     def queue(self) -> List[Request]:
-        """Queued-but-unadmitted requests in admission order (class order,
-        age-ordered within a class).  A read-only snapshot — ``submit()``
-        is the only writer."""
+        """Queued-but-unadmitted requests, class-major and age-ordered
+        within a class.  A read-only snapshot for introspection — actual
+        admission interleaves classes by deficit-weighted round-robin
+        (see :meth:`_admit`), so this listing is not the admission
+        order under contention."""
         return [r for cls in self.class_order for r in self._queues[cls]]
 
     @property
@@ -924,19 +1080,29 @@ class ServeEngine:
         return fn
 
     # -- submission ----------------------------------------------------
-    def submit(self, prompt, **kw) -> int:
-        """Queue one generation request; returns its request id.
+    def submit(self, prompt, **kw) -> "RequestFuture":
+        """Queue one generation request; returns a :class:`RequestFuture`
+        (an ``int`` subclass carrying the request id, so legacy callers
+        that treat the return value as a rid keep working unchanged).
 
         ``prompt`` is a sequence of token ids in ``[0, vocab_size)``;
         keyword args fill the :class:`Request` fields (``max_new_tokens``,
         ``temperature``, ``eos_id``, ``priority`` — the latency class,
-        one of the engine's ``class_weights`` keys).  Validation is
-        up-front and loud: empty or out-of-vocab prompts raise
-        (out-of-vocab ids would embed as NaN and poison recycled pages),
-        as do unknown latency classes and a request that could never fit
-        the page pool even alone (it would stall the engine forever).
-        With prefix caching on, the chained page digests are computed
-        here so admission can pin the longest cached prefix."""
+        one of the engine's ``class_weights`` keys — and ``deadline_ms``,
+        a per-request SLO deadline overriding the class default).
+        Validation is up-front and loud: empty or out-of-vocab prompts
+        raise (out-of-vocab ids would embed as NaN and poison recycled
+        pages), as do unknown latency classes and a request that could
+        never fit the page pool even alone (it would stall the engine
+        forever).  With prefix caching on, the chained page digests are
+        computed here so admission can pin the longest cached prefix.
+
+        A ``role="decode"`` engine refuses plain submissions — it admits
+        work exclusively through :meth:`submit_handoff`."""
+        if self.role == "decode":
+            raise RuntimeError(
+                "decode-role engine admits handoffs only; submit prompts "
+                "to the prefill role (or the DisaggServer front door)")
         # defensive copy: np.asarray is zero-copy for an int32 ndarray, so
         # caller-side mutation after submit would silently corrupt the
         # queued prompt, its page digests, and the chunked-prefill source
@@ -976,8 +1142,44 @@ class ServeEngine:
                     self._plen(req) // self.block_size,
                     seed=self._digest_seed)
         self.class_stats[req.priority]["submitted"] += 1
+        self._reqs[req.rid] = req
         self._queues[req.priority].append(req)
-        return req.rid
+        return RequestFuture(req.rid, self)
+
+    def submit_handoff(self, handle) -> "RequestFuture":
+        """Enqueue one staged prefill (a :class:`serve.swap.HandoffHandle`)
+        for decode-side admission.  Decode-role engines admit exclusively
+        through this door; a monolithic engine accepts handoffs too (used
+        by tests to exercise the round trip in isolation).
+
+        The handle's rid is **adopted** — the decode-role engine's own rid
+        counter is never consumed (``submit()`` raises), so prefill-side
+        rids stay globally unique and the future returned here is
+        interchangeable with the one the DisaggServer front door returned
+        at submission time.  No token is sampled or replayed here: the
+        handle's ``out_tokens`` already hold everything the prefill side
+        sampled, and decode resumes by feeding the last of them."""
+        if self.role == "prefill":
+            raise RuntimeError("prefill-role engine cannot admit handoffs")
+        req = Request(int(handle.rid), np.array(handle.prompt, np.int32),
+                      max_new_tokens=handle.max_new_tokens,
+                      temperature=handle.temperature,
+                      eos_id=handle.eos_id, priority=handle.priority,
+                      deadline_ms=handle.deadline_ms)
+        if req.priority not in self.class_weights:
+            raise ValueError(
+                f"unknown latency class {req.priority!r}; this engine "
+                f"serves {sorted(self.class_weights)}")
+        req.out_tokens = list(handle.out_tokens)
+        req._digests = list(handle.digests)
+        req._handoff = handle
+        req._t_submit = handle.t_submit or time.perf_counter()
+        req.ttft = handle.ttft
+        req.submit_tick = self._tick
+        self.class_stats[req.priority]["submitted"] += 1
+        self._reqs[req.rid] = req
+        self._queues[req.priority].append(req)
+        return RequestFuture(req.rid, self)
 
     def _free_slot(self) -> Optional[int]:
         for i, r in enumerate(self.active):
@@ -1015,17 +1217,37 @@ class ServeEngine:
         """Move queued requests into free slots (no token cost; the prefill
         work is budgeted separately in _prefill_tick).
 
-        Admission is class-ordered: for each latency class in descending
-        weight, preempted requests of that class re-admit FIRST (FIFO
-        among themselves), then fresh submissions of that class,
-        age-ordered.  A restore that cannot be placed yet (swap-in
-        waiting for enough free pages) blocks everything of its own and
-        every lighter class behind it — equal-or-lower work must not grab
-        the pages a victim was evicted to free, or the victim starves —
-        while a strictly heavier class may still jump a parked lighter
-        victim (the SLO contract).  With prefix caching the prompt's
-        longest cached page-prefix is attached here and the chunked
-        prefill starts at the first uncached token."""
+        Two phases.  **Restores first**, class-ordered: for each latency
+        class in descending weight, preempted requests of that class
+        re-admit FIFO among themselves.  A restore that cannot be placed
+        yet (swap-in waiting for enough free pages) blocks everything of
+        its own and every lighter class behind it — equal-or-lower work
+        must not grab the pages a victim was evicted to free, or the
+        victim starves — while a strictly heavier class may still jump a
+        parked lighter victim (the SLO contract).
+
+        **Fresh submissions** then admit by deficit-weighted round-robin
+        over ``class_weights``: each class accrues credit proportional to
+        its weight and spends one credit per admission, so sustained
+        contention converges to weight-proportional goodput shares
+        (weights 8:1 admit ~8 interactive per batch) and no positive-
+        weight class is ever fully starved — unlike strict class-then-age
+        order, where an unbroken heavy-class arrival stream starves
+        lighter classes forever.  When queues drain between bursts a
+        class's credit resets, so an idle engine still admits in plain
+        class-then-age order (burst arrivals into an idle engine see the
+        heaviest class go first).  Classes at or below the restore
+        barrier are excluded from the rotation.
+
+        A queue head carrying a :class:`~serve.swap.HandoffHandle` admits
+        through :meth:`_admit_handoff`; if the decode pool cannot take it
+        yet, the head stays put (age order within the class is
+        preserved), the class barriers like a blocked restore, and
+        ``stats["handoff_stalls"]`` counts the deferral — that is the
+        backpressure arm priced by ``noc.handoff_admission_cost``.  With
+        prefix caching the prompt's longest cached page-prefix is
+        attached here and the chunked prefill starts at the first
+        uncached token."""
         barrier = 0.0          # classes with weight <= barrier are blocked
         for cls in self.class_order:
             w = self.class_weights[cls]
@@ -1040,24 +1262,130 @@ class ServeEngine:
                     barrier = max(barrier, w)
                     break
                 self.restore_queue.remove(req)
-            if w <= barrier:
-                continue
+        # deficit round-robin over classes with queued fresh work
+        for cls in self.class_order:
+            if not self._queues[cls]:
+                self._deficit[cls] = 0.0    # credit does not accrue idle
+        while True:
+            cand = [c for c in self.class_order
+                    if self._queues[c] and self.class_weights[c] > barrier]
+            if not cand:
+                return
+            slot = self._free_slot()
+            if slot is None:
+                return
+            if all(self._deficit[c] < 1.0 for c in cand):
+                for c in cand:
+                    self._deficit[c] += self.class_weights[c]
+            cls = max(cand, key=lambda c: (self._deficit[c],
+                                           self.class_weights[c]))
             q = self._queues[cls]
-            while q:
-                slot = self._free_slot()
-                if slot is None:
-                    return
-                req = q.popleft()
+            req = q[0]
+            if req._handoff is not None:
+                if not self._admit_handoff(slot, req):
+                    # decode pool full: head waits (keeping class age
+                    # order), nothing lighter may take its pages
+                    self.stats["handoff_stalls"] += 1
+                    barrier = max(barrier, self.class_weights[cls])
+                    continue
+                q.popleft()
+            else:
+                q.popleft()
                 req.prefill_pos = 0
                 req.cached_len = 0
                 req._published = 0
                 self.active[slot] = req
                 self.lengths[slot] = 0
                 if self.has_slot_state:
-                    # the previous occupant's recurrent state must not leak
-                    self.state = self._reset_slot(self.state, jnp.int32(slot))
+                    # the previous occupant's state must not leak
+                    self.state = self._reset_slot(self.state,
+                                                  jnp.int32(slot))
                 if self.prefix_attach:
                     self._attach_prefix(slot, req)
+            self._deficit[cls] -= 1.0
+
+    def _admit_handoff(self, slot: int, req: Request) -> bool:
+        """Adopt one staged prefill into ``slot``: share its prefix-cached
+        pages by reference, allocate device pages for the transferred
+        remainder, copy the remainder (and any recurrent slot-state blob)
+        out of the staging arena, and resume decode at exactly the staged
+        position.  False if the pool cannot take it yet — all-or-nothing,
+        like a swap restore: a half-adopted handoff could neither decode
+        nor release the arena.  On success the transferred full pages are
+        registered under their digests, so a later handoff of the same
+        prompt prefix transfers only its uncached remainder."""
+        handle = req._handoff
+        n_pub = 0
+        if self.paged:
+            # need enough pages for the chain remainder now AND at least
+            # one decode step of headroom (mirrors _restore_swapped)
+            need = handle.n_pages
+            grow = -(-(handle.tokens + 1) // self.block_size)
+            if self.alloc.free_blocks < max(need, grow - len(handle.cached)):
+                return False
+            self.active[slot] = req
+            for page in handle.cached:
+                self.alloc.share(slot, page)
+            fresh: List[int] = []
+            for _ in range(need):
+                page = self.alloc.alloc_page(slot)
+                if page is None:
+                    # raced with nothing (single-threaded) but shard
+                    # rounding can strand pages: roll back whole
+                    self.alloc.release(slot)
+                    self.active[slot] = None
+                    return False
+                fresh.append(page)
+            if fresh:
+                if self.kv_dtype == "int8":
+                    k, v, ks, vs = handle.arena.read(handle.slots)
+                else:
+                    k, v = handle.arena.read(handle.slots)
+                for sh, idx in self._by_shard(fresh):
+                    ids = self._pad_pow2([fresh[i] for i in idx])
+                    args = [jnp.asarray(ids),
+                            jnp.asarray(self._pad_pages(
+                                np.moveaxis(k[idx], 0, 2))),
+                            jnp.asarray(self._pad_pages(
+                                np.moveaxis(v[idx], 0, 2)))]
+                    if self.kv_dtype == "int8":
+                        args += [jnp.asarray(self._pad_pages(
+                                     np.moveaxis(ks[idx], 0, 2))),
+                                 jnp.asarray(self._pad_pages(
+                                     np.moveaxis(vs[idx], 0, 2)))]
+                    self.state = self._insert_pages(self.state, *args)
+            # register transferred FULL pages so the next handoff (or a
+            # local prefix hit) of this prompt skips the transfer
+            n_pub = len(handle.cached)
+            if self.prefix_caching:
+                full = handle.tokens // self.block_size
+                chain = self.alloc.table[slot]
+                for i in range(n_pub, min(full, len(handle.digests))):
+                    self.alloc.register(int(chain[i]), handle.digests[i])
+                    n_pub = i + 1
+            # drop the staging refcounts taken when the match was made
+            for page in handle.cached:
+                self.alloc.unpin(page)
+            handle.arena.free(handle)
+        if handle.state is not None:
+            # the blob covers every slot-state key, so no reset is needed
+            self.state = self.runner.insert_slot_state(
+                self.state, slot, handle.state)
+        elif self.has_slot_state:
+            self.state = self._reset_slot(self.state, jnp.int32(slot))
+        self.active[slot] = req
+        plen = self._plen(req)
+        req.prefill_pos = handle.tokens
+        req.cached_len = handle.tokens
+        req.resume_len = handle.tokens
+        req._resume_tokens = req.prompt[:plen].astype(np.int32)
+        req._published = n_pub if self.paged else 0
+        req._handoff = None
+        self.lengths[slot] = handle.tokens
+        req.first_tick = self._tick
+        req._t_first = time.perf_counter()
+        self.stats["handoffs"] += 1
+        return True
 
     def _attach_prefix(self, slot: int, req: Request) -> None:
         """Pin the longest registered page chain matching ``req``'s prompt.
@@ -1346,6 +1674,11 @@ class ServeEngine:
         hit_eos = req.eos_id is not None and first == req.eos_id
         if hit_eos or req.max_new_tokens <= 1:
             self._finish(slot, req, finished)
+        elif self.role == "prefill":
+            # disaggregated prefill terminates HERE: the request parks with
+            # its KV chain + first sampled token until the DisaggServer
+            # stages it across (stage_handoff) — it never decodes locally
+            req._await_handoff = True
 
     def _finish(self, slot: int, req: Request, finished: List[Request],
                 ) -> None:
@@ -1359,6 +1692,15 @@ class ServeEngine:
         cs = self.class_stats[req.priority]
         cs["finished"] += 1
         cs["finished_tokens"] += len(req.out_tokens)
+        # SLO accounting: per-request deadline_ms overrides the class
+        # default; violations are counted at finish on the wall clock
+        # (submit -> last token), the latency the caller actually saw
+        dl = (req.deadline_ms if req.deadline_ms is not None
+              else self.class_deadlines_ms.get(req.priority))
+        if dl is not None and req._t_submit:
+            if (time.perf_counter() - req._t_submit) * 1e3 > dl:
+                self.stats["slo_violations"] += 1
+                cs["slo_violations"] += 1
         finished.append(req)
         self._retire(slot)
 
@@ -1466,6 +1808,7 @@ class ServeEngine:
         position."""
         req = self.active[slot]
         return bool(req is not None and req.out_tokens
+                    and not req._await_handoff
                     and req.prefill_pos >= self._prefill_target(req))
 
     def step(self) -> List[Request]:
@@ -1604,7 +1947,8 @@ class ServeEngine:
         greedy outputs are unchanged and no decoded token is ever
         replayed."""
         victims = [i for i, r in enumerate(self.active)
-                   if r is not None and self.alloc.used[i] > 0]
+                   if r is not None and self.alloc.used[i] > 0
+                   and not r._await_handoff]
         if len(victims) < 2:
             # a parked swap restore can itself hold pages hostage (its
             # handle pins shared prefix-chain pages whose co-holders have
@@ -1675,7 +2019,8 @@ class ServeEngine:
         if self.restore_queue:
             return
         victims = [i for i, r in enumerate(self.active)
-                   if r is not None and self.alloc.used[i] > 0]
+                   if r is not None and self.alloc.used[i] > 0
+                   and not r._await_handoff]
         if len(victims) < 2:
             return
         if self._page_demand(self.proactive_horizon) <= self.alloc.free_blocks:
@@ -1872,6 +2217,78 @@ class ServeEngine:
         self.lengths[slot] = 0
         if self.paged:
             self.alloc.release(slot)
+
+    # -- disaggregated handoff (prefill side) --------------------------
+    def poll_handoffs(self) -> List[int]:
+        """Slots parked awaiting handoff (prefill-role engines only park
+        after :meth:`_finish_prefill`; empty on other roles)."""
+        return [i for i, r in enumerate(self.active)
+                if r is not None and r._await_handoff]
+
+    def stage_handoff(self, slot: int, arena, cached=()):
+        """Stream one parked prefill out of ``slot`` into ``arena`` and
+        retire the slot; returns the :class:`~serve.swap.HandoffHandle`
+        or None when the arena cannot hold the chain remainder (the slot
+        stays parked and the caller retries next tick — arena
+        backpressure propagates into prefill-pool pressure by design).
+
+        ``cached`` is the *decode-pool* page-id list for the leading
+        full-page prefix already registered over there (matched by the
+        DisaggServer against this request's digest chain, each id
+        acquired so it cannot be evicted in flight): those pages never
+        ride the link — only the uncached remainder is extracted, which
+        is exactly what ``noc.handoff_cost`` prices.  The prefill pool
+        keeps its own registered copies parked in the LRU (``_retire`` ->
+        ``release``), so a future prompt sharing the prefix still hits
+        locally."""
+        from repro.serve import swap
+        req = self.active[slot]
+        if req is None or not req._await_handoff:
+            raise RuntimeError(f"slot {slot} holds no handoff-ready request")
+        tokens = int(self.lengths[slot])
+        handle = swap.HandoffHandle(
+            rid=req.rid, prompt=req.prompt,
+            max_new_tokens=req.max_new_tokens,
+            temperature=req.temperature, eos_id=req.eos_id,
+            priority=req.priority, deadline_ms=req.deadline_ms,
+            out_tokens=list(req.out_tokens), tokens=tokens,
+            digests=list(req._digests), cached=list(cached), arena=arena,
+            t_submit=req._t_submit, ttft=req.ttft)
+        if self.paged:
+            n_pages = -(-tokens // self.block_size)
+            pages = [int(p) for p in self.alloc.table[slot, :n_pages]]
+            rest = pages[len(handle.cached):]
+            if rest:
+                got = arena.alloc(len(rest))
+                if got is None:
+                    return None        # arena full: stays parked
+                handle.slots = got.slots
+                for sh, idx in self._by_shard(rest):
+                    ids = self._pad_pow2([rest[i] for i in idx])
+                    k, v, ks, vs = self._extract_pages(self.state,
+                                                       jnp.asarray(ids))
+                    k = np.moveaxis(np.asarray(k), 2, 0)[:len(idx)]
+                    v = np.moveaxis(np.asarray(v), 2, 0)[:len(idx)]
+                    if ks is not None:
+                        ks = np.moveaxis(np.asarray(ks), 2, 0)[:len(idx)]
+                        vs = np.moveaxis(np.asarray(vs), 2, 0)[:len(idx)]
+                    arena.write([handle.slots[i] for i in idx], k, v, ks, vs)
+        if self.has_slot_state:
+            handle.state = self.runner.extract_slot_state(self.state, slot)
+            handle.state_bytes = self._slot_state_bytes
+        req._await_handoff = False
+        self._retire(slot)
+        return handle
+
+    # -- async future driver protocol ----------------------------------
+    def _future_done(self, rid: int) -> bool:
+        return self._reqs[rid].done
+
+    def _future_tokens(self, rid: int) -> List[int]:
+        return self._reqs[rid].out_tokens
+
+    def _future_step(self) -> None:
+        self.step()
 
     def run_until_drained(self, max_ticks: int = 10_000,
                           strict: bool = True) -> List[Request]:

@@ -63,6 +63,62 @@ class SwapHandle:
         return len(self.slots)
 
 
+@dataclass
+class HandoffHandle:
+    """One finished prefill staged for a decode-role engine (disaggregated
+    serving, ``serve/disagg.py``).  The page mechanics are exactly a
+    :class:`SwapHandle`'s — ``slots`` park the transferred page-chain
+    remainder in an arena, ``state``/``state_bytes`` carry the family's
+    fixed-size recurrent blob — plus everything the decode engine needs to
+    admit the request without ever re-running prefill or re-sampling:
+
+    * ``out_tokens`` — the token(s) sampled on the prefill side (normally
+      just the first token, from the final chunk's logits).  The decode
+      side admits with these as its ``out_tokens`` and feeds the last one
+      through decode, so no sampled token is ever replayed or re-sampled
+      across the handoff.
+    * ``tokens`` — KV rows the staged chain covers (the clamped prompt
+      length); decode resumes at exactly this position.
+    * ``digests`` — the chained full-page digest list.  The leading
+      ``cached`` pages were already registered in the *decode* pool's
+      prefix registry at staging time: they were never copied into the
+      arena (the uncached-remainder contract ``core.noc.handoff_cost``
+      prices) and admission re-attaches them by reference.  ``cached``
+      holds the decode-pool page ids, acquired (refcounted) at staging so
+      LRU eviction cannot invalidate the match while the handoff waits.
+    * scheduling/SLO fields (``priority``, ``deadline_ms``, ``t_submit``,
+      ``ttft``) ride along so decode-side accounting stays per-request.
+    * ``arena`` — the staging arena holding ``slots`` (the transfer
+      channel is owned by the ``DisaggServer``, not by either engine)."""
+    rid: int = 0
+    prompt: Optional[np.ndarray] = None
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    priority: str = "interactive"
+    deadline_ms: Optional[float] = None
+    out_tokens: List[int] = field(default_factory=list)
+    tokens: int = 0
+    digests: List[bytes] = field(default_factory=list)
+    cached: List[int] = field(default_factory=list)
+    slots: List[int] = field(default_factory=list)
+    arena: Optional["SwapArena"] = None
+    state: Optional[object] = None
+    state_bytes: int = 0
+    t_submit: float = 0.0
+    ttft: Optional[float] = None
+
+    @property
+    def n_pages(self) -> int:
+        """Pages staged in the arena (the transferred remainder)."""
+        return len(self.slots)
+
+    @property
+    def total_pages(self) -> int:
+        """Full chain length: cached (by-reference) + transferred pages."""
+        return len(self.cached) + len(self.slots)
+
+
 class SwapArena:
     """Fixed-capacity host arena of KV pages (the swap tier).
 

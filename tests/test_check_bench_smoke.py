@@ -26,6 +26,18 @@ def _capacity():
     }
 
 
+def _disagg():
+    return {
+        "leg": "disagg", "outputs_match": True, "tpot_p99_gain": 3.0,
+        "mono": {"tpot_p99_ms": 30.0},
+        "disagg": {"tpot_p99_ms": 10.0},
+        "handoff": {"handoffs": 8, "handoff_pages": 40,
+                    "handoff_cached_pages": 0, "handoff_bytes": 163840,
+                    "handoff_hops": 8, "handoff_seconds": 3e-6,
+                    "handoff_energy_pj": 6.5e6, "arena_stalls": 0},
+    }
+
+
 def _full_artifact():
     classes = {
         "interactive": {"ttft_p99_ticks": 4.0, "goodput_tok_s": 100.0},
@@ -41,6 +53,7 @@ def _full_artifact():
                       "classes": pro_classes},
     }
     return {
+        "config": {"n_requests": 8},
         "mixed": {"outputs_match": True},
         "family": {"arch": "zamba2-7b", "outputs_match": True,
                    "paged": True, "slot_state": True, "tok_s": 900.0},
@@ -54,6 +67,7 @@ def _full_artifact():
         },
         "traffic": {"poisson": copy.deepcopy(leg),
                     "bursty": copy.deepcopy(leg)},
+        "disagg": _disagg(),
         "capacity": _capacity(),
     }
 
@@ -67,6 +81,7 @@ def _sharded_artifact():
             "swap": {"preemptions": 1, "restored_ratio": 0.8},
             "recompute": {"preemptions": 1, "restored_ratio": 0.0},
         },
+        "disagg": _disagg(),
         "capacity": _capacity(),
     }
 
@@ -93,6 +108,15 @@ def test_capacity_leg_optional(tmp_path):
     assert _run(tmp_path, art, "full") == 0
 
 
+@pytest.mark.parametrize("lane,mk", [("full", _full_artifact),
+                                     ("sharded", _sharded_artifact)])
+def test_disagg_leg_optional(tmp_path, lane, mk):
+    """Artifacts that predate the disaggregation leg skip its gates."""
+    art = mk()
+    del art["disagg"]
+    assert _run(tmp_path, art, lane) == 0
+
+
 @pytest.mark.parametrize("mutate", [
     lambda a: a["mixed"].update(outputs_match=False),
     lambda a: a["family"].update(outputs_match=False),
@@ -105,6 +129,10 @@ def test_capacity_leg_optional(tmp_path):
     lambda a: a["capacity"].update(outputs_match=False),
     lambda a: a["capacity"]["int8"].update(preemptions=2),
     lambda a: a["capacity"]["fp16_overload"].update(preemptions=0),
+    lambda a: a["disagg"].update(outputs_match=False),
+    lambda a: a["disagg"].update(tpot_p99_gain=0.9),
+    lambda a: a["disagg"]["handoff"].update(handoffs=7),
+    lambda a: a["disagg"]["handoff"].update(handoff_bytes=0),
 ])
 def test_full_lane_fails_on_regression(tmp_path, mutate):
     art = _full_artifact()

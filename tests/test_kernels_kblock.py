@@ -1,0 +1,133 @@
+"""K-axis blocking inside a page step: for pools with ``block_size > 64``
+both paged kernels run the online-softmax recurrence per 64-row K-subtile
+under the page loop (same ``(acc, m, l)`` carry, updated more often), so
+live f32 K/V values stay ``[64, D]`` however big the page is.  These are
+the interpret-mode parity checks at big block sizes vs the kernels/ref.py
+oracle — outputs AND partials, fp16 and int8-quantized pools, plus the
+``skip_null`` shard-local-table contract."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import decode_attention as da
+from repro.kernels import prefill_attention as pf
+from repro.kernels import ref
+
+# 128 tiles 2x64; 192 tiles 3x64; 96 is NOT 64-divisible so it must fall
+# back to the untiled single-pass path — all three must match the oracle
+BIG_BLOCKS = (128, 192, 96)
+
+
+def _paged_case(rng, *, bs, kvh=2, nb=6, d=16, h=6, quantized=False):
+    kp = rng.normal(size=(kvh, nb, bs, d)).astype(np.float32)
+    vp = rng.normal(size=(kvh, nb, bs, d)).astype(np.float32)
+    if quantized:
+        ks = rng.uniform(0.5, 2.0, size=(kvh, nb)).astype(np.float32)
+        vs = rng.uniform(0.5, 2.0, size=(kvh, nb)).astype(np.float32)
+        kp = np.round(kp * 20).clip(-127, 127).astype(np.int8)
+        vp = np.round(vp * 20).clip(-127, 127).astype(np.int8)
+    else:
+        ks = vs = None
+    j = lambda a: None if a is None else jnp.asarray(a)
+    return j(kp), j(vp), j(ks), j(vs)
+
+
+def test_paged_decode_kblock_parity(rng):
+    b, h, d, kvh = 3, 6, 16, 2
+    for bs in BIG_BLOCKS:
+        kp, vp, _, _ = _paged_case(rng, bs=bs)
+        q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+        bt = jnp.asarray(rng.permutation(5)[:3].reshape(1, 3) + 1,
+                         jnp.int32).repeat(b, 0)
+        # lengths straddle subtile boundaries: mid-subtile, exact subtile
+        # edge, and full pages
+        lens = jnp.asarray([bs + 7, 2 * bs, 3 * bs], jnp.int32)
+        want = ref.paged_decode_attention(q, kp, vp, bt, lengths=lens)
+        got = da.paged_decode_attention(q, kp, vp, bt, lengths=lens,
+                                        interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"block_size={bs}")
+        ref_p = ref.paged_decode_attention_partial(q, kp, vp, bt,
+                                                   lengths=lens)
+        ker_p = da.paged_decode_attention_partial(q, kp, vp, bt,
+                                                  lengths=lens,
+                                                  interpret=True)
+        for a, bb in zip(ref_p, ker_p):
+            np.testing.assert_allclose(np.asarray(bb), np.asarray(a),
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=f"partials block_size={bs}")
+
+
+def test_paged_decode_kblock_quantized_parity(rng):
+    """Per-page dequant scales apply to every K-subtile of the page."""
+    b, h, d, kvh, bs = 2, 4, 16, 2, 128
+    kp, vp, ks, vs = _paged_case(rng, bs=bs, quantized=True)
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    bt = jnp.asarray([[1, 3, 2], [4, 2, 5]], jnp.int32)
+    lens = jnp.asarray([2 * bs - 11, 3 * bs], jnp.int32)
+    want = ref.paged_decode_attention(q, kp, vp, bt, lengths=lens,
+                                      k_scales=ks, v_scales=vs)
+    got = da.paged_decode_attention(q, kp, vp, bt, lengths=lens,
+                                    k_scales=ks, v_scales=vs,
+                                    interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_prefill_kblock_parity(rng):
+    h, kvh, d, c = 6, 2, 16, 12
+    for bs in BIG_BLOCKS:
+        kp, vp, _, _ = _paged_case(rng, bs=bs)
+        q = jnp.asarray(rng.normal(size=(1, c, h, d)), jnp.float32)
+        bt = jnp.asarray(rng.permutation(5)[:3] + 1, jnp.int32)
+        # chunk offsets landing mid-subtile, at a subtile edge, and deep
+        # into the chain exercise the causal mask per K-subtile
+        for qoff in (0, 61, 64, bs + 5, 2 * bs):
+            kw = dict(q_offset=jnp.int32(qoff), length=jnp.int32(c))
+            want = ref.paged_prefill_attention(q, kp, vp, bt, **kw)
+            got = pf.paged_prefill_attention(q, kp, vp, bt,
+                                             interpret=True, **kw)
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5,
+                err_msg=f"block_size={bs} q_offset={qoff}")
+
+
+def test_paged_prefill_kblock_quantized_and_partials(rng):
+    h, kvh, d, c, bs = 4, 2, 16, 10, 128
+    kp, vp, ks, vs = _paged_case(rng, bs=bs, quantized=True)
+    q = jnp.asarray(rng.normal(size=(1, c, h, d)), jnp.float32)
+    bt = jnp.asarray([2, 4, 1], jnp.int32)
+    kw = dict(q_offset=jnp.int32(bs - 3), length=jnp.int32(c),
+              k_scales=ks, v_scales=vs)
+    want = ref.paged_prefill_attention(q, kp, vp, bt, **kw)
+    got = pf.paged_prefill_attention(q, kp, vp, bt, interpret=True, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    ref_p = ref.paged_prefill_attention_partial(q, kp, vp, bt, **kw)
+    ker_p = pf.paged_prefill_attention_partial(q, kp, vp, bt,
+                                               interpret=True, **kw)
+    for a, b in zip(ref_p, ker_p):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_paged_decode_kblock_skip_null(rng):
+    """Foreign (zero) table entries still skip ALL their K-subtiles, and
+    combining both shards' partials matches the unsharded oracle."""
+    b, h, d, kvh, bs = 1, 4, 16, 2, 128
+    kp, vp, _, _ = _paged_case(rng, bs=bs)
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    bt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    lens = jnp.asarray([4 * bs - 9], jnp.int32)
+    want = ref.paged_decode_attention(q, kp, vp, bt, lengths=lens)
+    # shard-local views: each shard zeroes the other's entries
+    bt_a = jnp.asarray([[1, 0, 3, 0]], jnp.int32)
+    bt_b = jnp.asarray([[0, 2, 0, 4]], jnp.int32)
+    pa = da.paged_decode_attention_partial(q, kp, vp, bt_a, lengths=lens,
+                                           skip_null=True, interpret=True)
+    pb = da.paged_decode_attention_partial(q, kp, vp, bt_b, lengths=lens,
+                                           skip_null=True, interpret=True)
+    acc, m, l = ref.combine_partials(pa, pb)
+    got = acc / np.maximum(np.asarray(l)[..., None], 1e-30)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

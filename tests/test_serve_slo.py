@@ -155,6 +155,83 @@ def test_admission_is_class_then_age_ordered(setup):
     assert order == [rids[1], rids[3], rids[0], rids[2]]
 
 
+def test_drr_batch_never_starved_under_interactive_backlog(setup):
+    """Deficit-weighted round-robin: with default weights 8:1, a 1-slot
+    engine facing 12 queued interactive requests and one batch request
+    admits the batch request after exactly 8 interactive ones — strict
+    class-then-age would have started it dead last."""
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, max_seq=64, slots=1, block_size=8,
+                      prefill_buckets=(16, 64))
+    int_rids = [eng.submit(list(range(1 + i, 9 + i)), max_new_tokens=2)
+                for i in range(12)]
+    bat = eng.submit(list(range(2, 10)), max_new_tokens=2,
+                     priority="batch")
+    done = {r.rid: r for r in eng.run_until_drained(max_ticks=400)}
+    order = sorted(int_rids + [bat],
+                   key=lambda rid: done[rid].first_tick)
+    assert order.index(bat) == 8
+    # and FIFO holds within the interactive class
+    started = [r for r in order if r != bat]
+    assert started == int_rids
+
+
+def test_drr_converges_to_weight_ratio(setup):
+    """Sustained backlog in both classes: admitted-class counts track the
+    configured weight ratio (2:1 here), not strict priority."""
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, max_seq=64, slots=1, block_size=8,
+                      prefill_buckets=(16, 64),
+                      class_weights={"interactive": 2.0, "batch": 1.0})
+    rids = {}
+    for i in range(6):
+        rids[eng.submit(list(range(1 + i, 9 + i)), max_new_tokens=2)] = "i"
+    for i in range(6):
+        rids[eng.submit(list(range(2 + i, 10 + i)), max_new_tokens=2,
+                        priority="batch")] = "b"
+    done = {r.rid: r for r in eng.run_until_drained(max_ticks=400)}
+    order = [rids[rid] for rid in
+             sorted(rids, key=lambda rid: done[rid].first_tick)]
+    # 2:1 DRR: i i b, repeating until the interactive queue drains
+    assert order[:9] == ["i", "i", "b"] * 3
+
+
+# ---------------------------------------------------------------------------
+# SLO-violation accounting
+# ---------------------------------------------------------------------------
+
+def test_slo_violation_per_request_deadline(setup):
+    """deadline_ms=0 always misses (wall clock is > 0 at finish);
+    a generous deadline never does."""
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, **_KW)
+    eng.submit(list(range(1, 9)), max_new_tokens=2, deadline_ms=0.0)
+    eng.submit(list(range(2, 10)), max_new_tokens=2, deadline_ms=1e9)
+    eng.run_until_drained(max_ticks=100)
+    assert eng.stats["slo_violations"] == 1
+    assert eng.class_stats["interactive"]["slo_violations"] == 1
+
+
+def test_slo_class_deadlines_and_override(setup):
+    """class_deadlines_ms supplies the default; a per-request deadline_ms
+    overrides it (here: rescues a request from an impossible class
+    deadline); classes without a deadline never count."""
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, **_KW,
+                      class_deadlines_ms={"batch": 0.0})
+    eng.submit(list(range(1, 9)), max_new_tokens=2, priority="batch")
+    eng.submit(list(range(2, 10)), max_new_tokens=2, priority="batch",
+               deadline_ms=1e9)
+    eng.submit(list(range(3, 11)), max_new_tokens=2)  # interactive: no SLO
+    eng.run_until_drained(max_ticks=100)
+    assert eng.stats["slo_violations"] == 1
+    assert eng.class_stats["batch"]["slo_violations"] == 1
+    assert eng.class_stats["interactive"]["slo_violations"] == 0
+    with pytest.raises(ValueError, match="unknown classes"):
+        ServeEngine(cfg, params, **_KW,
+                    class_deadlines_ms={"realtime": 5.0})
+
+
 # ---------------------------------------------------------------------------
 # proactive preemption
 # ---------------------------------------------------------------------------

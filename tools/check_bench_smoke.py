@@ -12,7 +12,12 @@ the 4-way sequence-sharded artifact (token identity vs 1 shard, NoC
 traffic, sharded preemption).  Both lanes gate the quantized capacity
 leg when the artifact carries one — int8 pages must buy >= 2x the
 concurrent sequences of fp16 on the same byte budget, with the fp16
-path token-identical and the int8 greedy logits boundedly divergent.
+path token-identical and the int8 greedy logits boundedly divergent —
+and the prefill/decode disaggregation leg when present: token-identical
+outputs across the handoff, one handoff per request, a decode-worker
+TPOT p99 win over the equal-budget monolithic engine, and a
+self-consistent CXL handoff ledger.  Artifacts from before a leg
+existed skip that leg's gates cleanly.
 
 Exit 0 when every gate holds; any failed assertion exits non-zero with
 the offending values in the message.
@@ -85,6 +90,36 @@ def check_moe_skew(r: dict) -> None:
           "modeled speedup:", f"{ms['speedup_model']:.2f}")
 
 
+def check_disagg(r: dict) -> None:
+    """Prefill/decode disaggregation leg: token identity across the
+    handoff, every request handed off exactly once, the decode-worker
+    TPOT p99 win, and a self-consistent CXL handoff ledger."""
+    d = r.get("disagg")
+    if d is None:
+        print("disagg: leg missing from artifact; skipping")
+        return
+    assert d["leg"] == "disagg", d
+    assert d["outputs_match"], "disagg: tokens diverged across the handoff"
+    h = d["handoff"]
+    want = r.get("config", {}).get("n_requests")
+    if want is not None:
+        assert h["handoffs"] == want, (
+            f"disagg: {h['handoffs']} handoffs for {want} requests")
+    assert d["tpot_p99_gain"] > 1.0, (
+        f"disagg: decode-worker TPOT p99 gain {d['tpot_p99_gain']:.2f} "
+        f"<= 1.0 (split did not beat monolithic at equal budget)")
+    assert d["disagg"]["tpot_p99_ms"] < d["mono"]["tpot_p99_ms"], d
+    # ledger self-consistency: pages moved, bytes and energy priced, one
+    # hop per handoff at minimum
+    assert h["handoff_pages"] > 0 and h["handoff_bytes"] > 0, h
+    assert h["handoff_energy_pj"] > 0 and h["handoff_seconds"] > 0, h
+    assert h["handoff_hops"] >= h["handoffs"], h
+    print("disagg decode-worker tpot p99 (ms) mono -> split:",
+          d["mono"]["tpot_p99_ms"], "->", d["disagg"]["tpot_p99_ms"],
+          f"(gain {d['tpot_p99_gain']:.2f}), handoffs:", h["handoffs"],
+          "link MB:", round(h["handoff_bytes"] / 1e6, 3))
+
+
 def check_full(r: dict) -> None:
     """Single-device smoke lane (tier1 matrix, deps=full)."""
     assert r["mixed"]["outputs_match"], "paged != dense tokens"
@@ -124,6 +159,7 @@ def check_full(r: dict) -> None:
                 "goodput_tok_s"] > 0, (proc, cls)
         print(f"traffic/{proc} interactive p99 ttft ticks:",
               base["ttft_p99_ticks"], "->", pro["ttft_p99_ticks"])
+    check_disagg(r)
     check_moe_skew(r)
     check_capacity(r)
 
@@ -141,6 +177,7 @@ def check_sharded(r: dict) -> None:
     assert ps["recompute"]["preemptions"] >= 1, ps
     print("sharded preemption outputs_match, restored ratios:",
           ps["swap"]["restored_ratio"], ps["recompute"]["restored_ratio"])
+    check_disagg(r)
     check_moe_skew(r)
     check_capacity(r)
 

@@ -76,6 +76,13 @@ def main() -> int:
         # under zipf-skewed routing — skips on older artifacts
         ("moe-skew placement-aware tok/s",
          ("moe_skew", "placement", "tok_s"), True),
+        # disaggregation leg: the decode-worker TPOT p99 (wall ms on the
+        # decode role's private clock) must not creep back up, and the
+        # split's advantage over the equal-budget monolithic engine must
+        # hold — skips on artifacts that predate the leg
+        ("disagg decode-worker TPOT p99 ms",
+         ("disagg", "disagg", "tpot_p99_ms"), False),
+        ("disagg decode TPOT p99 gain", ("disagg", "tpot_p99_gain"), True),
     ]
     failures = []
     for name, path, up in metrics:
